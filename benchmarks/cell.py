@@ -1,0 +1,57 @@
+"""One benchmark cell in an isolated process (jit caches, copier threads
+and GIL state never leak across cells). Reads a JSON config from argv[1],
+prints a JSON report on stdout."""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def run(spec):
+    import numpy as np
+
+    from repro.kvstore import KVEngine, KVStore, Workload
+
+    store = KVStore(
+        capacity=int(spec["size_mb"] * (1 << 20) / (4 * spec.get("row_width", 256))),
+        row_width=spec.get("row_width", 256),
+        block_rows=spec.get("block_rows", 256),
+        seed=0,
+    )
+    eng = KVEngine(
+        store,
+        mode=spec["mode"],
+        copier_threads=spec.get("threads", 8),
+        persist_bandwidth=spec.get("persist_bw", 50e6),
+        copier_duty=spec.get("duty", 0.3 / 8),
+    )
+    wl = Workload(
+        rate_qps=spec.get("qps", 400),
+        set_ratio=spec.get("set_ratio", 1.0),
+        pattern=spec.get("pattern", "uniform"),
+        batch=spec.get("batch", 16),
+        clients=spec.get("clients", 50),
+        seed=spec.get("seed", 1),
+    )
+    rep = eng.run(
+        wl,
+        duration_s=spec.get("duration", 6.0),
+        bgsave_at=tuple(spec.get("bgsave_at", [0.15])),
+    )
+    out = rep.summary()
+    out["instance_mb"] = spec["size_mb"]
+    out["mode"] = spec["mode"]
+    # per-snapshot detail for Fig 11 histograms
+    snaps = eng._snaps
+    out["histograms"] = [s.metrics.histogram_us() for s in snaps]
+    out["throughput_qps_50ms"] = (rep.throughput_buckets / 0.05).tolist()[:400]
+    return out
+
+
+def main():
+    spec = json.loads(sys.argv[1])
+    print(json.dumps(run(spec)))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Subprocess driver for benchmark cells + tiny result cache."""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import subprocess
+import sys
+from typing import Dict
+
+CACHE_DIR = os.environ.get("REPRO_BENCH_CACHE", "results/bench_cache")
+
+
+def run_cell(spec: Dict, timeout: int = 300) -> Dict:
+    os.makedirs(CACHE_DIR, exist_ok=True)
+    key = hashlib.sha1(json.dumps(spec, sort_keys=True).encode()).hexdigest()[:16]
+    path = os.path.join(CACHE_DIR, key + ".json")
+    if os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    p = subprocess.run(
+        [sys.executable, "-m", "benchmarks.cell", json.dumps(spec)],
+        capture_output=True, text=True, timeout=timeout, env=env,
+    )
+    if p.returncode != 0:
+        raise RuntimeError(f"bench cell failed: {spec}\n{p.stderr[-2000:]}")
+    out = json.loads(p.stdout.strip().splitlines()[-1])
+    with open(path, "w") as f:
+        json.dump(out, f)
+    return out

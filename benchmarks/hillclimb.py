@@ -1,0 +1,73 @@
+"""§Perf hillclimb driver: re-lower the three chosen cells with each
+optimization flag set, writing results to results/dryrun_opt/<tag>/.
+
+Usage: PYTHONPATH=src python -m benchmarks.hillclimb
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+CELLS = [
+    # (arch, shape, mesh) — chosen per EXPERIMENTS.md §Perf
+    ("xlstm-1.3b", "train_4k", "single"),          # worst roofline fraction
+    ("deepseek-67b", "train_4k", "single"),        # most collective-bound
+    ("qwen3-moe-30b-a3b", "train_4k", "single"),   # paper-representative
+]
+
+# iteration tag -> REPRO_PERF_OPT value (cumulative where it makes sense)
+ITERATIONS = [
+    ("it1_ssm_chunk", "ssm_chunk"),
+    ("it2_batch_shard", "ssm_chunk,batch_shard"),
+    ("it3_attn_flat", "attn_flat"),
+    ("it4_pv_bf16", "attn_flat,pv_bf16"),
+    ("it5_all", "attn_flat,pv_bf16,ssm_chunk,batch_shard"),
+]
+
+
+def run(cell, tag, flags, out_root="results/dryrun_opt"):
+    arch, shape, mesh = cell
+    out_dir = os.path.join(out_root, tag)
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"{arch}__{shape}__{mesh}.json")
+    if os.path.exists(path):
+        return
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env["REPRO_PERF_OPT"] = flags
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape, "--mesh", mesh, "--json", path]
+    print(f"[hillclimb] {tag}: {arch} x {shape} x {mesh} "
+          f"(REPRO_PERF_OPT={flags})", flush=True)
+    p = subprocess.run(cmd, capture_output=True, text=True, timeout=2400,
+                       env=env)
+    if p.returncode != 0:
+        with open(path, "w") as f:
+            json.dump({"arch": arch, "shape": shape, "mesh": mesh,
+                       "status": "error", "stderr": p.stderr[-3000:]}, f)
+        print(f"  ERROR: {p.stderr[-500:]}", flush=True)
+    else:
+        print("  " + (p.stdout.strip().splitlines()[-1] if p.stdout else ""),
+              flush=True)
+
+
+def main():
+    # ssm iterations only matter for xlstm; attention ones for the others
+    plan = {
+        ("xlstm-1.3b", "train_4k", "single"): ["it1_ssm_chunk",
+                                               "it2_batch_shard", "it5_all"],
+        ("deepseek-67b", "train_4k", "single"): ["it3_attn_flat",
+                                                 "it4_pv_bf16", "it5_all"],
+        ("qwen3-moe-30b-a3b", "train_4k", "single"): ["it3_attn_flat",
+                                                      "it4_pv_bf16", "it5_all"],
+    }
+    flag_of = dict(ITERATIONS)
+    for cell, tags in plan.items():
+        for tag in tags:
+            run(cell, tag, flag_of[tag])
+
+
+if __name__ == "__main__":
+    main()

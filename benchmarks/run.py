@@ -1,0 +1,229 @@
+"""Benchmark suite — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (us_per_call = the headline
+latency of the row in microseconds; derived = the figure's other numbers).
+
+Instance sizes are scaled to this CPU container (32–256 MiB vs the paper's
+1–64 GiB); the claims under test are the paper's *shapes*: linear fork-cost
+growth, interruption counts, out-of-service time, and the DEF > ODF >
+Async-fork latency ordering on snapshot queries.
+"""
+from __future__ import annotations
+
+import sys
+
+import numpy as np
+
+from benchmarks.harness import run_cell
+
+SIZES_MB = [32, 64, 128, 256]
+MODES = ["blocking", "cow", "asyncfork"]
+FAST = "--full" not in sys.argv
+
+
+def _row(name: str, us: float, derived: str) -> None:
+    print(f"{name},{us:.1f},{derived}")
+
+
+def fig3_fork_time_vs_size():
+    """Fig 3: default-fork execution time grows linearly with instance
+    size (the page-table/block copy dominates)."""
+    for mb in SIZES_MB:
+        r = run_cell({"mode": "blocking", "size_mb": mb, "duration": 5.0})
+        _row(f"fig3_fork_time/{mb}MB", r["fork_ms"] * 1e3,
+             f"copy_share=1.0;size_mb={mb}")
+
+
+def fig22_fork_call_duration():
+    """Fig 22: Async-fork and ODF return from fork() in O(metadata)."""
+    for mode in MODES:
+        r = run_cell({"mode": mode, "size_mb": 256, "duration": 6.0})
+        _row(f"fig22_fork_call/{mode}", r["fork_ms"] * 1e3,
+             f"size_mb=256")
+
+
+def fig4_5_default_fork_latency():
+    """Figs 4/5: p99 + max latency of normal vs snapshot queries, DEF."""
+    for mb in SIZES_MB:
+        r = run_cell({"mode": "blocking", "size_mb": mb, "duration": 6.0})
+        _row(f"fig4_p99/blocking/{mb}MB", r["snap_p99_ms"] * 1e3,
+             f"normal_p99_us={r['normal_p99_ms']*1e3:.0f}")
+        _row(f"fig5_max/blocking/{mb}MB", r["snap_max_ms"] * 1e3,
+             f"normal_max_us={r['normal_max_ms']*1e3:.0f}")
+
+
+def fig9_10_odf_vs_asyncfork():
+    """Figs 9/10: snapshot-query p99/max, ODF (cow) vs Async-fork."""
+    for mb in SIZES_MB:
+        rows = {}
+        for mode in ("cow", "asyncfork"):
+            rows[mode] = run_cell({"mode": mode, "size_mb": mb, "duration": 6.0})
+        for mode in ("cow", "asyncfork"):
+            r = rows[mode]
+            _row(f"fig9_p99/{mode}/{mb}MB", r["snap_p99_ms"] * 1e3,
+                 f"max_us={r['snap_max_ms']*1e3:.0f}")
+        red = 100 * (1 - rows["asyncfork"]["snap_max_ms"] /
+                     max(1e-9, rows["cow"]["snap_max_ms"]))
+        _row(f"fig10_max_reduction/{mb}MB", rows["asyncfork"]["snap_max_ms"] * 1e3,
+             f"vs_cow_pct={red:.1f}")
+
+
+def fig11_20_interruptions():
+    """Fig 11 (interruption counts) + Fig 20 (out-of-service time)."""
+    for mb in ([64, 256] if FAST else SIZES_MB):
+        for mode in ("cow", "asyncfork"):
+            r = run_cell({"mode": mode, "size_mb": mb, "duration": 6.0})
+            hist = r["histograms"][0] if r["histograms"] else {}
+            _row(f"fig11_interruptions/{mode}/{mb}MB", r["interruptions"],
+                 "hist=" + "|".join(f"{k}:{v}" for k, v in sorted(hist.items())))
+            _row(f"fig20_out_of_service/{mode}/{mb}MB",
+                 r["out_of_service_ms"] * 1e3, f"size_mb={mb}")
+
+
+def fig12_read_write_patterns():
+    """Fig 12: SET:GET mixes x uniform/gaussian access patterns."""
+    for name, set_ratio, pattern in [
+        ("1:1_uni", 0.5, "uniform"), ("1:1_gau", 0.5, "gaussian"),
+        ("1:10_uni", 1 / 11, "uniform"), ("1:10_gau", 1 / 11, "gaussian"),
+    ]:
+        for mode in ("cow", "asyncfork"):
+            r = run_cell({"mode": mode, "size_mb": 128, "duration": 6.0,
+                          "set_ratio": set_ratio, "pattern": pattern})
+            _row(f"fig12_patterns/{name}/{mode}", r["snap_p99_ms"] * 1e3,
+                 f"max_us={r['snap_max_ms']*1e3:.0f};intr={r['interruptions']:.0f}")
+
+
+def fig13_clients():
+    """Fig 13: more open-loop clients -> burstier writes -> longer stalls."""
+    for clients in [10, 50, 100, 500]:
+        for mode in ("cow", "asyncfork"):
+            r = run_cell({"mode": mode, "size_mb": 128, "duration": 6.0,
+                          "clients": clients})
+            _row(f"fig13_clients/{clients}/{mode}", r["snap_p99_ms"] * 1e3,
+                 f"max_us={r['snap_max_ms']*1e3:.0f}")
+
+
+def fig14_15_copier_threads():
+    """Figs 14/15: child-side copier parallelism shortens the copy window
+    and with it the interruption exposure."""
+    for threads in [1, 2, 4, 8]:
+        r = run_cell({"mode": "asyncfork", "size_mb": 128, "duration": 6.0,
+                      "threads": threads, "duty": 0.3 / 8})
+        _row(f"fig15_copy_window/threads{threads}", r["copy_window_ms"] * 1e3,
+             f"snap_max_us={r['snap_max_ms']*1e3:.0f};intr={r['interruptions']:.0f}")
+
+
+def fig17_19_throughput():
+    """Figs 17-19: minimum 50ms-bucket throughput during the snapshot."""
+    for mode in MODES:
+        r = run_cell({"mode": mode, "size_mb": 128, "duration": 6.0,
+                      "qps": 400})
+        _row(f"fig19_min_tput/{mode}", r["min_tput_qps"],
+             f"qps_floor={r['min_tput_qps']:.0f}")
+
+
+def train_checkpoint_stall():
+    """Framework integration: save-stall of blocking vs async-fork
+    checkpointing inside a live (donating) training loop."""
+    import json
+    import subprocess
+
+    code = r"""
+import time, json, jax, jax.numpy as jnp, numpy as np, tempfile, os, dataclasses
+from repro.configs import get_config
+from repro.models import build_model
+from repro.runtime.steps import make_train_step, init_train_state
+from repro.checkpoint import TrainSnapshotManager
+cfg = dataclasses.replace(get_config("phi3-mini-3.8b").reduced(),
+                          n_layers=4, d_model=512, d_ff=1024, vocab=2048)
+model = build_model(cfg)
+params, opt = init_train_state(model, jax.random.PRNGKey(0))
+fn = make_train_step(model)
+donating = jax.jit(fn, donate_argnums=(0, 1))
+nondonating = jax.jit(fn)
+batch = {"tokens": np.random.randint(0, cfg.vocab, (8, 129)).astype(np.int32)}
+_ = nondonating(params, opt, batch); jax.block_until_ready(_)
+out = {}
+with tempfile.TemporaryDirectory() as d:
+    for mode in ("blocking", "asyncfork"):
+        mgr = TrainSnapshotManager(os.path.join(d, mode), mode=mode, copier_threads=2)
+        p = jax.tree_util.tree_map(lambda x: jnp.array(x, copy=True), params)
+        o = jax.tree_util.tree_map(lambda x: jnp.array(x, copy=True), opt)
+        times = []
+        for step in range(10):
+            t0 = time.perf_counter()
+            if step == 3:
+                mgr.save(step, p, o)
+            f = nondonating if mgr.snapshot_active() else donating
+            p, o, loss = f(p, o, batch)
+            jax.block_until_ready(loss)
+            times.append(time.perf_counter() - t0)
+        mgr.wait_all()
+        s = mgr.summary()
+        out[mode] = {"stall_ms": s["save_stall_ms_max"],
+                     "step_ms": float(np.median(times) * 1e3)}
+print(json.dumps(out))
+"""
+    import os
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    p = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=600, env=env)
+    if p.returncode != 0:
+        raise RuntimeError(p.stderr[-2000:])
+    out = json.loads(p.stdout.strip().splitlines()[-1])
+    for mode, r in out.items():
+        _row(f"train_ckpt_stall/{mode}", r["stall_ms"] * 1e3,
+             f"median_step_us={r['step_ms']*1e3:.0f}")
+
+
+def kernel_snapcopy_bandwidth():
+    """Micro: masked block copy kernel (interpret mode) vs oracle runtime
+    + dirty-block incremental persist savings."""
+    import time
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.ops import dirty_blocks, masked_block_copy
+    from repro.kernels.ref import snapcopy_ref
+
+    src = jax.random.normal(jax.random.PRNGKey(0), (64, 4096), jnp.float32)
+    dst = jnp.zeros_like(src)
+    flags = jnp.zeros((64,), jnp.int32).at[::2].set(2)
+    out, nf = masked_block_copy(src, dst, flags)  # compile
+    t0 = time.perf_counter()
+    for _ in range(10):
+        out, nf = masked_block_copy(src, dst, flags)
+    jax.block_until_ready(out)
+    us = (time.perf_counter() - t0) / 10 * 1e6
+    _row("kernel_snapcopy/64x4096xf32", us, "interpret=True;skip_half=True")
+
+    new = src.at[3, 7].add(1.0)
+    d = dirty_blocks(src, new)
+    t0 = time.perf_counter()
+    for _ in range(10):
+        d = dirty_blocks(src, new)
+    jax.block_until_ready(d)
+    us = (time.perf_counter() - t0) / 10 * 1e6
+    _row("kernel_dirty/64x4096xf32", us,
+         f"dirty_blocks={int(d.sum())};persist_savings_pct={100*(1-float(d.mean())):.1f}")
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    fig3_fork_time_vs_size()
+    fig22_fork_call_duration()
+    fig4_5_default_fork_latency()
+    fig9_10_odf_vs_asyncfork()
+    fig11_20_interruptions()
+    fig12_read_write_patterns()
+    fig13_clients()
+    fig14_15_copier_threads()
+    fig17_19_throughput()
+    train_checkpoint_stall()
+    kernel_snapcopy_bandwidth()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""The paper's scenario end-to-end: a Redis-like JAX KV store serving an
+open-loop query stream while BGSAVE snapshots fire, for all three fork
+implementations. Prints the per-mode latency/interruption table
+(paper Figs 4/5/9/10/11/20 in one run).
+
+Run:  PYTHONPATH=src python examples/kvserve.py [--size-mb 128]
+"""
+import argparse
+
+from repro.kvstore import KVEngine, KVStore, Workload
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--size-mb", type=int, default=128)
+    ap.add_argument("--qps", type=float, default=400)
+    ap.add_argument("--duration", type=float, default=6.0)
+    args = ap.parse_args()
+
+    print(f"{'mode':10s} {'fork_ms':>8s} {'snap_p99':>9s} {'snap_max':>9s} "
+          f"{'norm_p99':>9s} {'intr':>5s} {'oos_ms':>8s} {'min_tput':>8s}")
+    for mode in ("blocking", "cow", "asyncfork"):
+        store = KVStore(
+            capacity=args.size_mb * (1 << 20) // (4 * 256),
+            row_width=256, block_rows=256, seed=0,
+        )
+        eng = KVEngine(store, mode=mode, copier_threads=8,
+                       persist_bandwidth=50e6, copier_duty=0.3 / 8)
+        wl = Workload(rate_qps=args.qps, set_ratio=1.0, batch=16, seed=1)
+        rep = eng.run(wl, duration_s=args.duration, bgsave_at=(0.15,))
+        s = rep.summary()
+        print(f"{mode:10s} {s['fork_ms']:8.2f} {s['snap_p99_ms']:9.2f} "
+              f"{s['snap_max_ms']:9.2f} {s['normal_p99_ms']:9.2f} "
+              f"{s['interruptions']:5.0f} {s['out_of_service_ms']:8.1f} "
+              f"{s['min_tput_qps']:8.0f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Quickstart: the Async-fork snapshot substrate in 40 lines.
+
+Takes a consistent point-in-time snapshot of live JAX state while the
+"engine" keeps destroying (donating) buffers — the exact hazard that makes
+naive snapshots either blocking or inconsistent.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import AsyncForkSnapshotter, BlockingSnapshotter, PyTreeProvider
+
+# the engine's in-memory state: any pytree of arrays
+state = {
+    "table": jnp.arange(512 * 1024, dtype=jnp.float32).reshape(512, 1024),
+    "meta": jnp.ones((64, 64), jnp.float32),
+}
+provider = PyTreeProvider(state)
+t0_table = np.asarray(provider.leaf(1)).copy()  # ground truth at fork time
+
+# ---- Async-fork: O(metadata) fork + background copiers ----------------- #
+snapper = AsyncForkSnapshotter(provider, block_bytes=64 << 10, copier_threads=4)
+snap = snapper.fork()
+print(f"fork() returned in {snap.metrics.fork_s*1e3:.2f} ms "
+      f"({snap.table.n_blocks} blocks protected)")
+
+# engine keeps serving: donated writes that DESTROY the old buffers.
+for step in range(16):
+    rows = list(range(step * 8, step * 8 + 8))
+    snapper.before_write(1, rows)          # proactive synchronization (§4.2)
+    old = provider.leaf(1)
+    provider.update_leaf(1, old.at[np.asarray(rows)].set(-1.0), delete_old=True)
+
+snap.wait()
+tree = snap.to_tree()
+assert np.array_equal(np.asarray(tree["table"]), t0_table), "snapshot drifted!"
+print(f"snapshot consistent: child copied {snap.metrics.copied_blocks_child} "
+      f"blocks, parent proactively copied {snap.metrics.copied_blocks_parent}, "
+      f"{snap.metrics.n_interruptions} interruptions "
+      f"({snap.metrics.out_of_service_s*1e3:.2f} ms out-of-service)")
+
+# ---- versus default fork (blocking) ------------------------------------ #
+provider2 = PyTreeProvider({"table": jnp.ones((512, 1024), jnp.float32)})
+blocking = BlockingSnapshotter(provider2, block_bytes=64 << 10)
+s2 = blocking.fork()
+print(f"default fork blocked the engine for {s2.metrics.fork_s*1e3:.2f} ms "
+      f"(vs {snap.metrics.fork_s*1e3:.2f} ms async)")

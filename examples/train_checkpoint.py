@@ -1,0 +1,98 @@
+"""End-to-end driver: train a ~100M-param LM for a few hundred steps with
+periodic Async-fork checkpoints, then restore and verify.
+
+The training loop DONATES (params, opt) every step — the pre-step buffers
+die at every boundary. The checkpoint manager protects the fork-time state
+exactly the way the paper's Async-fork protects the page table: O(metadata)
+save, background copiers, non-donating steps only while the copy window is
+open, progressive per-leaf release.
+
+Run:  PYTHONPATH=src python examples/train_checkpoint.py [--steps 200]
+"""
+import argparse
+import dataclasses
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import TrainSnapshotManager, restore_checkpoint
+from repro.configs import get_config
+from repro.data.pipeline import SyntheticPipeline
+from repro.configs.base import ShapeCfg
+from repro.models import build_model
+from repro.runtime.steps import init_train_state, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--save-every", type=int, default=50)
+    ap.add_argument("--mode", default="asyncfork", choices=["blocking", "asyncfork"])
+    ap.add_argument("--out", default="results/ckpts")
+    args = ap.parse_args()
+
+    # ~100M params: phi3-mini family at reduced width
+    cfg = dataclasses.replace(
+        get_config("phi3-mini-3.8b"),
+        n_layers=8, d_model=768, n_heads=12, n_kv_heads=12,
+        head_dim=64, d_ff=2048, vocab=8192,
+    )
+    model = build_model(cfg)
+    params, opt = init_train_state(model, jax.random.PRNGKey(0))
+    n_params = sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(params))
+    print(f"model: {n_params/1e6:.1f}M params "
+          f"({sum(x.nbytes for x in jax.tree_util.tree_leaves(params))/1e6:.0f} MB "
+          f"+ optimizer)")
+
+    # batch sized for the single-core container; scale up on real hosts
+    shape = ShapeCfg("local", seq_len=128, global_batch=4, kind="train")
+    pipe = SyntheticPipeline(cfg, shape, seed=0)
+    data = iter(pipe)
+
+    fn = make_train_step(model, peak_lr=1e-3)
+    donating = jax.jit(fn, donate_argnums=(0, 1))
+    nondonating = jax.jit(fn)
+    mgr = TrainSnapshotManager(args.out, mode=args.mode, copier_threads=4)
+
+    losses, step_t = [], []
+    for step in range(args.steps):
+        batch = next(data)
+        t0 = time.perf_counter()
+        if step and step % args.save_every == 0:
+            snap = mgr.save(step, params, opt)
+            print(f"  step {step}: save() stalled "
+                  f"{mgr.stall_log[-1][1]*1e3:.2f} ms ({args.mode})")
+        step_fn = nondonating if mgr.snapshot_active() else donating
+        params, opt, loss = step_fn(params, opt, batch)
+        loss.block_until_ready()
+        step_t.append(time.perf_counter() - t0)
+        losses.append(float(loss))
+        if step % 20 == 0:
+            print(f"step {step:4d} loss {losses[-1]:.4f} "
+                  f"({np.mean(step_t[-20:])*1e3:.0f} ms/step)")
+    pipe.close()
+    mgr.wait_all()
+    print(f"final loss {losses[-1]:.4f} (from {losses[0]:.4f}); "
+          f"p99 step {np.percentile(step_t, 99)*1e3:.0f} ms")
+
+    # restore the last checkpoint and verify round trip
+    last = sorted(os.listdir(args.out))[-1]
+    rparams, ropt = restore_checkpoint(os.path.join(args.out, last))
+    r_leaves = jax.tree_util.tree_leaves(rparams)
+    print(f"restored {last}: {len(r_leaves)} param leaves, "
+          f"opt step {int(np.asarray(ropt.step))}")
+    # elastic restart: device_put with any mesh works because the
+    # checkpoint stores full (unsharded) arrays
+    restored_loss = model.loss(
+        jax.tree_util.tree_map(jnp.asarray, rparams), next(iter(
+            SyntheticPipeline(cfg, shape, seed=0)))
+    )
+    print(f"restored model loss {float(restored_loss):.4f} (finite: "
+          f"{bool(jnp.isfinite(restored_loss))})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.checkpoint.manager import TrainSnapshotManager, restore_checkpoint
+
+__all__ = ["TrainSnapshotManager", "restore_checkpoint"]

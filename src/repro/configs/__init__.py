@@ -1,0 +1,41 @@
+"""Architecture registry: ``--arch <id>`` resolves here."""
+from repro.configs.base import ArchConfig, ShapeCfg, SHAPES
+
+from repro.configs.qwen3_moe_30b_a3b import CONFIG as _qwen3_moe
+from repro.configs.deepseek_v2_lite_16b import CONFIG as _dsv2_lite
+from repro.configs.deepseek_67b import CONFIG as _ds67
+from repro.configs.phi3_medium_14b import CONFIG as _phi3_med
+from repro.configs.mistral_large_123b import CONFIG as _mistral_large
+from repro.configs.phi3_mini_3_8b import CONFIG as _phi3_mini
+from repro.configs.xlstm_1_3b import CONFIG as _xlstm
+from repro.configs.qwen2_vl_7b import CONFIG as _qwen2_vl
+from repro.configs.zamba2_2_7b import CONFIG as _zamba2
+from repro.configs.whisper_medium import CONFIG as _whisper
+
+REGISTRY = {
+    c.arch_id: c
+    for c in [
+        _qwen3_moe,
+        _dsv2_lite,
+        _ds67,
+        _phi3_med,
+        _mistral_large,
+        _phi3_mini,
+        _xlstm,
+        _qwen2_vl,
+        _zamba2,
+        _whisper,
+    ]
+}
+
+ARCH_IDS = sorted(REGISTRY)
+
+
+def get_config(arch_id: str) -> ArchConfig:
+    try:
+        return REGISTRY[arch_id]
+    except KeyError:
+        raise KeyError(f"unknown arch {arch_id!r}; available: {ARCH_IDS}")
+
+
+__all__ = ["ArchConfig", "ShapeCfg", "SHAPES", "REGISTRY", "ARCH_IDS", "get_config"]

@@ -1,0 +1,168 @@
+"""Architecture config schema for the assigned 10-arch pool.
+
+Every architecture in the pool is expressed as one ``ArchConfig`` (exact
+figures from the assignment table); ``reduced()`` derives the CPU smoke
+config of the same family. Input shapes are global (pre-sharding).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+
+def pad_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCfg:
+    """One assigned input-shape cell."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeCfg] = {
+    "train_4k": ShapeCfg("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeCfg("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeCfg("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeCfg("long_500k", 524_288, 1, "decode"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    arch_id: str
+    family: str                 # dense | moe | ssm | vlm | hybrid | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None          # default d_model // n_heads
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared_experts: int = 0
+    d_ff_expert: int = 0
+    moe_capacity_factor: float = 1.25
+    first_dense_layers: int = 0             # deepseek: layer 0 is dense
+    # --- MLA (deepseek) ---
+    kv_lora_rank: int = 0
+    q_lora_rank: int = 0
+    rope_head_dim: int = 64
+    v_head_dim: int = 0
+    # --- SSM / hybrid ---
+    ssm_state: int = 0
+    shared_attn_every: int = 0              # zamba2: shared attn block period
+    # --- enc-dec (whisper) ---
+    encoder_layers: int = 0
+    # --- misc ---
+    rope_theta: float = 1e6
+    mrope: bool = False                     # qwen2-vl M-RoPE
+    tie_embeddings: bool = False
+    dtype: str = "bfloat16"
+    # long-context applicability: sub-quadratic archs only
+    subquadratic: bool = False
+    # dry-run probes: unroll the layer scan so XLA's cost analysis (which
+    # counts a while-loop body once) sees every layer
+    unroll_layers: bool = False
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def vocab_padded(self) -> int:
+        """Vocab padded to a multiple of 256 so it shards over 16-way TP."""
+        return pad_to(self.vocab, 256)
+
+    def supports(self, shape: ShapeCfg) -> Tuple[bool, str]:
+        """Which assigned shapes this arch runs (skips documented in
+        DESIGN.md §Arch-applicability)."""
+        if shape.name == "long_500k" and not self.subquadratic:
+            return False, "full attention is O(S^2); 512k decode needs sub-quadratic arch"
+        return True, ""
+
+    # ------------------------------------------------------------------ #
+    def reduced(self) -> "ArchConfig":
+        """Same family, laptop scale: for per-arch CPU smoke tests."""
+        return dataclasses.replace(
+            self,
+            n_layers=min(self.n_layers, 2),
+            d_model=64,
+            n_heads=4,
+            n_kv_heads=min(self.n_kv_heads, 2) if self.n_kv_heads < self.n_heads else 4,
+            head_dim=16,
+            d_ff=128 if self.d_ff else 0,
+            vocab=512,
+            n_experts=min(self.n_experts, 8),
+            top_k=min(self.top_k, 2),
+            n_shared_experts=min(self.n_shared_experts, 1),
+            d_ff_expert=32 if self.d_ff_expert else 0,
+            kv_lora_rank=32 if self.kv_lora_rank else 0,
+            q_lora_rank=0,
+            rope_head_dim=8 if self.kv_lora_rank else self.rope_head_dim,
+            v_head_dim=16 if self.v_head_dim else 0,
+            ssm_state=16 if self.ssm_state else 0,
+            shared_attn_every=2 if self.shared_attn_every else 0,
+            encoder_layers=min(self.encoder_layers, 2),
+            first_dense_layers=min(self.first_dense_layers, 1),
+        )
+
+    def param_count(self) -> int:
+        """Analytic parameter count (for 6·N·D roofline utility)."""
+        d, ff, L, V = self.d_model, self.d_ff, self.n_layers, self.vocab_padded
+        hd = self.hd
+        emb = V * d * (1 if self.tie_embeddings else 2)
+        if self.family == "audio":
+            # encoder + decoder + cross attention
+            attn = 4 * d * self.n_heads * hd
+            enc = self.encoder_layers * (attn + 2 * d * ff)
+            dec = L * (2 * attn + 2 * d * ff)
+            return emb + enc + dec
+        if self.kv_lora_rank:  # MLA
+            r, rr, vd = self.kv_lora_rank, self.rope_head_dim, (self.v_head_dim or hd)
+            attn = (
+                d * self.n_heads * (hd + rr)          # q proj (nope+rope)
+                + d * (r + rr)                        # kv down
+                + r * self.n_kv_heads * (hd + vd)     # kv up
+                + self.n_heads * vd * d               # o proj
+            )
+        else:
+            attn = d * self.n_heads * hd + 2 * d * self.n_kv_heads * hd + self.n_heads * hd * d
+        if self.family == "ssm":
+            blk = 8 * d * d  # xlstm qkv/gates/up/down approx (factor-2 proj)
+            return emb + L * blk
+        if self.family == "hybrid":
+            dm = 2 * d
+            mamba = 2 * d * dm + dm * (2 * self.ssm_state) + dm * d + dm  # in,Bc,out,dt
+            shared = attn + 2 * d * ff
+            n_shared_uses = L // max(1, self.shared_attn_every)
+            return emb + L * mamba + shared + n_shared_uses * d * d
+        mlp = 3 * d * ff if ff else 0
+        dense_part = attn + mlp
+        if self.n_experts:
+            moe_mlp = 3 * d * self.d_ff_expert * (self.n_experts + self.n_shared_experts)
+            router = d * self.n_experts
+            n_moe = L - self.first_dense_layers
+            return (
+                emb
+                + self.first_dense_layers * (attn + 3 * d * (self.d_ff or self.d_ff_expert * 8))
+                + n_moe * (attn + moe_mlp + router)
+            )
+        return emb + L * dense_part
+
+    def active_param_count(self) -> int:
+        """Activated params per token (MoE: top-k + shared only)."""
+        if not self.n_experts:
+            return self.param_count()
+        full = self.param_count()
+        d = self.d_model
+        n_moe = self.n_layers - self.first_dense_layers
+        all_experts = 3 * d * self.d_ff_expert * self.n_experts
+        active_experts = 3 * d * self.d_ff_expert * self.top_k
+        return full - n_moe * (all_experts - active_experts)

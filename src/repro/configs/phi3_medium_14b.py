@@ -1,0 +1,15 @@
+"""phi3-medium-14b [arXiv:2404.14219; unverified] — RoPE SwiGLU GQA dense.
+40L d_model=5120 40H (GQA kv=10) d_ff=17920 vocab=100352."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    arch_id="phi3-medium-14b",
+    family="dense",
+    n_layers=40,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=10,
+    d_ff=17920,
+    vocab=100352,
+    rope_theta=1e4,
+)

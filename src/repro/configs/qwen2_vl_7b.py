@@ -1,0 +1,18 @@
+"""qwen2-vl-7b [arXiv:2409.12191; hf] — M-RoPE transformer backbone.
+28L d_model=3584 28H (GQA kv=4) d_ff=18944 vocab=152064.
+The vision frontend is a STUB per the assignment: input_specs() provides
+precomputed patch embeddings + 3D (t,h,w) M-RoPE position ids."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    arch_id="qwen2-vl-7b",
+    family="vlm",
+    n_layers=28,
+    d_model=3584,
+    n_heads=28,
+    n_kv_heads=4,
+    d_ff=18944,
+    vocab=152064,
+    mrope=True,
+    rope_theta=1e6,
+)

@@ -1,0 +1,18 @@
+"""whisper-medium [arXiv:2212.04356; unverified] — enc-dec, conv frontend stub.
+24L(dec) + 24L(enc) d_model=1024 16H d_ff=4096 vocab=51865.
+The conv/mel frontend is a STUB per the assignment: input_specs() provides
+precomputed frame embeddings for the encoder."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    arch_id="whisper-medium",
+    family="audio",
+    n_layers=24,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=4096,
+    vocab=51865,
+    encoder_layers=24,
+    rope_theta=1e4,   # we use RoPE in place of learned abs positions
+)

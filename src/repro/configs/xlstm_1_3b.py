@@ -1,0 +1,15 @@
+"""xlstm-1.3b [arXiv:2405.04517; unverified] — sLSTM + mLSTM blocks.
+48L d_model=2048 4H vocab=50304; recurrent (sub-quadratic, O(1) decode)."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    arch_id="xlstm-1.3b",
+    family="ssm",
+    n_layers=48,
+    d_model=2048,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=0,                 # xLSTM blocks carry their own up/down projection
+    vocab=50304,
+    subquadratic=True,
+)

@@ -1,0 +1,18 @@
+"""zamba2-2.7b [arXiv:2411.15242; hf] — Mamba2 backbone + shared attention.
+54L d_model=2560 32H d_ff=10240 vocab=32000, ssm_state=64.
+Shared transformer block applied every 6 Mamba2 layers (weights shared)."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    arch_id="zamba2-2.7b",
+    family="hybrid",
+    n_layers=54,
+    d_model=2560,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=10240,
+    vocab=32000,
+    ssm_state=64,
+    shared_attn_every=6,
+    subquadratic=True,       # Mamba2 recurrence; shared attn uses KV cache
+)

@@ -1,0 +1,40 @@
+# The paper's primary contribution: Async-fork as a snapshot substrate for
+# sharded JAX state (see DESIGN.md for the page-table -> block-table mapping).
+from repro.core.blocks import BlockRef, BlockState, BlockTable, LeafHandle, TwoWayPointer
+from repro.core.metrics import SnapshotMetrics
+from repro.core.provider import FailingProvider, PyTreeProvider
+from repro.core.sinks import FileSink, MemorySink, NullSink, Sink, read_file_snapshot
+from repro.core.snapshot import (
+    SNAPSHOTTERS,
+    AsyncForkSnapshotter,
+    BlockingSnapshotter,
+    CowSnapshotter,
+    SnapshotError,
+    SnapshotHandle,
+    Snapshotter,
+    make_snapshotter,
+)
+
+__all__ = [
+    "BlockRef",
+    "BlockState",
+    "BlockTable",
+    "LeafHandle",
+    "TwoWayPointer",
+    "SnapshotMetrics",
+    "PyTreeProvider",
+    "FailingProvider",
+    "Sink",
+    "NullSink",
+    "MemorySink",
+    "FileSink",
+    "read_file_snapshot",
+    "Snapshotter",
+    "SnapshotHandle",
+    "SnapshotError",
+    "BlockingSnapshotter",
+    "CowSnapshotter",
+    "AsyncForkSnapshotter",
+    "SNAPSHOTTERS",
+    "make_snapshotter",
+]

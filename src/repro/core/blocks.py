@@ -1,0 +1,205 @@
+"""The block table — this framework's analogue of the process page table.
+
+Paper mapping (Async-fork §2.1, §4.1):
+
+  * pytree structure / treedef .......... PGD/PUD levels (cheap metadata, the
+                                          parent copies these synchronously)
+  * one pytree leaf ("VMA") ............. a contiguous virtual memory area
+  * one copy block of a leaf ("PMD") .... a PMD entry + its 512-PTE table;
+                                          the unit of (a) asynchronous copying
+                                          by the child and (b) proactive
+                                          synchronization by the parent
+  * per-block tri-state flag ............ the reused R/W protection bit
+
+Blocks partition a leaf along axis 0 so that a block is a contiguous,
+cheaply-sliceable region of roughly ``block_bytes`` bytes (default 4 MiB,
+mirroring a PMD's 2 MiB reach at the paper's 4 KiB pages, scaled for HBM).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import threading
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from repro.utils.tree import flatten_with_paths, leaf_nbytes
+
+DEFAULT_BLOCK_BYTES = 4 << 20  # 4 MiB
+
+
+class BlockState(enum.IntEnum):
+    """Copy status of one block ("PMD R/W flag", Async-fork §4.2)."""
+
+    UNCOPIED = 0   # write-protected: a parent write must proactively sync
+    COPYING = 1    # trylock_page() held by copier/parent/persister
+    COPIED = 2     # staged; parent writes need no synchronization
+    PERSISTED = 3  # durable; no synchronization for the rest of the window
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockRef:
+    """One copy unit (a "PMD entry + its PTE table")."""
+
+    leaf_id: int
+    block_id: int
+    start: int      # row range [start, stop) along axis 0 of the leaf
+    stop: int
+    nbytes: int
+
+    @property
+    def key(self):
+        return (self.leaf_id, self.block_id)
+
+
+class TwoWayPointer:
+    """Paper §4.3: per-VMA connection between parent and child.
+
+    Lets the parent answer "is every block of this leaf copied?" in O(1)
+    instead of looping over all PMDs, and carries the error code used by
+    §4.4 error handling. ``close()`` severs the connection once the whole
+    leaf is copied (or the snapshot aborts).
+    """
+
+    __slots__ = ("remaining", "error", "_lock", "closed")
+
+    def __init__(self, n_blocks: int):
+        self.remaining = n_blocks
+        self.error: Optional[BaseException] = None
+        self.closed = n_blocks == 0
+        self._lock = threading.Lock()
+
+    def block_done(self) -> None:
+        with self._lock:
+            self.remaining -= 1
+            if self.remaining <= 0:
+                self.closed = True
+
+    def set_error(self, exc: BaseException) -> None:
+        with self._lock:
+            self.error = exc
+            self.closed = True
+
+
+@dataclasses.dataclass
+class LeafHandle:
+    """One "VMA": a pytree leaf plus its block list and two-way pointer."""
+
+    leaf_id: int
+    path: str
+    shape: tuple
+    dtype: Any
+    blocks: List[BlockRef]
+    twoway: TwoWayPointer
+
+
+class BlockTable:
+    """Partition a pytree of arrays into copy blocks and track their state.
+
+    Thread-safety: flag transitions are guarded by a single mutex +
+    condition variable; bulk copies happen *outside* the lock while the
+    block is in ``COPYING`` state (the ``trylock_page()`` analogue), so the
+    parent and the copier threads never copy the same block concurrently
+    (Async-fork §4.2 "Eliminating Unnecessary Synchronizations").
+    """
+
+    def __init__(self, tree, block_bytes: int = DEFAULT_BLOCK_BYTES):
+        leaves_with_paths, treedef = flatten_with_paths(tree)
+        self.treedef = treedef
+        self.block_bytes = int(block_bytes)
+        self.leaf_handles: List[LeafHandle] = []
+        self.blocks: List[BlockRef] = []
+        self._flags: Dict[tuple, BlockState] = {}
+        self._mu = threading.Lock()
+        self._cv = threading.Condition(self._mu)
+        self.total_bytes = 0
+
+        for leaf_id, (path, leaf) in enumerate(leaves_with_paths):
+            shape = tuple(leaf.shape)
+            nbytes = leaf_nbytes(leaf)
+            self.total_bytes += nbytes
+            if not shape:  # scalar leaf -> single block
+                rows, row_bytes = 1, nbytes
+            else:
+                rows = shape[0]
+                row_bytes = max(1, nbytes // max(1, rows))
+            rows_per_block = max(1, self.block_bytes // row_bytes)
+            refs: List[BlockRef] = []
+            start = 0
+            bid = 0
+            while start < rows:
+                stop = min(rows, start + rows_per_block)
+                refs.append(
+                    BlockRef(leaf_id, bid, start, stop, (stop - start) * row_bytes)
+                )
+                start = stop
+                bid += 1
+            handle = LeafHandle(
+                leaf_id, path, shape, np.dtype(leaf.dtype), refs, TwoWayPointer(len(refs))
+            )
+            self.leaf_handles.append(handle)
+            self.blocks.extend(refs)
+            for r in refs:
+                self._flags[r.key] = BlockState.UNCOPIED
+
+    # ------------------------------------------------------------------ #
+    # flag machine                                                       #
+    # ------------------------------------------------------------------ #
+    def state(self, key) -> BlockState:
+        with self._mu:
+            return self._flags[key]
+
+    def try_acquire(self, key) -> bool:
+        """UNCOPIED -> COPYING transition (the trylock). Returns True if won."""
+        with self._mu:
+            if self._flags[key] == BlockState.UNCOPIED:
+                self._flags[key] = BlockState.COPYING
+                return True
+            return False
+
+    def mark(self, key, state: BlockState, *, count_done: bool = True) -> None:
+        leaf_id = key[0]
+        with self._cv:
+            prev = self._flags[key]
+            self._flags[key] = state
+            self._cv.notify_all()
+        if (
+            count_done
+            and state in (BlockState.COPIED, BlockState.PERSISTED)
+            and prev in (BlockState.COPYING, BlockState.UNCOPIED)
+        ):
+            self.leaf_handles[leaf_id].twoway.block_done()
+
+    def wait_not_copying(self, key) -> BlockState:
+        """Wait out a concurrent copier holding the block lock."""
+        with self._cv:
+            while self._flags[key] == BlockState.COPYING:
+                self._cv.wait(timeout=1.0)
+            return self._flags[key]
+
+    def rollback_leaf(self, leaf_id: int) -> int:
+        """§4.4: make every non-final block of the leaf writable again."""
+        n = 0
+        with self._cv:
+            for ref in self.leaf_handles[leaf_id].blocks:
+                if self._flags[ref.key] in (BlockState.UNCOPIED, BlockState.COPYING):
+                    self._flags[ref.key] = BlockState.PERSISTED  # drop protection
+                    n += 1
+            self._cv.notify_all()
+        return n
+
+    def counts(self) -> Dict[str, int]:
+        with self._mu:
+            out: Dict[str, int] = {s.name: 0 for s in BlockState}
+            for v in self._flags.values():
+                out[v.name] += 1
+            return out
+
+    @property
+    def n_blocks(self) -> int:
+        return len(self.blocks)
+
+    def leaf_done(self, leaf_id: int) -> bool:
+        """O(1) whole-leaf check via the two-way pointer (§4.3)."""
+        return self.leaf_handles[leaf_id].twoway.closed

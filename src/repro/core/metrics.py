@@ -1,0 +1,72 @@
+"""Interruption / out-of-service accounting (paper §6.2 "Deep Diving").
+
+The paper measures, with bcc, every ``copy_pmd_range()`` invocation in the
+parent: count, duration histogram, and the summed out-of-service time
+(Figs. 11 and 20). We record the same three quantities for:
+
+  * the fork() call itself (kernel-mode entry),
+  * every proactive synchronization (Async-fork) / CoW fault (ODF mode).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Dict, List, Tuple
+
+# bcc-style power-of-two latency buckets, in microseconds.
+_BUCKETS = [(2**i, 2**(i + 1) - 1) for i in range(0, 26)]
+
+
+@dataclasses.dataclass
+class SnapshotMetrics:
+    fork_s: float = 0.0               # parent time inside fork()
+    copy_window_s: float = 0.0        # child's PMD/PTE copy duration (Fig 15a)
+    persist_s: float = 0.0            # full snapshot window (fork -> durable)
+    copied_blocks_child: int = 0
+    copied_blocks_parent: int = 0     # proactive syncs / CoW faults
+    aborted: bool = False
+
+    def __post_init__(self):
+        self._lock = threading.Lock()
+        self.interruptions: List[Tuple[float, float, int]] = []  # (t, dur_s, blocks)
+
+    def record_interruption(self, t: float, dur_s: float, blocks: int) -> None:
+        with self._lock:
+            self.interruptions.append((t, dur_s, blocks))
+            self.copied_blocks_parent += blocks
+
+    @property
+    def n_interruptions(self) -> int:
+        return len(self.interruptions)
+
+    @property
+    def out_of_service_s(self) -> float:
+        """Fig 20: fork time + every parent-side copy stall."""
+        return self.fork_s + sum(d for _, d, _ in self.interruptions)
+
+    def histogram_us(self) -> Dict[str, int]:
+        """bcc-style histogram of interruption durations (Fig 11)."""
+        out: Dict[str, int] = {}
+        for _, dur, _ in self.interruptions:
+            us = dur * 1e6
+            if us < 1.0:
+                out["[0us,1us)"] = out.get("[0us,1us)", 0) + 1
+                continue
+            for lo, hi in _BUCKETS:
+                if lo <= us <= hi:
+                    out[f"[{lo}us,{hi}us]"] = out.get(f"[{lo}us,{hi}us]", 0) + 1
+                    break
+            else:
+                out["[>64s]"] = out.get("[>64s]", 0) + 1
+        return out
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "fork_ms": self.fork_s * 1e3,
+            "copy_window_ms": self.copy_window_s * 1e3,
+            "persist_ms": self.persist_s * 1e3,
+            "interruptions": float(self.n_interruptions),
+            "out_of_service_ms": self.out_of_service_s * 1e3,
+            "parent_copied_blocks": float(self.copied_blocks_parent),
+            "child_copied_blocks": float(self.copied_blocks_child),
+        }

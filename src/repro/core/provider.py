@@ -1,0 +1,123 @@
+"""State providers: how the snapshot core reads the engine's live buffers.
+
+The engine (parent process) owns a pytree of ``jax.Array`` leaves that it
+updates with buffer donation — donation destroys the old buffer, which is
+exactly the overwrite hazard the paper's write-protection guards against.
+A provider reads the *current* content of a block; the snapshot protocol
+guarantees that content equals the fork-time (T0) content for every block
+that is still UNCOPIED, because the parent proactively copies blocks
+before its first donated write to them.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Callable, List, Optional
+
+import jax
+import numpy as np
+
+from repro.core.blocks import BlockRef
+from repro.utils.tree import flatten_with_paths
+
+
+class PyTreeProvider:
+    """Reads blocks out of a mutable pytree of jax/numpy arrays.
+
+    Concurrency contract (the ``trylock_page()`` analogue at VMA scope):
+    every leaf has its own lock; block reads slice-and-copy *under* that
+    lock, and donated updates rebind + delete the old buffer under the same
+    lock, so a copier thread can never observe a half-deleted buffer.
+
+    Correctness under donation: the engine calls ``before_write`` for the
+    rows a donated update will change, so every still-UNCOPIED block only
+    covers rows whose values are unchanged by the update — reading them
+    from the *new* buffer still yields fork-time (T0) content.
+    """
+
+    def __init__(self, tree):
+        self._meta_lock = threading.Lock()
+        self._leaves: List[Any] = []
+        self._paths: List[str] = []
+        self._leaf_locks: List[threading.RLock] = []
+        self.refresh(tree)
+
+    def refresh(self, tree) -> None:
+        leaves_with_paths, treedef = flatten_with_paths(tree)
+        with self._meta_lock:
+            self._paths = [p for p, _ in leaves_with_paths]
+            self._leaves = [l for _, l in leaves_with_paths]
+            self._leaf_locks = [threading.RLock() for _ in self._leaves]
+            self.treedef = treedef
+
+    def update_leaf(self, leaf_id: int, new_leaf, delete_old: bool = False) -> None:
+        """Commit a (possibly donated) update. With ``delete_old`` the old
+        buffer is destroyed atomically w.r.t. concurrent block reads."""
+        with self._leaf_locks[leaf_id]:
+            old = self._leaves[leaf_id]
+            self._leaves[leaf_id] = new_leaf
+            if delete_old and old is not new_leaf and hasattr(old, "delete"):
+                old.delete()
+
+    def leaf(self, leaf_id: int):
+        with self._leaf_locks[leaf_id]:
+            return self._leaves[leaf_id]
+
+    def tree(self):
+        with self._meta_lock:
+            return jax.tree_util.tree_unflatten(self.treedef, list(self._leaves))
+
+    def read_block(self, ref: BlockRef) -> np.ndarray:
+        """Device->host copy of one block. The copy MUST complete under the
+        leaf lock: on the CPU backend ``np.asarray(jax.Array)`` can be a
+        zero-copy view, and a donated update would free the buffer under a
+        view that escaped the lock."""
+        with self._leaf_locks[ref.leaf_id]:
+            leaf = self._leaves[ref.leaf_id]
+            if not getattr(leaf, "shape", ()):  # scalar
+                return np.array(leaf, copy=True)
+            if ref.start == 0 and ref.stop == leaf.shape[0]:
+                # whole-leaf fast path: a single export, no slice dispatch
+                return np.array(leaf, copy=True)
+            return np.array(leaf[ref.start : ref.stop], copy=True)
+
+    def read_block_into(self, ref: BlockRef, out: np.ndarray) -> None:
+        """Copy one block directly into ``out`` (a staging slice) — one
+        memcpy, still entirely under the leaf lock."""
+        with self._leaf_locks[ref.leaf_id]:
+            leaf = self._leaves[ref.leaf_id]
+            if not getattr(leaf, "shape", ()):
+                out[...] = np.asarray(leaf)
+            elif ref.start == 0 and ref.stop == leaf.shape[0]:
+                np.copyto(out, np.asarray(leaf))
+            else:
+                np.copyto(out, np.asarray(leaf[ref.start : ref.stop]))
+
+
+class FailingProvider(PyTreeProvider):
+    """Test hook: injects copy failures (§4.4 "out of memory in the child").
+
+    ``fail_on`` is a predicate over BlockRef; matching reads raise
+    ``MemoryError`` exactly ``max_failures`` times.
+    """
+
+    def __init__(self, tree, fail_on: Callable[[BlockRef], bool], max_failures: int = 1):
+        super().__init__(tree)
+        self._fail_on = fail_on
+        self._budget = max_failures
+        self._fail_lock = threading.Lock()
+
+    def _maybe_fail(self, ref: BlockRef) -> None:
+        with self._fail_lock:
+            should_fail = self._budget > 0 and self._fail_on(ref)
+            if should_fail:
+                self._budget -= 1
+        if should_fail:
+            raise MemoryError(f"injected copy failure at block {ref.key}")
+
+    def read_block(self, ref: BlockRef) -> np.ndarray:
+        self._maybe_fail(ref)
+        return super().read_block(ref)
+
+    def read_block_into(self, ref: BlockRef, out: np.ndarray) -> None:
+        self._maybe_fail(ref)
+        super().read_block_into(ref, out)

@@ -1,0 +1,493 @@
+"""Snapshotters — default fork, ODF-style CoW fork, and Async-fork.
+
+This is the paper's primary contribution rebuilt as a JAX state-snapshot
+substrate (see DESIGN.md §2 for the full mapping). Three implementations
+share one protocol:
+
+  * ``BlockingSnapshotter``  — the default ``fork``: the parent copies every
+    block synchronously inside ``fork()`` (§3.1: page-table copy dominates).
+  * ``CowSnapshotter``       — the shared-page-table / On-Demand-Fork
+    baseline (§3.2): ``fork()`` is O(metadata); the parent is interrupted by
+    a synchronous block copy on its **first write to every block for the
+    entire persist window** (tens of seconds).
+  * ``AsyncForkSnapshotter`` — the paper (§4): ``fork()`` is O(metadata);
+    a pool of copier threads (the child + kernel threads, §5.1) stages
+    blocks in the background; the parent is interrupted only by *proactive
+    synchronization* of blocks it writes **while the copier is still
+    running** (hundreds of milliseconds).
+
+Engine contract: call ``snapshotter.before_write(leaf_id, rows)`` before
+every donated (destructive) update; take snapshots with ``fork()``.
+"""
+from __future__ import annotations
+
+import sys
+import threading
+import time
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.blocks import BlockRef, BlockState, BlockTable
+from repro.core.metrics import SnapshotMetrics
+from repro.core.provider import PyTreeProvider
+from repro.core.sinks import Sink
+
+import jax
+
+
+class SnapshotError(RuntimeError):
+    pass
+
+
+class SnapshotHandle:
+    """One in-flight snapshot epoch ("the child process")."""
+
+    def __init__(self, table: BlockTable, provider: PyTreeProvider, mode: str):
+        self.table = table
+        self.provider = provider
+        self.mode = mode
+        self.metrics = SnapshotMetrics()
+        self.error: Optional[BaseException] = None
+        self.aborted = False
+        self.t0 = time.perf_counter()
+        self.copy_done = threading.Event()     # child finished PMD/PTE copy
+        self.persist_done = threading.Event()  # snapshot durable ("RDB written")
+        self._staging: Dict[int, np.ndarray] = {}
+        self._staging_lock = threading.Lock()
+        self._abort_lock = threading.Lock()
+
+    # ------------------------------------------------------------------ #
+    # staging                                                            #
+    # ------------------------------------------------------------------ #
+    def _leaf_staging(self, leaf_id: int) -> np.ndarray:
+        with self._staging_lock:
+            buf = self._staging.get(leaf_id)
+            if buf is None:
+                h = self.table.leaf_handles[leaf_id]
+                shape = h.shape if h.shape else (1,)
+                buf = np.empty(shape, dtype=h.dtype)
+                self._staging[leaf_id] = buf
+        return buf
+
+    def stage_block(self, ref: BlockRef) -> None:
+        """Copy one block's T0 content into the snapshot's private staging.
+
+        Caller must hold the block in COPYING state (the trylock). Errors
+        propagate; the caller routes them into :meth:`abort` (§4.4).
+        """
+        buf = self._leaf_staging(ref.leaf_id)
+        if self.table.leaf_handles[ref.leaf_id].shape:
+            self.provider.read_block_into(ref, buf[ref.start : ref.stop])
+        else:
+            self.provider.read_block_into(ref, buf[0:1].reshape(()) if buf.ndim else buf)
+
+    def staged_block(self, ref: BlockRef) -> np.ndarray:
+        buf = self._staging[ref.leaf_id]
+        h = self.table.leaf_handles[ref.leaf_id]
+        return buf[ref.start : ref.stop] if h.shape else buf[0]
+
+    # ------------------------------------------------------------------ #
+    # parent-side proactive synchronization (§4.2)                        #
+    # ------------------------------------------------------------------ #
+    def _interruptible(self) -> bool:
+        if self.aborted:
+            return False
+        if self.mode == "asyncfork" or self.mode == "blocking":
+            return not self.copy_done.is_set()
+        return not self.persist_done.is_set()  # cow: whole persist window
+
+    def blocks_for_rows(self, leaf_id: int, rows) -> List[BlockRef]:
+        handle = self.table.leaf_handles[leaf_id]
+        if rows is None:
+            return list(handle.blocks)
+        if not handle.blocks:
+            return []
+        span = handle.blocks[0].stop - handle.blocks[0].start
+        wanted = sorted({min(int(r) // span, len(handle.blocks) - 1) for r in rows})
+        return [handle.blocks[b] for b in wanted]
+
+    def sync_for_write(self, leaf_id: int, rows=None) -> Tuple[int, float]:
+        """Proactively copy the to-be-modified blocks (parent side).
+
+        Returns (blocks copied by the parent, stall seconds). Fast paths:
+        snapshot aborted / outside the interruption window / the leaf's
+        two-way pointer is closed (whole VMA already copied, §4.3).
+        """
+        if not self._interruptible():
+            return 0, 0.0
+        if self.table.leaf_done(leaf_id):
+            return 0, 0.0
+        t_start = time.perf_counter()
+        copied = 0
+        waited = False
+        for ref in self.blocks_for_rows(leaf_id, rows):
+            st = self.table.state(ref.key)
+            if st in (BlockState.COPIED, BlockState.PERSISTED):
+                continue
+            if self.table.try_acquire(ref.key):
+                try:
+                    self.stage_block(ref)
+                except BaseException as exc:  # §4.4 case 3
+                    self.abort(exc, rollback_leaf=ref.leaf_id)
+                    break
+                self.table.mark(ref.key, BlockState.COPIED)
+                copied += 1
+            else:
+                self.table.wait_not_copying(ref.key)
+                waited = True
+        dur = time.perf_counter() - t_start
+        if copied or waited:
+            self.metrics.record_interruption(t_start - self.t0, dur, copied)
+        return copied, dur
+
+    def complete_leaf(self, leaf_id: int) -> int:
+        """§5.2 consecutive snapshots: parent finishes a whole VMA's copy."""
+        copied, _ = self.sync_for_write(leaf_id, rows=None)
+        return copied
+
+    # ------------------------------------------------------------------ #
+    # lifecycle                                                          #
+    # ------------------------------------------------------------------ #
+    def abort(self, exc: BaseException, rollback_leaf: Optional[int] = None) -> None:
+        """§4.4 error handling: drop all write protection, kill the child."""
+        with self._abort_lock:
+            if self.aborted:
+                return
+            self.aborted = True
+            self.error = exc
+        if rollback_leaf is not None:
+            self.table.rollback_leaf(rollback_leaf)
+            self.table.leaf_handles[rollback_leaf].twoway.set_error(exc)
+        for h in self.table.leaf_handles:
+            self.table.rollback_leaf(h.leaf_id)
+            h.twoway.set_error(exc)
+        self.copy_done.set()
+        self.persist_done.set()
+
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        ok = self.copy_done.wait(timeout)
+        if self.error is not None:
+            raise SnapshotError(f"snapshot aborted: {self.error!r}") from self.error
+        return ok
+
+    def wait_persisted(self, timeout: Optional[float] = None) -> bool:
+        ok = self.persist_done.wait(timeout)
+        if self.error is not None:
+            raise SnapshotError(f"snapshot aborted: {self.error!r}") from self.error
+        return ok
+
+    def materialize(self) -> None:
+        """Stage every still-uncopied block (used by CoW mode with no
+        persister, and by tests that want the full T0 image)."""
+        for ref in self.table.blocks:
+            if self.aborted:
+                return
+            st = self.table.state(ref.key)
+            while st in (BlockState.UNCOPIED, BlockState.COPYING):
+                if st == BlockState.UNCOPIED and self.table.try_acquire(ref.key):
+                    try:
+                        self.stage_block(ref)
+                    except BaseException as exc:
+                        self.abort(exc)
+                        return
+                    self.table.mark(ref.key, BlockState.COPIED)
+                    self.metrics.copied_blocks_child += 1  # ODF child read
+                    break
+                st = self.table.wait_not_copying(ref.key)
+
+    def finish(self) -> None:
+        """Close a manual (sink-less) snapshot window: materialize + seal."""
+        self.materialize()
+        if not self.copy_done.is_set():
+            self.metrics.copy_window_s = time.perf_counter() - self.t0
+            self.copy_done.set()
+        if not self.persist_done.is_set():
+            self.metrics.persist_s = time.perf_counter() - self.t0
+            self.persist_done.set()
+
+    def to_tree(self):
+        """Reassemble the T0 pytree from staging (host numpy leaves)."""
+        if self.mode == "cow" and not self.persist_done.is_set():
+            self.finish()
+        self.wait()
+        leaves = []
+        for h in self.table.leaf_handles:
+            buf = self._staging.get(h.leaf_id)
+            if buf is None:  # zero-block leaf
+                buf = np.empty(h.shape if h.shape else (1,), dtype=h.dtype)
+            leaves.append(buf if h.shape else buf[0])
+        return jax.tree_util.tree_unflatten(self.table.treedef, leaves)
+
+    @property
+    def ok(self) -> bool:
+        return not self.aborted
+
+
+def _persister(snap: SnapshotHandle, sink: Sink, order: Sequence[BlockRef]) -> None:
+    """The child's IO loop: ensure each block is staged, then write it out.
+
+    In CoW mode this thread *is* what keeps the snapshot window open: a
+    block that the parent never writes is staged here (ODF's child reading
+    the shared table) right before persisting.
+    """
+    try:
+        sink.open(snap.table.leaf_handles)
+        for ref in order:
+            if snap.aborted:
+                sink.abort()
+                return
+            st = snap.table.state(ref.key)
+            while st == BlockState.UNCOPIED or st == BlockState.COPYING:
+                if st == BlockState.UNCOPIED and snap.table.try_acquire(ref.key):
+                    snap.stage_block(ref)
+                    snap.table.mark(ref.key, BlockState.COPIED)
+                    snap.metrics.copied_blocks_child += 1  # child's shared read
+                    st = BlockState.COPIED
+                    break
+                st = snap.table.wait_not_copying(ref.key)
+            if snap.aborted:
+                sink.abort()
+                return
+            sink.write_block(ref, snap.staged_block(ref))
+            snap.table.mark(ref.key, BlockState.PERSISTED)
+        sink.close()
+        snap.metrics.persist_s = time.perf_counter() - snap.t0
+    except BaseException as exc:
+        snap.abort(exc)
+        sink.abort()
+    finally:
+        snap.persist_done.set()
+
+
+class Snapshotter:
+    """Factory + registry for snapshot epochs over one engine state.
+
+    ``block_bytes`` is the copy granularity ("512 PTEs"); ``copier_threads``
+    maps to the paper's child-side kernel threads (§5.1, Figs 14/15).
+    """
+
+    mode = "base"
+
+    def __init__(
+        self,
+        provider: PyTreeProvider,
+        block_bytes: int = 4 << 20,
+        copier_threads: int = 1,
+        yield_every: int = 1,
+        copier_duty: float = 1.0,
+    ):
+        """``copier_duty`` < 1 throttles child-side copier threads to that
+        fraction of a core. On a single-core host (this container) the
+        paper's assumption — the child copies on *idle* cores while the
+        parent serves — does not hold; a duty cycle emulates the dedicated
+        core by stretching the copy window instead of starving the parent.
+        Set to 1.0 on multi-core hosts. (See DESIGN.md §2, changed
+        assumptions.)"""
+        self.provider = provider
+        self.block_bytes = int(block_bytes)
+        self.copier_threads = int(copier_threads)
+        self.yield_every = int(yield_every)
+        self.copier_duty = float(copier_duty)
+        self._active: List[SnapshotHandle] = []
+        self._active_lock = threading.Lock()
+        self.forks = 0
+
+    # -- engine-facing ---------------------------------------------------
+    def before_write(self, leaf_id: int, rows=None) -> float:
+        """Proactive synchronization hook. Returns stall seconds."""
+        total = 0.0
+        for snap in self.active():
+            _, dur = snap.sync_for_write(leaf_id, rows)
+            total += dur
+        return total
+
+    def active(self) -> List[SnapshotHandle]:
+        with self._active_lock:
+            return [
+                s
+                for s in self._active
+                if not (s.copy_done.is_set() and s.persist_done.is_set())
+            ]
+
+    def _register(self, snap: SnapshotHandle) -> None:
+        with self._active_lock:
+            self._active = [
+                s for s in self._active
+                if not (s.copy_done.is_set() and s.persist_done.is_set())
+            ]
+            self._active.append(snap)
+
+    def _serialize_previous(self) -> None:
+        """§5.2: one child per VMA at a time — the parent proactively
+        completes any previous in-flight copy before the next fork."""
+        for prev in self.active():
+            if not prev.copy_done.is_set():
+                for h in prev.table.leaf_handles:
+                    if not prev.table.leaf_done(h.leaf_id):
+                        prev.complete_leaf(h.leaf_id)
+
+    # -- implemented by subclasses ----------------------------------------
+    def fork(self, sink: Optional[Sink] = None) -> SnapshotHandle:  # pragma: no cover
+        raise NotImplementedError
+
+
+class BlockingSnapshotter(Snapshotter):
+    """The default ``fork``: parent copies the whole "page table" inline."""
+
+    mode = "blocking"
+
+    def fork(self, sink: Optional[Sink] = None) -> SnapshotHandle:
+        t0 = time.perf_counter()
+        self._serialize_previous()
+        table = BlockTable(self.provider.tree(), self.block_bytes)
+        snap = SnapshotHandle(table, self.provider, self.mode)
+        for ref in table.blocks:  # synchronous level-by-level copy (§3.1)
+            if table.try_acquire(ref.key):
+                try:
+                    snap.stage_block(ref)
+                except BaseException as exc:
+                    snap.abort(exc)
+                    raise SnapshotError("fork failed") from exc
+                table.mark(ref.key, BlockState.COPIED)
+        snap.metrics.copied_blocks_child = table.n_blocks
+        snap.copy_done.set()
+        snap.metrics.fork_s = time.perf_counter() - t0
+        snap.metrics.copy_window_s = snap.metrics.fork_s
+        self.forks += 1
+        self._register(snap)
+        self._start_persist(snap, sink)
+        return snap
+
+    def _start_persist(self, snap: SnapshotHandle, sink: Optional[Sink]) -> None:
+        if sink is None:
+            snap.persist_done.set()
+            snap.metrics.persist_s = snap.metrics.fork_s
+            return
+        threading.Thread(
+            target=_persister, args=(snap, sink, snap.table.blocks), daemon=True
+        ).start()
+
+
+class CowSnapshotter(Snapshotter):
+    """Shared-page-table (ODF) model: zero-cost fork, CoW faults in the
+    parent for the whole persist window (§3.2, Table 1 discussion)."""
+
+    mode = "cow"
+
+    def fork(self, sink: Optional[Sink] = None) -> SnapshotHandle:
+        t0 = time.perf_counter()
+        self._serialize_previous()
+        table = BlockTable(self.provider.tree(), self.block_bytes)
+        snap = SnapshotHandle(table, self.provider, self.mode)
+        snap.copy_done.set()  # no child-side table copy at all
+        snap.metrics.fork_s = time.perf_counter() - t0
+        self.forks += 1
+        self._register(snap)
+        if sink is not None:
+            threading.Thread(
+                target=_persister, args=(snap, sink, snap.table.blocks), daemon=True
+            ).start()
+        # with sink=None the CoW window stays open until snap.finish()
+        return snap
+
+
+class AsyncForkSnapshotter(Snapshotter):
+    """The paper: metadata-only fork + child-side parallel copy +
+    proactive synchronization in the parent (§4, §5.1)."""
+
+    mode = "asyncfork"
+
+    def fork(self, sink: Optional[Sink] = None) -> SnapshotHandle:
+        t0 = time.perf_counter()
+        self._serialize_previous()
+        # Parent copies PGD/PUD (tree metadata) and write-protects PMDs
+        # (flag init) — this is ALL the parent does inside fork().
+        table = BlockTable(self.provider.tree(), self.block_bytes)
+        snap = SnapshotHandle(table, self.provider, self.mode)
+        self.forks += 1
+        self._register(snap)
+        snap.metrics.fork_s = time.perf_counter() - t0
+
+        # cond_resched() analogue at the interpreter level: don't let a
+        # copier hold the GIL for the default 5 ms while the parent serves.
+        if sys.getswitchinterval() > 1e-3:
+            sys.setswitchinterval(5e-4)
+
+        n = max(1, self.copier_threads)
+        shards = [table.blocks[i::n] for i in range(n)]
+        pending = [threading.Event() for _ in range(n)]
+
+        duty = min(1.0, max(0.01, self.copier_duty))
+
+        def copier(shard: List[BlockRef], done_evt: threading.Event) -> None:
+            # "the child process copies PMD entries and PTEs" (Alg. 1, L15-24)
+            # Debt-based duty throttle: accumulate busy time, pay it back in
+            # >=2ms sleeps so syscall overhead doesn't stretch the window.
+            busy = 0.0
+            slept = 0.0
+            try:
+                for i, ref in enumerate(shard):
+                    if snap.aborted:
+                        return
+                    if self.yield_every and i % self.yield_every == 0:
+                        time.sleep(0)  # cond_resched()
+                    if not table.try_acquire(ref.key):
+                        continue  # parent proactively copied it already
+                    t_blk = time.perf_counter()
+                    snap.stage_block(ref)
+                    table.mark(ref.key, BlockState.COPIED)
+                    snap.metrics.copied_blocks_child += 1
+                    busy += time.perf_counter() - t_blk
+                    if duty < 1.0:  # dedicated-core emulation
+                        debt = busy * (1.0 - duty) / duty - slept
+                        if debt > 2e-3:
+                            time.sleep(debt)
+                            slept += debt
+                # straggler mitigation: finished copiers steal leftover
+                # blocks from slower shards (trylock makes this race-free)
+                for ref in table.blocks:
+                    if snap.aborted:
+                        return
+                    if table.state(ref.key) == BlockState.UNCOPIED and \
+                            table.try_acquire(ref.key):
+                        snap.stage_block(ref)
+                        table.mark(ref.key, BlockState.COPIED)
+                        snap.metrics.copied_blocks_child += 1
+            except BaseException as exc:  # §4.4 case 2 (SIGKILL the child)
+                snap.abort(exc)
+            finally:
+                done_evt.set()
+                if all(e.is_set() for e in pending):
+                    snap.metrics.copy_window_s = time.perf_counter() - snap.t0
+                    snap.copy_done.set()
+
+        for shard, evt in zip(shards, pending):
+            threading.Thread(target=copier, args=(shard, evt), daemon=True).start()
+
+        if sink is None:
+            def _mark_persisted():
+                snap.copy_done.wait()
+                snap.metrics.persist_s = time.perf_counter() - snap.t0
+                snap.persist_done.set()
+            threading.Thread(target=_mark_persisted, daemon=True).start()
+        else:
+            threading.Thread(
+                target=_persister, args=(snap, sink, snap.table.blocks), daemon=True
+            ).start()
+        return snap
+
+
+SNAPSHOTTERS = {
+    "blocking": BlockingSnapshotter,
+    "cow": CowSnapshotter,
+    "asyncfork": AsyncForkSnapshotter,
+}
+
+
+def make_snapshotter(mode: str, provider: PyTreeProvider, **kw) -> Snapshotter:
+    try:
+        cls = SNAPSHOTTERS[mode]
+    except KeyError:
+        raise ValueError(f"unknown snapshotter mode {mode!r}; pick from {sorted(SNAPSHOTTERS)}")
+    return cls(provider, **kw)

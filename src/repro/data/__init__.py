@@ -1,0 +1,3 @@
+from repro.data.pipeline import SyntheticPipeline, make_batch_specs
+
+__all__ = ["SyntheticPipeline", "make_batch_specs"]

@@ -1,0 +1,113 @@
+"""Synthetic token pipeline with background prefetch.
+
+``make_batch_specs`` is the single source of truth for every model's
+input signature per (arch, shape) — the dry-run lowers against exactly
+these specs, and the pipeline materializes host batches matching them.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeCfg
+
+
+def make_batch_specs(cfg: ArchConfig, shape: ShapeCfg) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        specs = {"tokens": jax.ShapeDtypeStruct((B, S + 1), jnp.int32)}
+        if cfg.family == "audio":
+            specs["frames"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16)
+        if cfg.family == "vlm":
+            specs["mrope_positions"] = jax.ShapeDtypeStruct((3, B, S), jnp.int32)
+            specs["extra_embeds"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16)
+        return specs
+    if shape.kind == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        if cfg.family == "audio":
+            specs["frames"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16)
+        if cfg.family == "vlm":
+            specs["mrope_positions"] = jax.ShapeDtypeStruct((3, B, S), jnp.int32)
+            specs["extra_embeds"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16)
+        return specs
+    # decode: one new token against a seq_len KV cache/state
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((B,), jnp.int32),
+    }
+    if cfg.family == "vlm":
+        specs["mrope_positions"] = jax.ShapeDtypeStruct((3, B, 1), jnp.int32)
+    return specs
+
+
+def batch_pspecs(cfg: ArchConfig, shape: ShapeCfg, multi_pod: bool) -> Dict[str, P]:
+    """Input shardings: global batch over (pod, data)."""
+    bdim = ("pod", "data") if multi_pod else ("data",)
+    specs = make_batch_specs(cfg, shape)
+    out = {}
+    for name, s in specs.items():
+        if name == "mrope_positions":
+            out[name] = P(None, bdim, None)
+        elif name == "pos":
+            out[name] = P(bdim)
+        elif s.ndim == 3:
+            out[name] = P(bdim, None, None)
+        else:
+            out[name] = P(bdim, *([None] * (s.ndim - 1)))
+    return out
+
+
+class SyntheticPipeline:
+    """Reproducible token stream + double-buffered host prefetch."""
+
+    def __init__(self, cfg: ArchConfig, shape: ShapeCfg, seed: int = 0,
+                 prefetch: int = 2):
+        self.cfg = cfg
+        self.shape = shape
+        self.seed = seed
+        self._q: "queue.Queue[Dict[str, np.ndarray]]" = queue.Queue(maxsize=prefetch)
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+
+    def _make(self, rng: np.random.Generator) -> Dict[str, np.ndarray]:
+        specs = make_batch_specs(self.cfg, self.shape)
+        out = {}
+        for name, s in specs.items():
+            if name == "tokens":
+                out[name] = rng.integers(0, self.cfg.vocab, s.shape, dtype=np.int32)
+            elif name == "pos":
+                out[name] = np.full(s.shape, self.shape.seq_len - 1, np.int32)
+            elif name == "mrope_positions":
+                base = np.arange(s.shape[-1], dtype=np.int32)
+                out[name] = np.broadcast_to(base, s.shape).copy()
+            else:
+                out[name] = rng.standard_normal(s.shape).astype(np.float32)
+        return out
+
+    def _worker(self):
+        rng = np.random.default_rng(self.seed)
+        while not self._stop.is_set():
+            batch = self._make(rng)
+            while not self._stop.is_set():
+                try:
+                    self._q.put(batch, timeout=0.1)
+                    break
+                except queue.Full:
+                    continue
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        if self._thread is None:
+            self._thread = threading.Thread(target=self._worker, daemon=True)
+            self._thread.start()
+        while True:
+            yield self._q.get()
+
+    def close(self):
+        self._stop.set()

@@ -1,0 +1,35 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+On this CPU container the kernels run with interpret=True (the kernel body
+executes in Python for correctness); on TPU set ``interpret=False`` and the
+same BlockSpecs drive real VMEM tiling.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import snapcopy as _k
+
+ON_TPU = jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("tile",))
+def masked_block_copy(src, dst, flags, tile: int = _k.DEFAULT_TILE):
+    return _k.snapcopy(src, dst, flags, tile=tile, interpret=not ON_TPU)
+
+
+@partial(jax.jit, static_argnames=("tile",))
+def dirty_blocks(old, new, tile: int = _k.DEFAULT_TILE):
+    return _k.dirty(old, new, tile=tile, interpret=not ON_TPU)
+
+
+def as_blocks(x, block_elems: int):
+    """View a flat array as (n_blocks, block_elems), padding the tail."""
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % block_elems
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(-1, block_elems)

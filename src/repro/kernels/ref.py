@@ -1,0 +1,19 @@
+"""Pure-jnp oracles for the Pallas kernels."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.snapcopy import COPIED, UNCOPIED
+
+
+def snapcopy_ref(src, dst, flags):
+    """Masked block copy oracle."""
+    mask = (flags == UNCOPIED)[:, None]
+    new_dst = jnp.where(mask, src, dst)
+    new_flags = jnp.where(flags == UNCOPIED, COPIED, flags)
+    return new_dst, new_flags
+
+
+def dirty_ref(old, new):
+    """Block-delta oracle."""
+    return jnp.any(old != new, axis=1).astype(jnp.int32)

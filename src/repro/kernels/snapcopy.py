@@ -1,0 +1,110 @@
+"""Pallas TPU kernels for the snapshot copy hot path.
+
+The paper's optimized operation is the page-table/block copy. On TPU the
+equivalent data movement is an HBM->HBM masked block copy staged through
+VMEM. Two kernels:
+
+  * ``snapcopy``  — copy block b from src to dst iff ``flags[b]`` says
+    UNCOPIED, and flip the flag to COPIED. Blocks already copied by the
+    parent's proactive sync are *skipped entirely* (no HBM read of src),
+    which is the kernel-level analogue of Async-fork's "eliminating
+    unnecessary synchronizations" (§4.2).
+  * ``dirty``     — block-level delta detection between the previous
+    snapshot epoch and the live state; drives incremental snapshots
+    (beyond-paper optimization: persist only blocks that changed).
+
+Tiling: grid is (n_blocks, n_tiles); each tile is a (1, TILE) VMEM-resident
+strip with TILE a multiple of 128*8 so loads/stores are lane/sublane
+aligned for the VPU. Copy is pure data movement — the roofline term is
+HBM bandwidth; the skip predicate is what moves it below 2x state bytes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+UNCOPIED = 0
+COPIED = 2
+
+DEFAULT_TILE = 1024  # elements per VMEM strip (x4B = 4KiB lanes-aligned)
+
+
+def _snapcopy_kernel(flags_ref, src_ref, dst_in_ref, dst_ref, nflags_ref):
+    flag = flags_ref[0]
+
+    @pl.when(flag == UNCOPIED)
+    def _copy():
+        dst_ref[...] = src_ref[...]
+
+    @pl.when(flag != UNCOPIED)
+    def _keep():
+        dst_ref[...] = dst_in_ref[...]
+
+    nflags_ref[0] = jnp.where(flag == UNCOPIED, COPIED, flag)
+
+
+def snapcopy(src, dst, flags, *, tile: int = DEFAULT_TILE,
+             interpret: bool = True):
+    """src, dst: (n_blocks, block_elems) same dtype; flags: (n_blocks,) i32.
+
+    Returns (new_dst, new_flags). Blocks with flag != UNCOPIED keep their
+    existing dst content (the parent already proactively copied them).
+    """
+    n_blocks, elems = src.shape
+    tile = min(tile, elems)
+    assert elems % tile == 0, f"block elems {elems} % tile {tile} != 0"
+    n_tiles = elems // tile
+    grid = (n_blocks, n_tiles)
+    return pl.pallas_call(
+        _snapcopy_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, t: (b,)),
+            pl.BlockSpec((1, tile), lambda b, t: (b, t)),
+            pl.BlockSpec((1, tile), lambda b, t: (b, t)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, tile), lambda b, t: (b, t)),
+            pl.BlockSpec((1,), lambda b, t: (b,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(src.shape, src.dtype),
+            jax.ShapeDtypeStruct(flags.shape, flags.dtype),
+        ],
+        interpret=interpret,
+    )(flags, src, dst)
+
+
+def _dirty_kernel(old_ref, new_ref, flag_ref):
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        flag_ref[0] = jnp.int32(0)
+
+    diff = jnp.any(old_ref[...] != new_ref[...])
+    flag_ref[0] = jnp.where(diff, jnp.int32(1), flag_ref[0])
+
+
+def dirty(old, new, *, tile: int = DEFAULT_TILE, interpret: bool = True):
+    """Per-block delta detection: (n_blocks,) int32, 1 where any element
+    of the block differs. Grid iterations over tiles accumulate into the
+    same flag block (sequential TPU grid semantics)."""
+    n_blocks, elems = old.shape
+    tile = min(tile, elems)
+    assert elems % tile == 0
+    n_tiles = elems // tile
+    return pl.pallas_call(
+        _dirty_kernel,
+        grid=(n_blocks, n_tiles),
+        in_specs=[
+            pl.BlockSpec((1, tile), lambda b, t: (b, t)),
+            pl.BlockSpec((1, tile), lambda b, t: (b, t)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda b, t: (b,)),
+        out_shape=jax.ShapeDtypeStruct((n_blocks,), jnp.int32),
+        interpret=interpret,
+    )(old, new)

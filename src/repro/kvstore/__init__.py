@@ -1,0 +1,5 @@
+from repro.kvstore.store import KVStore
+from repro.kvstore.workload import Workload, QueryEvent
+from repro.kvstore.engine import KVEngine, EngineReport
+
+__all__ = ["KVStore", "Workload", "QueryEvent", "KVEngine", "EngineReport"]

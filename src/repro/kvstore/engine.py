@@ -1,0 +1,145 @@
+"""The serving engine: processes the open-loop query stream, takes BGSAVE
+snapshots with a pluggable snapshotter, and records per-query latency
+split into *normal* vs *snapshot* queries (paper §3 "Profiling Setting").
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.sinks import NullSink, Sink
+from repro.core.snapshot import SnapshotHandle, make_snapshotter
+from repro.kvstore.store import KVStore
+from repro.kvstore.workload import Workload
+
+
+@dataclasses.dataclass
+class EngineReport:
+    """Latency/throughput summary (Figs 4/5/9/10/17-20)."""
+
+    mode: str
+    instance_bytes: int
+    normal_lat: np.ndarray      # seconds
+    snapshot_lat: np.ndarray    # queries arriving inside a snapshot window
+    snapshot_metrics: List[Dict[str, float]]
+    throughput_buckets: np.ndarray  # completed queries per 50 ms bucket
+    duration_s: float
+
+    @staticmethod
+    def _pct(x: np.ndarray, q: float) -> float:
+        return float(np.percentile(x, q)) if x.size else float("nan")
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "normal_p99_ms": self._pct(self.normal_lat, 99) * 1e3,
+            "normal_max_ms": float(self.normal_lat.max() * 1e3) if self.normal_lat.size else float("nan"),
+            "snap_p99_ms": self._pct(self.snapshot_lat, 99) * 1e3,
+            "snap_max_ms": float(self.snapshot_lat.max() * 1e3) if self.snapshot_lat.size else float("nan"),
+            "min_tput_qps": float(self.throughput_buckets.min() / 0.05) if self.throughput_buckets.size else float("nan"),
+            "interruptions": float(sum(m["interruptions"] for m in self.snapshot_metrics)),
+            "out_of_service_ms": float(sum(m["out_of_service_ms"] for m in self.snapshot_metrics)),
+            "fork_ms": float(np.mean([m["fork_ms"] for m in self.snapshot_metrics])) if self.snapshot_metrics else float("nan"),
+            "copy_window_ms": float(np.mean([m["copy_window_ms"] for m in self.snapshot_metrics])) if self.snapshot_metrics else float("nan"),
+        }
+
+
+class KVEngine:
+    """Single-threaded parent process: queries + BGSAVE forks."""
+
+    def __init__(
+        self,
+        store: KVStore,
+        mode: str = "asyncfork",
+        copier_threads: int = 8,
+        persist_bandwidth: Optional[float] = 2e9,
+        copier_duty: Optional[float] = None,
+    ):
+        self.store = store
+        self.mode = mode
+        if copier_duty is None:
+            # single-core host: cap total child-side core steal at ~30%,
+            # split across threads (each added thread shortens the window
+            # near-linearly, as the paper's §5.1 kernel threads do).
+            copier_duty = 0.3 / max(1, copier_threads)
+        # copy granularity == the store's physical block (one leaf = one
+        # "PMD + 512-PTE table"), so block_bytes just needs to cover a leaf
+        self.snapshotter = make_snapshotter(
+            mode,
+            store.provider,
+            block_bytes=store.block_nbytes,
+            copier_threads=copier_threads,
+            copier_duty=copier_duty,
+        )
+        self.persist_bandwidth = persist_bandwidth
+        self._snaps: List[SnapshotHandle] = []
+        self._write_hook = lambda leaf_id: self.snapshotter.before_write(leaf_id)
+
+    def bgsave(self, sink: Optional[Sink] = None) -> SnapshotHandle:
+        if sink is None:
+            sink = NullSink(bandwidth=self.persist_bandwidth)
+        snap = self.snapshotter.fork(sink)
+        self._snaps.append(snap)
+        return snap
+
+    def run(
+        self,
+        workload: Workload,
+        duration_s: float,
+        bgsave_at: Tuple[float, ...] = (0.25,),
+        sink_factory=None,
+    ) -> EngineReport:
+        """Drive the open-loop stream; BGSAVE at given fractions of the run."""
+        store = self.store
+        store.warmup(batch=workload.batch)
+        events = workload.events(store.capacity, duration_s)
+        vals_pool = np.random.rand(64, workload.batch, store.row_width).astype(np.float32)
+        bgsave_times = sorted(f * duration_s for f in bgsave_at)
+        windows: List[Tuple[float, SnapshotHandle]] = []
+
+        lat: List[Tuple[float, float]] = []  # (arrival, latency)
+        t0 = time.perf_counter()
+        bg_i = 0
+        for i, ev in enumerate(events):
+            now = time.perf_counter() - t0
+            # BGSAVE trigger (the parent invokes fork inline — it stalls here)
+            while bg_i < len(bgsave_times) and now >= bgsave_times[bg_i]:
+                sink = sink_factory() if sink_factory else NullSink(self.persist_bandwidth)
+                snap = self.snapshotter.fork(sink)
+                self._snaps.append(snap)
+                windows.append((bgsave_times[bg_i], snap))
+                bg_i += 1
+                now = time.perf_counter() - t0
+            if ev.t > now:
+                time.sleep(ev.t - now)
+            if ev.op == "set":
+                store.set(ev.rows, vals_pool[i % 64], before_write=self._write_hook)
+            else:
+                store.get(ev.rows)
+            lat.append((ev.t, (time.perf_counter() - t0) - ev.t))
+        run_end = time.perf_counter() - t0
+
+        # classify: snapshot queries arrive in [fork_start, persist_done]
+        spans = []
+        for t_start, snap in windows:
+            snap.wait_persisted(120)
+            spans.append((t_start, t_start + snap.metrics.persist_s))
+        normal, snapq = [], []
+        for t_a, l in lat:
+            if any(lo <= t_a <= hi for lo, hi in spans):
+                snapq.append(l)
+            else:
+                normal.append(l)
+        compl = np.sort(np.array([t + l for t, l in lat]))
+        buckets = np.bincount((compl / 0.05).astype(int)) if compl.size else np.array([0])
+        return EngineReport(
+            mode=self.mode,
+            instance_bytes=store.nbytes,
+            normal_lat=np.array(normal),
+            snapshot_lat=np.array(snapq),
+            snapshot_metrics=[s.metrics.summary() for _, s in windows],
+            throughput_buckets=buckets,
+            duration_s=run_end,
+        )

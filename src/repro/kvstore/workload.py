@@ -1,0 +1,70 @@
+"""Open-loop workload generation (paper §3 "Profiling Setting", §6.1).
+
+The paper enhances redis-benchmark to send queries *without waiting for
+replies* (open-loop, [Schroeder'06, Treadmill]) so queueing delay during a
+fork stall is charged to query latency. We pre-generate arrival timestamps
+at a fixed rate and measure ``completion - arrival``.
+
+Patterns mirror Memtier's: uniform random keys, Gaussian (hot center), and
+Zipfian; mixes are given as SET:GET ratios (Fig 12). ``clients`` scales the
+number of concurrent in-flight generators: more clients = more distinct
+keys touched per unit time (Fig 13's effect on proactive-sync burstiness).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class QueryEvent:
+    t: float          # scheduled (open-loop) arrival, seconds from run start
+    op: str           # "set" | "get"
+    rows: np.ndarray  # key rows touched by this query batch
+
+
+@dataclasses.dataclass
+class Workload:
+    """A reproducible query stream."""
+
+    rate_qps: float = 2000.0       # query events per second
+    set_ratio: float = 1.0         # P(op == set)  (1.0 = write-only, Fig 9)
+    pattern: str = "uniform"       # uniform | gaussian | zipf
+    batch: int = 16                # keys per query event (vectorization unit)
+    clients: int = 50              # concurrent open-loop clients (Fig 13)
+    seed: int = 0
+
+    def events(self, capacity: int, duration_s: float) -> List[QueryEvent]:
+        rng = np.random.default_rng(self.seed)
+        n = int(self.rate_qps * duration_s)
+        # Poisson arrivals per client, merged — open-loop clients do not
+        # coordinate, so bursts of up to ``clients`` queries arrive together.
+        per_client = max(1, n // max(1, self.clients))
+        arrivals = []
+        for c in range(self.clients):
+            gaps = rng.exponential(1.0 / (self.rate_qps / self.clients), per_client)
+            arrivals.append(np.cumsum(gaps))
+        t = np.sort(np.concatenate(arrivals))[:n]
+        t = t[t < duration_s]
+        ops = rng.uniform(size=t.shape[0]) < self.set_ratio
+        out: List[QueryEvent] = []
+        for i in range(t.shape[0]):
+            rows = self._keys(rng, capacity)
+            out.append(QueryEvent(float(t[i]), "set" if ops[i] else "get", rows))
+        return out
+
+    def _keys(self, rng: np.random.Generator, capacity: int) -> np.ndarray:
+        """One query = ``batch`` consecutive keys from a pattern-drawn base
+        (a pipelined redis-benchmark request touches one locality region)."""
+        if self.pattern == "uniform":
+            base = int(rng.integers(0, capacity))
+        elif self.pattern == "gaussian":
+            base = int(np.clip(rng.normal(capacity / 2, capacity / 16), 0, capacity - 1))
+        elif self.pattern == "zipf":
+            base = int((rng.zipf(1.2) - 1) % capacity)
+        else:
+            raise ValueError(f"unknown pattern {self.pattern!r}")
+        base = (base // self.batch) * self.batch  # slot-aligned: stable jit shapes
+        return ((base + np.arange(self.batch)) % capacity).astype(np.int64)

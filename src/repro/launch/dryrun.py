@@ -1,0 +1,308 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first lines: jax locks the device count on first init.
+#   512 placeholder host devices back both production meshes (256 single-pod
+#   + 512 multi-pod). Never set this outside this module.
+
+# Multi-pod dry run: prove every (arch x shape x mesh) lowers, compiles,
+# fits per-device memory, and yield the cost/collective numbers §Roofline
+# reads. Failures here are bugs in the framework's sharding.
+#
+# Usage:
+#   python -m repro.launch.dryrun --arch phi3-mini-3.8b --shape train_4k --mesh single
+#   python -m repro.launch.dryrun --all --out results/dryrun   # sweep (resumable)
+# (no ``from __future__``: the XLA_FLAGS lines above must stay first.)
+
+import argparse
+import json
+import subprocess
+import sys
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, SHAPES, get_config
+from repro.data.pipeline import batch_pspecs, make_batch_specs
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import collective_bytes, roofline
+from repro.models import build_model
+from repro.optim.adamw import adamw_init
+from repro.runtime.sharding import resolve_pspec, resolve_tree
+from repro.runtime.steps import make_decode_step, make_prefill_step, make_train_step
+
+
+def _shardings_for(tree_specs, tree_shapes, mesh):
+    return jax.tree_util.tree_map(
+        lambda spec, sds: NamedSharding(mesh, resolve_pspec(spec, tuple(sds.shape), mesh)),
+        tree_specs,
+        tree_shapes,
+        is_leaf=lambda x: isinstance(x, P) or x is None,
+    )
+
+
+def _compile_cell(cfg, shape, mesh):
+    """Lower + compile one (config, shape) on ``mesh``; return compiled."""
+    multi = "pod" in mesh.axis_names
+    model = build_model(cfg)
+    params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    pspecs = model.param_pspecs()
+    param_sh = _shardings_for(pspecs, params_shape, mesh)
+    batch_specs = make_batch_specs(cfg, shape)
+    batch_sh = {
+        k: NamedSharding(mesh, resolve_pspec(s, tuple(batch_specs[k].shape), mesh))
+        for k, s in batch_pspecs(cfg, shape, multi).items()
+    }
+    with mesh:
+        if shape.kind == "train":
+            opt_shape = jax.eval_shape(adamw_init, params_shape)
+            opt_sh = type(opt_shape)(
+                step=NamedSharding(mesh, P()),
+                m=_shardings_for(pspecs, opt_shape.m, mesh),
+                v=_shardings_for(pspecs, opt_shape.v, mesh),
+            )
+            step = make_train_step(model)
+            jitted = jax.jit(
+                step,
+                in_shardings=(param_sh, opt_sh, batch_sh),
+                out_shardings=(param_sh, opt_sh, NamedSharding(mesh, P())),
+                donate_argnums=(0, 1),
+            )
+            lowered = jitted.lower(params_shape, opt_shape, batch_specs)
+        elif shape.kind == "prefill":
+            step = make_prefill_step(model, cfg, shape)
+            jitted = jax.jit(step, in_shardings=(param_sh, batch_sh))
+            lowered = jitted.lower(params_shape, batch_specs)
+        else:  # decode
+            B = shape.global_batch
+            cache_shape = jax.eval_shape(lambda: model.init_cache(B, shape.seq_len))
+            cache_specs = (
+                model.cache_pspecs(B) if cfg.family == "hybrid"
+                else model.cache_pspecs()
+            )
+            cache_sh = _shardings_for(cache_specs, cache_shape, mesh)
+            step = make_decode_step(model, cfg, shape)
+            bdim = ("pod", "data") if multi else ("data",)
+            logits_sh = NamedSharding(
+                mesh, resolve_pspec(P(bdim, None, "model"),
+                                    (B, 1, cfg.vocab_padded), mesh))
+            jitted = jax.jit(
+                step,
+                in_shardings=(param_sh, cache_sh, batch_sh),
+                out_shardings=(logits_sh, cache_sh),
+                donate_argnums=(1,),
+            )
+            lowered = jitted.lower(params_shape, cache_shape, batch_specs)
+        return lowered.compile()
+
+
+def _cost_of(compiled):
+    cost = compiled.cost_analysis() or {}
+    colls = collective_bytes(compiled.as_text())
+    return (float(cost.get("flops", 0.0)),
+            float(cost.get("bytes accessed", 0.0)),
+            float(sum(colls.values())), colls)
+
+
+def _depth_points(cfg) -> tuple:
+    """Two reduced depths for per-layer cost extrapolation. XLA's HLO cost
+    analysis counts a while-loop (scan) body ONCE, so full-depth flops are
+    underreported; compiling the same cell at depths L1 < L2 and linearly
+    extrapolating recovers exact per-layer cost incl. remat/collectives."""
+    if cfg.family == "ssm":
+        return 8, 16       # one / two full [7 mLSTM + 1 sLSTM] groups
+    if cfg.family == "hybrid":
+        p = cfg.shared_attn_every or 1
+        return p, 2 * p    # one / two mamba groups + shared block
+    lo = max(1, cfg.first_dense_layers)
+    return lo, lo + 1
+
+
+def _with_depth(cfg, L: int):
+    kw = {"n_layers": L, "unroll_layers": True}
+    if cfg.family == "audio":
+        kw["encoder_layers"] = L
+    import dataclasses as _dc
+
+    return _dc.replace(cfg, **kw)
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str) -> Dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = cfg.supports(shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                "status": "skipped", "reason": why}
+
+    multi = mesh_kind == "multi"
+    mesh = make_production_mesh(multi_pod=multi)
+    chips = mesh.size
+    t0 = time.time()
+
+    # full-depth compile: memory fit + the deliverable artifact
+    compiled = _compile_cell(cfg, shape, mesh)
+    mem = compiled.memory_analysis()
+    raw_flops, raw_bytes, raw_cbytes, colls = _cost_of(compiled)
+
+    # depth extrapolation for loop-aware cost (see _depth_points)
+    L1, L2 = _depth_points(cfg)
+    f1, b1, c1, _ = _cost_of(_compile_cell(_with_depth(cfg, L1), shape, mesh))
+    f2, b2, c2, _ = _cost_of(_compile_cell(_with_depth(cfg, L2), shape, mesh))
+    L = cfg.n_layers
+    scale = (L - L1) / max(1, (L2 - L1))
+    flops = f1 + (f2 - f1) * scale
+    nbytes = b1 + (b2 - b1) * scale
+    cbytes = c1 + (c2 - c1) * scale
+
+    # time-recurrence FLOPs (SSM/hybrid): invisible to HLO cost analysis
+    model = build_model(cfg)
+    rec_flops = 0.0
+    if hasattr(model, "recurrence_flops_per_device"):
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        dp = sizes.get("data", 1) * sizes.get("pod", 1)
+        tp = sizes.get("model", 1)
+        B = shape.global_batch
+        S = shape.seq_len if shape.kind != "decode" else 1
+        mult = 3.0 if shape.kind == "train" else 1.0  # fwd+bwd recompute
+        rec_flops = mult * model.recurrence_flops_per_device(B, S, dp, tp)
+        flops += rec_flops
+
+    # MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE); decode D = batch.
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        d_tokens = shape.global_batch * shape.seq_len
+        model_flops = 6.0 * n_active * d_tokens
+    elif shape.kind == "prefill":
+        d_tokens = shape.global_batch * shape.seq_len
+        model_flops = 2.0 * n_active * d_tokens
+    else:
+        model_flops = 2.0 * n_active * shape.global_batch
+
+    rl = roofline(flops, nbytes, cbytes, chips=chips,
+                  model_flops_global=model_flops)
+    per_dev_bytes = (
+        mem.argument_size_in_bytes + mem.output_size_in_bytes
+        - mem.alias_size_in_bytes + mem.temp_size_in_bytes
+    )
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_kind,
+        "status": "ok",
+        "chips": chips,
+        "compile_s": round(time.time() - t0, 1),
+        "flops_per_dev": flops,
+        "bytes_per_dev": nbytes,
+        "collective_bytes_per_dev": cbytes,
+        "raw_loop_uncorrected": {
+            "flops": raw_flops, "bytes": raw_bytes, "coll_bytes": raw_cbytes,
+        },
+        "depth_points": [L1, L2],
+        "collectives": colls,
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "peak_bytes_per_dev": per_dev_bytes,
+            "fits_16GB": bool(per_dev_bytes < 16e9),
+        },
+        "roofline": rl,
+        "param_count": cfg.param_count(),
+        "active_param_count": n_active,
+    }
+    return result
+
+
+def _print_cell(r: Dict) -> None:
+    if r["status"] != "ok":
+        print(f"[dryrun] {r['arch']} x {r['shape']} x {r['mesh']}: "
+              f"SKIP ({r.get('reason','')})")
+        return
+    m = r["memory"]
+    rl = r["roofline"]
+    print(
+        f"[dryrun] {r['arch']} x {r['shape']} x {r['mesh']}: OK "
+        f"({r['chips']} chips, compile {r['compile_s']}s)\n"
+        f"  mem/dev: args={m['argument_bytes']/1e9:.2f}GB "
+        f"temp={m['temp_bytes']/1e9:.2f}GB peak~{m['peak_bytes_per_dev']/1e9:.2f}GB "
+        f"fits16GB={m['fits_16GB']}\n"
+        f"  roofline: compute={rl['compute_s']*1e3:.2f}ms "
+        f"memory={rl['memory_s']*1e3:.2f}ms collective={rl['collective_s']*1e3:.2f}ms "
+        f"dominant={rl['dominant']} frac={rl.get('roofline_frac', 0):.3f}"
+    )
+
+
+def sweep(out_dir: str, mesh_kinds=("single", "multi"), archs=None,
+          shapes=None, timeout_s: int = 1800) -> None:
+    """Resumable full sweep; each cell runs in a fresh subprocess."""
+    os.makedirs(out_dir, exist_ok=True)
+    archs = archs or ARCH_IDS
+    shapes = shapes or list(SHAPES)
+    for mesh_kind in mesh_kinds:
+        for arch in archs:
+            for shape in shapes:
+                path = os.path.join(out_dir, f"{arch}__{shape}__{mesh_kind}.json")
+                if os.path.exists(path):
+                    continue
+                cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                       "--arch", arch, "--shape", shape, "--mesh", mesh_kind,
+                       "--json", path]
+                print(f"[sweep] {arch} x {shape} x {mesh_kind} ...", flush=True)
+                env = dict(os.environ)
+                env["PYTHONPATH"] = env.get("PYTHONPATH", "src")
+                try:
+                    p = subprocess.run(cmd, capture_output=True, text=True,
+                                       timeout=timeout_s, env=env)
+                    if p.returncode != 0:
+                        with open(path, "w") as f:
+                            json.dump({"arch": arch, "shape": shape,
+                                       "mesh": mesh_kind, "status": "error",
+                                       "stderr": p.stderr[-4000:]}, f, indent=1)
+                        print(f"[sweep]   ERROR (rc={p.returncode})", flush=True)
+                    else:
+                        print(p.stdout.strip().splitlines()[-1] if p.stdout else "",
+                              flush=True)
+                except subprocess.TimeoutExpired:
+                    with open(path, "w") as f:
+                        json.dump({"arch": arch, "shape": shape,
+                                   "mesh": mesh_kind, "status": "timeout"}, f)
+                    print("[sweep]   TIMEOUT", flush=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi"], default="single")
+    ap.add_argument("--json", default=None, help="write result JSON here")
+    ap.add_argument("--all", action="store_true", help="sweep all cells")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    if args.all:
+        sweep(args.out)
+        return
+    if not args.arch or not args.shape:
+        ap.error("--arch and --shape required (or --all)")
+    try:
+        result = run_cell(args.arch, args.shape, args.mesh)
+    except Exception:
+        result = {"arch": args.arch, "shape": args.shape, "mesh": args.mesh,
+                  "status": "error", "stderr": traceback.format_exc()[-4000:]}
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(result, f, indent=1)
+    _print_cell(result)
+    if result["status"] == "error":
+        print(result["stderr"], file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,98 @@
+"""Aggregate dry-run JSON cells into the §Dry-run / §Roofline tables.
+
+Usage: PYTHONPATH=src python -m repro.launch.report results/dryrun_baseline
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+from typing import Dict, List
+
+
+def load(out_dir: str) -> List[Dict]:
+    rows = []
+    for f in sorted(os.listdir(out_dir)):
+        if f.endswith(".json"):
+            with open(os.path.join(out_dir, f)) as fh:
+                rows.append(json.load(fh))
+    return rows
+
+
+def fmt_ms(s: float) -> str:
+    return f"{s*1e3:.1f}"
+
+
+def table(rows: List[Dict], mesh: str = "single") -> str:
+    out = [
+        "| arch | shape | t_comp ms | t_mem ms | t_coll ms | dominant | "
+        "6ND/HLO | roofline | mem/dev GB | fits |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r.get("mesh") != mesh:
+            continue
+        if r["status"] == "skipped":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                       f"skip: {r['reason'][:40]} | — | — | — | — |")
+            continue
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                       f"{r['status'].upper()} | — | — | — | — |")
+            continue
+        rl = r["roofline"]
+        m = r["memory"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_ms(rl['compute_s'])} | "
+            f"{fmt_ms(rl['memory_s'])} | {fmt_ms(rl['collective_s'])} | "
+            f"{rl['dominant'].replace('_s','')} | "
+            f"{rl.get('useful_flops_frac', 0):.2f} | "
+            f"{rl.get('roofline_frac', 0):.3f} | "
+            f"{m['peak_bytes_per_dev']/1e9:.1f} | "
+            f"{'Y' if m['fits_16GB'] else 'N'} |"
+        )
+    return "\n".join(out)
+
+
+def summary(rows: List[Dict]) -> str:
+    ok = [r for r in rows if r["status"] == "ok"]
+    skip = [r for r in rows if r["status"] == "skipped"]
+    bad = [r for r in rows if r["status"] not in ("ok", "skipped")]
+    lines = [f"cells: {len(rows)} ok={len(ok)} skipped={len(skip)} "
+             f"failed={len(bad)}"]
+    for r in bad:
+        lines.append(f"  FAILED {r['arch']} x {r['shape']} x {r['mesh']}")
+    fits = sum(1 for r in ok if r["memory"]["fits_16GB"])
+    lines.append(f"fits 16GB/dev: {fits}/{len(ok)}")
+    if ok:
+        worst = min(
+            (r for r in ok if r["shape"] == "train_4k"),
+            key=lambda r: r["roofline"].get("roofline_frac", 0),
+            default=None,
+        )
+        if worst:
+            lines.append(
+                f"worst train roofline: {worst['arch']} "
+                f"({worst['roofline'].get('roofline_frac', 0):.3f})"
+            )
+        coll = max(
+            ok, key=lambda r: r["roofline"]["collective_s"]
+            / max(1e-12, r["roofline"]["bound_s"]),
+        )
+        lines.append(f"most collective-bound: {coll['arch']} x {coll['shape']}")
+    return "\n".join(lines)
+
+
+def main():
+    out_dir = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun_baseline"
+    rows = load(out_dir)
+    print(summary(rows))
+    print()
+    for mesh in ("single", "multi"):
+        print(f"### mesh: {mesh}\n")
+        print(table(rows, mesh))
+        print()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,92 @@
+"""Roofline terms from a compiled dry-run artifact.
+
+  compute    = HLO_FLOPs / (chips x 197 TF bf16)
+  memory     = HLO_bytes / (chips x 819 GB/s)
+  collective = collective_bytes / (chips x 50 GB/s ICI)
+
+cost_analysis() provides flops/bytes; collective bytes are NOT there, so
+we parse the optimized HLO text and sum operand sizes of all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute ops.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, Optional
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+_COLLECTIVE_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w\.\-]+\s*=\s*"
+    r"(?:\(([^)]*)\)|((?:\w+)\[[^\]]*\](?:\{[^}]*\})?))\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute|"
+    r"all-gather-start|all-reduce-start|collective-permute-start)\(",
+    re.MULTILINE,
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result sizes of collective ops in HLO text, per op kind.
+
+    The result shape of a collective is the per-device output; we count it
+    once per op as the bytes crossing the interconnect per device (a
+    standard, if slightly conservative, approximation for ring algorithms
+    where each device sends ~its shard (N-1)/N times).
+    """
+    out: Dict[str, int] = {}
+    for m in _COLLECTIVE_RE.finditer(hlo_text):
+        shape_str = m.group(1) or m.group(2) or ""
+        kind = m.group(3).replace("-start", "")
+        out[kind] = out.get(kind, 0) + _shape_bytes(shape_str)
+    return out
+
+
+def roofline(
+    flops_per_dev: float,
+    bytes_per_dev: float,
+    coll_bytes_per_dev: float,
+    *,
+    chips: int,
+    model_flops_global: Optional[float] = None,
+) -> Dict[str, float]:
+    """Inputs are PER-DEVICE (cost_analysis() reports the per-device SPMD
+    module; the HLO collective parser sums per-device result bytes)."""
+    t_compute = flops_per_dev / PEAK_FLOPS_BF16
+    t_memory = bytes_per_dev / HBM_BW
+    t_coll = coll_bytes_per_dev / ICI_BW
+    terms = {"compute_s": t_compute, "memory_s": t_memory, "collective_s": t_coll}
+    dominant = max(terms, key=terms.get)
+    out = dict(terms)
+    out["dominant"] = dominant
+    out["bound_s"] = terms[dominant]
+    if model_flops_global:
+        out["model_flops"] = model_flops_global
+        out["useful_flops_frac"] = model_flops_global / max(
+            1.0, flops_per_dev * chips
+        )
+        # roofline fraction: useful work at peak over the bound time
+        out["roofline_frac"] = (
+            model_flops_global / (chips * PEAK_FLOPS_BF16)
+        ) / max(1e-12, terms[dominant])
+    return out

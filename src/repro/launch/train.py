@@ -1,0 +1,76 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+On real hardware this runs the sharded train step on the production mesh;
+on this CPU container use ``--local`` (reduced config, host mesh) — the
+code path (mesh, shard_map MoE, checkpoint manager) is identical.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import TrainSnapshotManager
+from repro.configs import ARCH_IDS, SHAPES, get_config
+from repro.configs.base import ShapeCfg
+from repro.data.pipeline import SyntheticPipeline
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models import build_model
+from repro.runtime.steps import init_train_state, make_train_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, required=True)
+    ap.add_argument("--shape", choices=list(SHAPES), default="train_4k")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--local", action="store_true",
+                    help="reduced config on the host mesh (CPU)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--ckpt-mode", default="asyncfork",
+                    choices=["blocking", "asyncfork"])
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default="results/ckpts")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.local:
+        cfg = cfg.reduced()
+        mesh = make_host_mesh()
+        shape = ShapeCfg("local", seq_len=64, global_batch=4, kind="train")
+    else:
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+        shape = SHAPES[args.shape]
+
+    model = build_model(cfg)
+    pipe = SyntheticPipeline(cfg, shape, seed=0)
+    data = iter(pipe)
+    mgr = TrainSnapshotManager(args.ckpt_dir, mode=args.ckpt_mode)
+
+    with mesh:
+        params, opt = init_train_state(model, jax.random.PRNGKey(0))
+        fn = make_train_step(model)
+        donating = jax.jit(fn, donate_argnums=(0, 1))
+        nondonating = jax.jit(fn)
+        for step in range(args.steps):
+            batch = next(data)
+            t0 = time.perf_counter()
+            if args.ckpt_every and step and step % args.ckpt_every == 0:
+                mgr.save(step, params, opt)
+            f = nondonating if mgr.snapshot_active() else donating
+            params, opt, loss = f(params, opt, batch)
+            loss.block_until_ready()
+            print(f"step {step:4d} loss {float(loss):.4f} "
+                  f"({(time.perf_counter()-t0)*1e3:.0f} ms)")
+    pipe.close()
+    mgr.wait_all()
+    if mgr.stall_log:
+        print("checkpoint stalls:", mgr.summary())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,275 @@
+"""Attention: GQA (chunked, exact), KV-cache decode, and DeepSeek MLA.
+
+Design notes (TPU adaptation):
+  * Prefill/train attention is q-chunked: scores are materialized only for
+    a (chunk × S) tile, never (S × S) — this is the flash-attention memory
+    shape rethought for XLA/TPU (the MXU sees aligned (chunk, hd) @ (hd, S)
+    matmuls; VMEM holds one tile). Exact softmax per q row (full K range),
+    so no online-softmax state is needed.
+  * Decode reads the KV cache (B, S_max, Hkv, hd) and does two skinny
+    matmuls — memory-bound by design; roofline's memory term covers it.
+  * MLA decode uses the absorbed form: scores against the compressed
+    c_kv cache (rank r), never expanding K/V to per-head tensors.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro import perf_flags
+from repro.models.common import (
+    apply_mrope,
+    apply_rope,
+    dense_init,
+    heads_hint,
+    rms_norm,
+    shard_hint,
+)
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------- #
+# GQA                                                                    #
+# --------------------------------------------------------------------- #
+def init_gqa(key, cfg, dtype):
+    d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(k1, (d, hq * hd), 0, dtype),
+        "wk": dense_init(k2, (d, hkv * hd), 0, dtype),
+        "wv": dense_init(k3, (d, hkv * hd), 0, dtype),
+        "wo": dense_init(k4, (hq * hd, d), 0, dtype),
+    }
+
+
+def gqa_pspecs(stacked: bool):
+    """Shard the head dim over "model" (TP), d_model over "data" (FSDP).
+    KV projections stay replicated over "model" when Hkv < TP degree —
+    the divisibility-aware launcher downgrades those specs."""
+    pre = ("layers",) if stacked else ()
+    return {
+        "wq": P(*pre, "data", "model"),
+        "wk": P(*pre, "data", "model"),
+        "wv": P(*pre, "data", "model"),
+        "wo": P(*pre, "model", "data"),
+    }
+
+
+def _chunked_attn(q, k, v, *, causal: bool, q_offset=0, chunk: int = 1024,
+                  kv_len_mask: Optional[int] = None):
+    """Exact attention, q-chunked. q: (B,Sq,Hq,hd) k/v: (B,Sk,Hkv,hd)."""
+    B, Sq, Hq, hd = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    scale = hd ** -0.5
+    qg = q.reshape(B, Sq, Hkv, G, hd)
+    n_chunks = max(1, -(-Sq // chunk))
+    pad = n_chunks * chunk - Sq
+    if pad:
+        qg = jnp.pad(qg, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+    qg = qg.reshape(B, n_chunks, chunk, Hkv, G, hd)
+
+    kv_pos = jnp.arange(Sk)
+
+    def one_chunk(c, qc):
+        # qc: (B, chunk, Hkv, G, hd); c is a STATIC chunk index (python
+        # loop, not lax.map: every chunk's cost is visible to the dry-run)
+        scores = jnp.einsum("bqhgd,bkhd->bhgqk", qc.astype(jnp.float32),
+                            k.astype(jnp.float32)) * scale
+        q_pos = q_offset + c * chunk + jnp.arange(chunk)
+        mask = jnp.ones((chunk, Sk), bool)
+        if causal:
+            mask &= kv_pos[None, :] <= q_pos[:, None]
+        if kv_len_mask is not None:
+            mask &= (kv_pos < kv_len_mask)[None, :]
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1)
+        if perf_flags.PV_BF16:
+            # PV in the input dtype: halves HBM traffic + collective bytes
+            # of the attention block (softmax stays f32) — §Perf iteration
+            out = jnp.einsum("bhgqk,bkhd->bqhgd", probs.astype(q.dtype), v)
+        else:
+            out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v.astype(jnp.float32))
+        return out.astype(q.dtype)
+
+    vd = v.shape[-1]
+    outs = [one_chunk(c, qg[:, c]) for c in range(n_chunks)]
+    out = jnp.stack(outs, 1).reshape(B, n_chunks * chunk, Hkv, G, vd)
+    if pad:
+        out = out[:, :Sq]
+    return out.reshape(B, Sq, Hq, vd)
+
+
+def gqa_forward(params, x, cfg, *, causal: bool = True, positions=None,
+                mrope_positions=None, chunk: int = 1024):
+    """Full-sequence attention (train / prefill). Returns (out, (k, v)).
+
+    Perf note (§Perf iteration 2): K/V are expanded to FLAT q-head space
+    and constrained head-sharded before the score einsum. Without this,
+    the SP residual's seq-sharding propagates into K, and XLA partitions
+    the score contraction over seq — emitting per-layer f32 all-reduces of
+    (B, H, chunk, S) partial sums. Expanding + head-sharding turns that
+    into small bf16 K/V reshards instead."""
+    B, S, d = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = (x @ params["wq"]).reshape(B, S, hq, hd)
+    k = (x @ params["wk"]).reshape(B, S, hkv, hd)
+    v = (x @ params["wv"]).reshape(B, S, hkv, hd)
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    if cfg.mrope and mrope_positions is not None:
+        q = apply_mrope(q, mrope_positions, cfg.rope_theta)
+        k = apply_mrope(k, mrope_positions, cfg.rope_theta)
+    else:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    kv = (k, v)
+    if perf_flags.ATTN_QSEQ:
+        # q seq-sharded over "model", K/V replicated (one bf16 all-gather
+        # per layer) — the score contraction is fully local, so the
+        # baseline's per-layer f32 (B,H,chunk,S) partial-sum all-reduces
+        # disappear. Works for ANY kv-head count (no divisibility needs).
+        q = shard_hint(q, P(("pod", "data"), "model", None, None))
+        k = shard_hint(k, P(("pod", "data"), None, None, None))
+        v = shard_hint(v, P(("pod", "data"), None, None, None))
+    elif perf_flags.ATTN_TP:
+        # classic TP attention: q AND k/v head-sharded; the score/PV
+        # contractions are fully local per head shard. Divisibility-aware:
+        # kv-head counts below the TP degree keep the baseline layout.
+        q = shard_hint(q, P(("pod", "data"), None, "model", None))
+        k = shard_hint(k, P(("pod", "data"), None, "model", None))
+        v = shard_hint(v, P(("pod", "data"), None, "model", None))
+    elif perf_flags.ATTN_FLAT:
+        G = hq // hkv
+        if G > 1:
+            k = jnp.repeat(k, G, axis=2)   # flat-head GQA (view per shard)
+            v = jnp.repeat(v, G, axis=2)
+        q = heads_hint(q)
+        k = heads_hint(k)
+        v = heads_hint(v)
+    else:
+        q = shard_hint(q, P(("pod", "data"), None, "model", None))
+    out = _chunked_attn(q, k, v, causal=causal, chunk=chunk)
+    return out.reshape(B, S, hq * hd) @ params["wo"], kv
+
+
+def gqa_decode(params, x, cache_k, cache_v, pos, cfg, *, mrope_positions=None):
+    """One-token decode. x: (B,1,d); cache: (B,Smax,Hkv,hd); pos: (B,)."""
+    B, _, d = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = (x @ params["wq"]).reshape(B, 1, hq, hd)
+    k = (x @ params["wk"]).reshape(B, 1, hkv, hd)
+    v = (x @ params["wv"]).reshape(B, 1, hkv, hd)
+    if cfg.mrope and mrope_positions is not None:
+        q = apply_mrope(q, mrope_positions, cfg.rope_theta)
+        k = apply_mrope(k, mrope_positions, cfg.rope_theta)
+    else:
+        q = apply_rope(q, pos[:, None], cfg.rope_theta)
+        k = apply_rope(k, pos[:, None], cfg.rope_theta)
+    # masked in-place cache update at pos: elementwise, so it partitions
+    # cleanly when the cache's SEQ dim is sharded (a dynamic_update_slice
+    # at a traced index would force an all-gather of the shard)
+    Smax_ = cache_k.shape[1]
+    at_pos = (jnp.arange(Smax_)[None, :] == pos[:, None])[:, :, None, None]
+    cache_k = jnp.where(at_pos, k[:, 0:1].astype(cache_k.dtype), cache_k)
+    cache_v = jnp.where(at_pos, v[:, 0:1].astype(cache_v.dtype), cache_v)
+    Smax = cache_k.shape[1]
+    G = hq // hkv
+    qg = q.reshape(B, hkv, G, hd)
+    scores = jnp.einsum("bhgd,bshd->bhgs", qg.astype(jnp.float32),
+                        cache_k.astype(jnp.float32)) * (hd ** -0.5)
+    valid = jnp.arange(Smax)[None, :] <= pos[:, None]          # (B, Smax)
+    scores = jnp.where(valid[:, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", probs, cache_v.astype(jnp.float32))
+    out = out.reshape(B, 1, hq * hd).astype(x.dtype)
+    return out @ params["wo"], cache_k, cache_v
+
+
+# --------------------------------------------------------------------- #
+# DeepSeek MLA                                                           #
+# --------------------------------------------------------------------- #
+def init_mla(key, cfg, dtype):
+    d, h, hd = cfg.d_model, cfg.n_heads, cfg.hd
+    r, rr, vd = cfg.kv_lora_rank, cfg.rope_head_dim, cfg.v_head_dim or hd
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": dense_init(ks[0], (d, h * (hd + rr)), 0, dtype),
+        "w_dkv": dense_init(ks[1], (d, r), 0, dtype),          # compress
+        "w_kr": dense_init(ks[2], (d, rr), 0, dtype),          # shared rope key
+        "w_uk": dense_init(ks[3], (r, h * hd), 0, dtype),      # expand K
+        "w_uv": dense_init(ks[4], (r, h * vd), 0, dtype),      # expand V
+        "wo": dense_init(ks[5], (h * vd, d), 0, dtype),
+        "norm_ckv": jnp.ones((r,), dtype),
+    }
+
+
+def mla_pspecs(stacked: bool):
+    pre = ("layers",) if stacked else ()
+    return {
+        "wq": P(*pre, "data", "model"),
+        "w_dkv": P(*pre, "data", None),
+        "w_kr": P(*pre, "data", None),
+        "w_uk": P(*pre, None, "model"),
+        "w_uv": P(*pre, None, "model"),
+        "wo": P(*pre, "model", "data"),
+        "norm_ckv": P(*pre, None),
+    }
+
+
+def mla_forward(params, x, cfg, *, chunk: int = 1024):
+    """Train/prefill MLA (expanded form). Returns (out, (c_kv, k_rope))."""
+    B, S, d = x.shape
+    h, hd = cfg.n_heads, cfg.hd
+    r, rr, vd = cfg.kv_lora_rank, cfg.rope_head_dim, cfg.v_head_dim or cfg.hd
+    pos = jnp.arange(S)[None, :]
+    q = (x @ params["wq"]).reshape(B, S, h, hd + rr)
+    q_nope, q_rope = q[..., :hd], q[..., hd:]
+    q_rope = apply_rope(q_rope, pos, cfg.rope_theta)
+    c_kv = rms_norm(x @ params["w_dkv"], params["norm_ckv"])   # (B,S,r)
+    k_rope = apply_rope((x @ params["w_kr"])[:, :, None, :], pos, cfg.rope_theta)
+    k_nope = (c_kv @ params["w_uk"]).reshape(B, S, h, hd)
+    v = (c_kv @ params["w_uv"]).reshape(B, S, h, vd)
+    # fold the shared rope key into each head by concatenation
+    k_full = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (B, S, h, rr))], -1)
+    q_full = jnp.concatenate([q_nope, q_rope], -1)
+    out = _chunked_attn(q_full, k_full, v, causal=True, chunk=chunk)
+    return out.reshape(B, S, h * vd) @ params["wo"], (c_kv, k_rope[:, :, 0, :])
+
+
+def mla_decode(params, x, cache_ckv, cache_kr, pos, cfg):
+    """Absorbed-form decode against the compressed cache.
+
+    cache_ckv: (B, Smax, r); cache_kr: (B, Smax, rr)."""
+    B = x.shape[0]
+    h, hd = cfg.n_heads, cfg.hd
+    r, rr, vd = cfg.kv_lora_rank, cfg.rope_head_dim, cfg.v_head_dim or cfg.hd
+    q = (x @ params["wq"]).reshape(B, 1, h, hd + rr)
+    q_nope, q_rope = q[..., :hd], q[..., hd:]
+    q_rope = apply_rope(q_rope, pos[:, None], cfg.rope_theta)
+    c_new = rms_norm(x @ params["w_dkv"], params["norm_ckv"])  # (B,1,r)
+    kr_new = apply_rope((x @ params["w_kr"])[:, :, None, :], pos[:, None], cfg.rope_theta)[:, :, 0]
+    at_pos = (jnp.arange(cache_ckv.shape[1])[None, :] == pos[:, None])[:, :, None]
+    cache_ckv = jnp.where(at_pos, c_new.astype(cache_ckv.dtype), cache_ckv)
+    cache_kr = jnp.where(at_pos, kr_new.astype(cache_kr.dtype), cache_kr)
+    # absorb W_uk into q: q_r = q_nope @ W_uk[per head]  -> (B,h,r)
+    w_uk = params["w_uk"].reshape(r, h, hd)
+    q_r = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0].astype(jnp.float32),
+                     w_uk.astype(jnp.float32))
+    scores = jnp.einsum("bhr,bsr->bhs", q_r, cache_ckv.astype(jnp.float32))
+    scores += jnp.einsum("bhd,bsd->bhs", q_rope[:, 0].astype(jnp.float32),
+                         cache_kr.astype(jnp.float32))
+    scores *= (hd + rr) ** -0.5
+    Smax = cache_ckv.shape[1]
+    valid = jnp.arange(Smax)[None, :] <= pos[:, None]
+    scores = jnp.where(valid[:, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out_r = jnp.einsum("bhs,bsr->bhr", probs, cache_ckv.astype(jnp.float32))
+    w_uv = params["w_uv"].reshape(r, h, vd)
+    out = jnp.einsum("bhr,rhv->bhv", out_r, w_uv.astype(jnp.float32))
+    out = out.reshape(B, 1, h * vd).astype(x.dtype)
+    return out @ params["wo"], cache_ckv, cache_kr

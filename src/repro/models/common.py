@@ -1,0 +1,255 @@
+"""Shared model components: norms, RoPE/M-RoPE, SwiGLU, initializers.
+
+All models are pure-functional JAX: params are plain dict pytrees created
+by ``init`` functions, and every model exposes a parallel pytree of
+``PartitionSpec`` ("logical sharding") consumed by the launcher.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+
+def param_dtype(cfg) -> jnp.dtype:
+    return jnp.dtype(cfg.dtype)
+
+
+def dense_init(key, shape, in_axis: int = 0, dtype=jnp.bfloat16):
+    fan_in = shape[in_axis] if isinstance(in_axis, int) else int(np.prod([shape[a] for a in in_axis]))
+    scale = 1.0 / np.sqrt(max(1, fan_in))
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.bfloat16):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# --------------------------------------------------------------------- #
+# norms                                                                  #
+# --------------------------------------------------------------------- #
+def rms_norm(x, weight, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * weight.astype(jnp.float32)).astype(dt)
+
+
+# --------------------------------------------------------------------- #
+# rotary embeddings                                                      #
+# --------------------------------------------------------------------- #
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                        # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                  # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions_thw, theta: float, sections=(1, 1, 2)):
+    """Qwen2-VL multimodal RoPE: the head dim is split into (t, h, w)
+    sections, each rotated by its own position stream.
+
+    x: (B, S, H, hd); positions_thw: (3, B, S). ``sections`` are relative
+    weights over hd/2 frequency slots (qwen2-vl uses 16/24/24 of 64)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    total = sum(sections)
+    cuts = [half * s // total for s in sections]
+    cuts[-1] = half - sum(cuts[:-1])
+    freqs = rope_freqs(hd, theta)                        # (half,)
+    # per-frequency-slot position stream selection
+    sel = jnp.concatenate(
+        [jnp.full((c,), i, jnp.int32) for i, c in enumerate(cuts)]
+    )                                                     # (half,)
+    pos = positions_thw.astype(jnp.float32)              # (3, B, S)
+    # gather the right stream per slot: (B, S, half)
+    pos_slot = jnp.einsum("tbs,th->bsh", pos, jax.nn.one_hot(sel, 3).T)
+    angles = pos_slot * freqs[None, None, :]
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------- #
+# FFN                                                                    #
+# --------------------------------------------------------------------- #
+def swiglu(x, w_gate, w_up, w_down):
+    h = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    return h @ w_down
+
+
+def init_swiglu(key, d_model: int, d_ff: int, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, (d_model, d_ff), 0, dtype),
+        "w_up": dense_init(k2, (d_model, d_ff), 0, dtype),
+        "w_down": dense_init(k3, (d_ff, d_model), 0, dtype),
+    }
+
+
+def swiglu_pspecs(stacked: bool):
+    """FFN weights: TP-shard d_ff over "model", FSDP-shard d_model over
+    "data" (2D sharding keeps the 123B config under per-chip HBM)."""
+    pre = ("layers",) if stacked else ()
+    return {
+        "w_gate": P(*pre, "data", "model"),
+        "w_up": P(*pre, "data", "model"),
+        "w_down": P(*pre, "model", "data"),
+    }
+
+
+def shard_hint(x, spec: P):
+    """with_sharding_constraint that is a no-op outside a real mesh.
+    Axis names not present in the ambient mesh are dropped (e.g. "pod" on
+    the single-pod mesh), and dims that don't divide their assigned axes
+    are replicated instead — so model code can write one logical spec."""
+    try:
+        from jax.interpreters import pxla
+
+        mesh = pxla.thread_resources.env.physical_mesh
+        if mesh.empty or mesh.size == 1:
+            return x
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        entries = list(spec) + [None] * (x.ndim - len(spec))
+        out = []
+        for dim, entry in zip(x.shape, entries):
+            if entry is None:
+                out.append(None)
+                continue
+            names = tuple(n for n in (entry if isinstance(entry, tuple) else (entry,))
+                          if n in sizes)
+            if not names:
+                out.append(None)
+                continue
+            prod = 1
+            for n in names:
+                prod *= sizes[n]
+            if dim % prod != 0:
+                out.append(None)
+            else:
+                out.append(names if len(names) > 1 else names[0])
+        return jax.lax.with_sharding_constraint(
+            x, jax.sharding.NamedSharding(mesh, P(*out)))
+    except Exception:
+        return x
+
+
+def residual_hint(x):
+    """Sequence parallelism for the residual stream: (B, S, d) sharded
+    batch->(pod,data) AND seq->model, so remat-saved per-layer residuals
+    and the logits pipeline are 256-way sharded instead of 16-way. Falls
+    back to batch-only sharding when S doesn't divide the model axis
+    (decode steps)."""
+    try:
+        from jax.interpreters import pxla
+
+        mesh = pxla.thread_resources.env.physical_mesh
+        if mesh.empty or mesh.size == 1:
+            return x
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        bdim = ("pod", "data") if "pod" in sizes else ("data",)
+        seq_ok = (
+            x.ndim >= 2
+            and "model" in sizes
+            and x.shape[1] % sizes["model"] == 0
+            and x.shape[1] >= sizes["model"]
+        )
+        spec = P(bdim, "model" if seq_ok else None, *([None] * (x.ndim - 2)))
+        return jax.lax.with_sharding_constraint(
+            x, jax.sharding.NamedSharding(mesh, spec)
+        )
+    except Exception:
+        return x
+
+
+def batch_hint(x):
+    """Shard dim0 (batch) over the LARGEST divisible mesh-axis combo —
+    recurrent models have no cross-batch ops, so batch can shard over the
+    model axis too (B=256 over 16x16 = 1 seq/device), which divides the
+    per-device recurrent state by 256 instead of 16."""
+    try:
+        from jax.interpreters import pxla
+
+        mesh = pxla.thread_resources.env.physical_mesh
+        if mesh.empty or mesh.size == 1:
+            return x
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        combos = [("pod", "data", "model"), ("data", "model"),
+                  ("pod", "data"), ("data",)]
+        for combo in combos:
+            names = tuple(n for n in combo if n in sizes)
+            if not names:
+                continue
+            prod = 1
+            for n in names:
+                prod *= sizes[n]
+            if x.shape[0] % prod == 0 and x.shape[0] >= prod:
+                spec = P(names, *([None] * (x.ndim - 1)))
+                return jax.lax.with_sharding_constraint(
+                    x, jax.sharding.NamedSharding(mesh, spec))
+        return x
+    except Exception:
+        return x
+
+
+def heads_hint(x, head_axis: int = 2):
+    """Shard the (flat) head dim over "model" when divisible, else no-op."""
+    try:
+        from jax.interpreters import pxla
+
+        mesh = pxla.thread_resources.env.physical_mesh
+        if mesh.empty or mesh.size == 1:
+            return x
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        if "model" not in sizes or x.shape[head_axis] % sizes["model"] != 0:
+            return x
+        bdim = ("pod", "data") if "pod" in sizes else ("data",)
+        entries = [None] * x.ndim
+        entries[0] = bdim
+        entries[head_axis] = "model"
+        return jax.lax.with_sharding_constraint(
+            x, jax.sharding.NamedSharding(mesh, P(*entries)))
+    except Exception:
+        return x
+
+
+def scan_layers(body, carry, xs, unroll: bool = False):
+    """lax.scan over stacked layer params, or a static Python loop when
+    ``unroll`` (dry-run cost probes need every layer visible in the HLO —
+    XLA's cost analysis counts a while-loop body exactly once)."""
+    if not unroll:
+        return jax.lax.scan(body, carry, xs)
+    L = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(L):
+        sl = jax.tree_util.tree_map(lambda a: a[i], xs)
+        carry, y = body(carry, sl)
+        ys.append(y)
+    if not ys or all(y is None for y in ys):
+        return carry, None
+    stacked = jax.tree_util.tree_map(lambda *e: jnp.stack(e), *ys)
+    return carry, stacked
+
+
+def cross_entropy_loss(logits, labels, vocab: int):
+    """Stable softmax CE with z-loss; fp32 accumulation."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    ce = jnp.mean(logz - gold)
+    zloss = 1e-4 * jnp.mean(logz ** 2)
+    return ce + zloss

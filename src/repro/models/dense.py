@@ -1,0 +1,340 @@
+"""Decoder-only transformer LM: dense, MoE (EP), MLA, and M-RoPE variants.
+
+One implementation covers 7 of the 10 assigned architectures:
+qwen3-moe-30b-a3b, deepseek-v2-lite-16b (MLA+MoE), deepseek-67b,
+phi3-medium/mini, mistral-large-123b, qwen2-vl-7b (M-RoPE backbone).
+
+Layers are stacked (L, ...) and driven by ``lax.scan`` with
+``jax.checkpoint`` per layer (remat), so the HLO stays one-layer-sized for
+95-layer configs and activation memory is O(1 layer) on the backward pass.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.attention import (
+    gqa_decode,
+    gqa_forward,
+    gqa_pspecs,
+    init_gqa,
+    init_mla,
+    mla_decode,
+    mla_forward,
+    mla_pspecs,
+)
+from repro.models.common import (
+    residual_hint,
+    scan_layers,
+    cross_entropy_loss,
+    dense_init,
+    embed_init,
+    init_swiglu,
+    param_dtype,
+    rms_norm,
+    shard_hint,
+    swiglu,
+    swiglu_pspecs,
+)
+from repro.models.moe import init_moe, moe_forward, moe_pspecs
+
+AUX_LOSS_WEIGHT = 1e-2
+
+
+class DecoderLM:
+    def __init__(self, cfg):
+        self.cfg = cfg
+        self.is_mla = cfg.kv_lora_rank > 0
+        self.is_moe = cfg.n_experts > 0
+        self.n_scan = cfg.n_layers - cfg.first_dense_layers
+
+    # ------------------------------------------------------------------ #
+    # params                                                             #
+    # ------------------------------------------------------------------ #
+    def _init_layer(self, key, moe: bool):
+        cfg = self.cfg
+        dt = param_dtype(cfg)
+        k1, k2 = jax.random.split(key)
+        attn = init_mla(k1, cfg, dt) if self.is_mla else init_gqa(k1, cfg, dt)
+        if moe:
+            mlp = init_moe(k2, cfg, dt)
+        else:
+            d_ff = cfg.d_ff if cfg.d_ff else cfg.d_ff_expert * 8
+            mlp = init_swiglu(k2, cfg.d_model, d_ff, dt)
+        return {
+            "attn": attn,
+            "mlp": mlp,
+            "norm1": jnp.ones((cfg.d_model,), dt),
+            "norm2": jnp.ones((cfg.d_model,), dt),
+        }
+
+    def init(self, rng) -> Dict:
+        cfg = self.cfg
+        dt = param_dtype(cfg)
+        keys = jax.random.split(rng, 4 + cfg.first_dense_layers)
+        stacked = jax.vmap(lambda k: self._init_layer(k, self.is_moe))(
+            jax.random.split(keys[0], self.n_scan)
+        )
+        params = {
+            "embed": embed_init(keys[1], (cfg.vocab_padded, cfg.d_model), dt),
+            "layers": stacked,
+            "final_norm": jnp.ones((cfg.d_model,), dt),
+            "lm_head": dense_init(keys[2], (cfg.d_model, cfg.vocab_padded), 0, dt),
+        }
+        for i in range(cfg.first_dense_layers):
+            params[f"dense_layer_{i}"] = self._init_layer(keys[4 + i], moe=False)
+        return params
+
+    def param_pspecs(self) -> Dict:
+        cfg = self.cfg
+
+        def layer_specs(stacked: bool, moe: bool):
+            pre = ("layers",) if stacked else ()
+            attn = mla_pspecs(stacked) if self.is_mla else gqa_pspecs(stacked)
+            mlp = moe_pspecs(cfg, stacked) if moe else swiglu_pspecs(stacked)
+            return {
+                "attn": attn,
+                "mlp": mlp,
+                "norm1": P(*pre, None),
+                "norm2": P(*pre, None),
+            }
+
+        specs = {
+            "embed": P("model", "data"),        # vocab over TP, d over FSDP
+            "layers": layer_specs(True, self.is_moe),
+            "final_norm": P(None),
+            "lm_head": P("data", "model"),
+        }
+        for i in range(cfg.first_dense_layers):
+            specs[f"dense_layer_{i}"] = layer_specs(False, False)
+        return specs
+
+    # ------------------------------------------------------------------ #
+    # forward                                                            #
+    # ------------------------------------------------------------------ #
+    def _layer_fwd(self, lp, x, *, moe: bool, mrope_positions=None):
+        cfg = self.cfg
+        h = rms_norm(x, lp["norm1"])
+        if self.is_mla:
+            attn_out, _ = mla_forward(lp["attn"], h, cfg)
+        else:
+            attn_out, _ = gqa_forward(
+                lp["attn"], h, cfg, causal=True, mrope_positions=mrope_positions
+            )
+        x = x + attn_out
+        h = rms_norm(x, lp["norm2"])
+        if moe:
+            mlp_out, aux = moe_forward(lp["mlp"], h, cfg)
+        else:
+            mlp_out = swiglu(h, lp["mlp"]["w_gate"], lp["mlp"]["w_up"], lp["mlp"]["w_down"])
+            aux = jnp.float32(0.0)
+        x = x + mlp_out
+        x = residual_hint(x)
+        return x, aux
+
+    def forward(self, params, tokens, *, extra_embeds=None, mrope_positions=None):
+        """tokens: (B, S) -> final hidden states (B, S, d) + aux loss."""
+        cfg = self.cfg
+        x = params["embed"][tokens]
+        if extra_embeds is not None:  # VLM stub: precomputed patch embeddings
+            x = x + extra_embeds.astype(x.dtype)
+        x = residual_hint(x)
+        aux_total = jnp.float32(0.0)
+        for i in range(cfg.first_dense_layers):
+            x, _ = self._layer_fwd(params[f"dense_layer_{i}"], x, moe=False,
+                                   mrope_positions=mrope_positions)
+
+        def body(x, lp):
+            x, aux = jax.checkpoint(
+                lambda lp_, x_: self._layer_fwd(
+                    lp_, x_, moe=self.is_moe, mrope_positions=mrope_positions
+                )
+            )(lp, x)
+            return x, aux
+
+        x, auxes = scan_layers(body, x, params["layers"], cfg.unroll_layers)
+        if auxes is not None:  # empty when every layer is a dense prefix
+            aux_total = aux_total + jnp.sum(auxes)
+        return rms_norm(x, params["final_norm"]), aux_total
+
+    def loss(self, params, batch) -> jnp.ndarray:
+        """batch: {"tokens": (B, S+1) int32, [extras]}; next-token CE."""
+        tokens = batch["tokens"]
+        inp, labels = tokens[:, :-1], tokens[:, 1:]
+        h, aux = self.forward(
+            params, inp,
+            extra_embeds=batch.get("extra_embeds"),
+            mrope_positions=batch.get("mrope_positions"),
+        )
+        logits = h @ params["lm_head"]
+        logits = shard_hint(logits, P(("pod", "data"), None, "model"))
+        return cross_entropy_loss(logits, labels, self.cfg.vocab_padded) \
+            + AUX_LOSS_WEIGHT * aux
+
+    # ------------------------------------------------------------------ #
+    # serving                                                            #
+    # ------------------------------------------------------------------ #
+    def _layer_cache(self, batch: int, seq: int, dtype):
+        cfg = self.cfg
+        if self.is_mla:
+            return {
+                "ckv": jnp.zeros((batch, seq, cfg.kv_lora_rank), dtype),
+                "kr": jnp.zeros((batch, seq, cfg.rope_head_dim), dtype),
+            }
+        return {
+            "k": jnp.zeros((batch, seq, cfg.n_kv_heads, cfg.hd), dtype),
+            "v": jnp.zeros((batch, seq, cfg.n_kv_heads, cfg.hd), dtype),
+        }
+
+    def init_cache(self, batch: int, seq: int, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        stacked = jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a[None], (self.n_scan,) + a.shape),
+            self._layer_cache(batch, seq, dtype),
+        )
+        cache = {"layers": stacked}
+        for i in range(cfg.first_dense_layers):
+            cache[f"dense_{i}"] = self._layer_cache(batch, seq, dtype)
+        return cache
+
+    def cache_pspecs(self):
+        cfg = self.cfg
+        if self.is_mla:
+            per = {"ckv": P(("pod", "data"), "model", None),
+                   "kr": P(("pod", "data"), "model", None)}
+        else:
+            # batch over data; seq over model (kv-head count < TP degree)
+            per = {"k": P(("pod", "data"), "model", None, None),
+                   "v": P(("pod", "data"), "model", None, None)}
+        add_layer = lambda spec: P(None, *spec)
+        specs = {"layers": jax.tree_util.tree_map(
+            add_layer, per, is_leaf=lambda x: isinstance(x, P))}
+        for i in range(cfg.first_dense_layers):
+            specs[f"dense_{i}"] = per
+        return specs
+
+    def _decode_attn(self, lp, x, layer_cache, pos, mrope_positions=None):
+        cfg = self.cfg
+        h = rms_norm(x, lp["norm1"])
+        if self.is_mla:
+            attn_out, ckv, kr = mla_decode(
+                lp["attn"], h, layer_cache["ckv"], layer_cache["kr"], pos, cfg
+            )
+            return attn_out, {"ckv": ckv, "kr": kr}
+        attn_out, ck, cv = gqa_decode(
+            lp["attn"], h, layer_cache["k"], layer_cache["v"], pos, cfg,
+            mrope_positions=mrope_positions,
+        )
+        return attn_out, {"k": ck, "v": cv}
+
+    def decode_step(self, params, cache, tokens, pos, *, mrope_positions=None):
+        """tokens: (B, 1); pos: (B,) current positions. Returns logits, cache."""
+        cfg = self.cfg
+        x = params["embed"][tokens]
+        x = residual_hint(x)
+        new_cache = {}
+        for i in range(cfg.first_dense_layers):
+            lp = params[f"dense_layer_{i}"]
+            attn_out, new_cache[f"dense_{i}"] = self._decode_attn(
+                lp, x, cache[f"dense_{i}"], pos, mrope_positions
+            )
+            x = x + attn_out
+            h = rms_norm(x, lp["norm2"])
+            x = x + swiglu(h, lp["mlp"]["w_gate"], lp["mlp"]["w_up"],
+                           lp["mlp"]["w_down"])
+
+        # The full cache rides in the CARRY and is updated in place per
+        # layer: scan xs/ys would keep TWO cache-sized buffers live (read
+        # xs + stacked ys), doubling decode HBM.
+        def body(carry, lp):
+            x, full_cache, i = carry
+            cache_slices = jax.tree_util.tree_map(
+                lambda a: jax.lax.dynamic_index_in_dim(a, i, 0, keepdims=False),
+                full_cache,
+            )
+            attn_out, updated = self._decode_attn(lp, x, cache_slices, pos,
+                                                  mrope_positions)
+            x = x + attn_out
+            h = rms_norm(x, lp["norm2"])
+            if self.is_moe:
+                mlp_out, _ = moe_forward(lp["mlp"], h, cfg, decode=True)
+            else:
+                mlp_out = swiglu(h, lp["mlp"]["w_gate"], lp["mlp"]["w_up"],
+                                 lp["mlp"]["w_down"])
+            full_cache = jax.tree_util.tree_map(
+                lambda a, u: jax.lax.dynamic_update_slice_in_dim(
+                    a, u[None].astype(a.dtype), i, 0),
+                full_cache, updated,
+            )
+            return (x + mlp_out, full_cache, i + 1), None
+
+        (x, scanned_cache, _), _ = scan_layers(
+            body, (x, cache["layers"], jnp.int32(0)), params["layers"],
+            cfg.unroll_layers,
+        )
+        new_cache["layers"] = scanned_cache
+        h = rms_norm(x, params["final_norm"])
+        logits = h @ params["lm_head"]
+        return logits, new_cache
+
+    def prefill(self, params, tokens, cache_len: int):
+        """Run the full prompt, return (last-token logits, filled cache)."""
+        cfg = self.cfg
+        B, S = tokens.shape
+        x = params["embed"][tokens]
+        x = residual_hint(x)
+        prefix_cache = {}
+        for i in range(cfg.first_dense_layers):
+            lp = params[f"dense_layer_{i}"]
+            h = rms_norm(x, lp["norm1"])
+            if self.is_mla:
+                attn_out, (ckv, kr) = mla_forward(lp["attn"], h, cfg)
+                prefix_cache[f"dense_{i}"] = {"ckv": _pad_to(ckv, cache_len, 1),
+                                              "kr": _pad_to(kr, cache_len, 1)}
+            else:
+                attn_out, (k, v) = gqa_forward(lp["attn"], h, cfg, causal=True)
+                prefix_cache[f"dense_{i}"] = {"k": _pad_to(k, cache_len, 1),
+                                              "v": _pad_to(v, cache_len, 1)}
+            x = x + attn_out
+            h = rms_norm(x, lp["norm2"])
+            x = x + swiglu(h, lp["mlp"]["w_gate"], lp["mlp"]["w_up"],
+                           lp["mlp"]["w_down"])
+
+        def body(x, lp):
+            h = rms_norm(x, lp["norm1"])
+            if self.is_mla:
+                attn_out, (ckv, kr) = mla_forward(lp["attn"], h, cfg)
+                kv = {"ckv": _pad_to(ckv, cache_len, 1),
+                      "kr": _pad_to(kr, cache_len, 1)}
+            else:
+                attn_out, (k, v) = gqa_forward(lp["attn"], h, cfg, causal=True)
+                kv = {"k": _pad_to(k, cache_len, 1), "v": _pad_to(v, cache_len, 1)}
+            x = x + attn_out
+            h = rms_norm(x, lp["norm2"])
+            if self.is_moe:
+                mlp_out, _ = moe_forward(lp["mlp"], h, cfg)
+            else:
+                mlp_out = swiglu(h, lp["mlp"]["w_gate"], lp["mlp"]["w_up"],
+                                 lp["mlp"]["w_down"])
+            return x + mlp_out, kv
+
+        x, stacked = scan_layers(body, x, params["layers"], cfg.unroll_layers)
+        cache = {"layers": stacked}
+        cache.update(prefix_cache)
+        h = rms_norm(x[:, -1:], params["final_norm"])
+        logits = h @ params["lm_head"]
+        return logits, cache
+
+
+def _pad_to(x, target: int, axis: int):
+    pad = target - x.shape[axis]
+    if pad <= 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)

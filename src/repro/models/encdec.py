@@ -1,0 +1,286 @@
+"""Whisper-style encoder-decoder backbone (conv/mel frontend is a STUB:
+``input_specs`` feeds precomputed frame embeddings to the encoder).
+
+Encoder: bidirectional attention over frames. Decoder: causal self-attn +
+cross-attn to encoder states + FFN. Decode carries a self KV cache and a
+static cross KV cache computed once from the encoder output.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.attention import _chunked_attn, gqa_decode, gqa_pspecs, init_gqa
+from repro.models.common import (
+    scan_layers,
+    residual_hint,
+    apply_rope,
+    cross_entropy_loss,
+    dense_init,
+    embed_init,
+    init_swiglu,
+    param_dtype,
+    rms_norm,
+    shard_hint,
+    swiglu,
+    swiglu_pspecs,
+)
+
+
+def _init_cross(key, cfg, dtype):
+    d, h, hd = cfg.d_model, cfg.n_heads, cfg.hd
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(k1, (d, h * hd), 0, dtype),
+        "wk": dense_init(k2, (d, h * hd), 0, dtype),
+        "wv": dense_init(k3, (d, h * hd), 0, dtype),
+        "wo": dense_init(k4, (h * hd, d), 0, dtype),
+    }
+
+
+class EncDecLM:
+    def __init__(self, cfg):
+        self.cfg = cfg
+
+    # -------------------------------------------------------------- #
+    def _init_enc_layer(self, key):
+        cfg = self.cfg
+        dt = param_dtype(cfg)
+        k1, k2 = jax.random.split(key)
+        return {
+            "attn": init_gqa(k1, cfg, dt),
+            "mlp": init_swiglu(k2, cfg.d_model, cfg.d_ff, dt),
+            "norm1": jnp.ones((cfg.d_model,), dt),
+            "norm2": jnp.ones((cfg.d_model,), dt),
+        }
+
+    def _init_dec_layer(self, key):
+        cfg = self.cfg
+        dt = param_dtype(cfg)
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {
+            "self_attn": init_gqa(k1, cfg, dt),
+            "cross_attn": _init_cross(k2, cfg, dt),
+            "mlp": init_swiglu(k3, cfg.d_model, cfg.d_ff, dt),
+            "norm1": jnp.ones((cfg.d_model,), dt),
+            "norm2": jnp.ones((cfg.d_model,), dt),
+            "norm3": jnp.ones((cfg.d_model,), dt),
+        }
+
+    def init(self, rng) -> Dict:
+        cfg = self.cfg
+        dt = param_dtype(cfg)
+        ks = jax.random.split(rng, 5)
+        return {
+            "embed": embed_init(ks[0], (cfg.vocab_padded, cfg.d_model), dt),
+            "enc_layers": jax.vmap(self._init_enc_layer)(
+                jax.random.split(ks[1], cfg.encoder_layers)
+            ),
+            "dec_layers": jax.vmap(self._init_dec_layer)(
+                jax.random.split(ks[2], cfg.n_layers)
+            ),
+            "enc_norm": jnp.ones((cfg.d_model,), dt),
+            "final_norm": jnp.ones((cfg.d_model,), dt),
+            "lm_head": dense_init(ks[3], (cfg.d_model, cfg.vocab_padded), 0, dt),
+        }
+
+    def param_pspecs(self) -> Dict:
+        enc = {
+            "attn": gqa_pspecs(True),
+            "mlp": swiglu_pspecs(True),
+            "norm1": P("layers", None),
+            "norm2": P("layers", None),
+        }
+        dec = {
+            "self_attn": gqa_pspecs(True),
+            "cross_attn": gqa_pspecs(True),
+            "mlp": swiglu_pspecs(True),
+            "norm1": P("layers", None),
+            "norm2": P("layers", None),
+            "norm3": P("layers", None),
+        }
+        return {
+            "embed": P("model", "data"),
+            "enc_layers": enc,
+            "dec_layers": dec,
+            "enc_norm": P(None),
+            "final_norm": P(None),
+            "lm_head": P("data", "model"),
+        }
+
+    # -------------------------------------------------------------- #
+    def encode(self, params, frames):
+        """frames: (B, S_enc, d) precomputed embeddings (frontend stub)."""
+        cfg = self.cfg
+        x = frames.astype(param_dtype(cfg))
+        x = residual_hint(x)
+
+        def body(x, lp):
+            def f(lp_, x_):
+                h = rms_norm(x_, lp_["norm1"])
+                B, S, d = h.shape
+                hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+                q = (h @ lp_["attn"]["wq"]).reshape(B, S, hq, hd)
+                k = (h @ lp_["attn"]["wk"]).reshape(B, S, hkv, hd)
+                v = (h @ lp_["attn"]["wv"]).reshape(B, S, hkv, hd)
+                pos = jnp.arange(S)[None, :]
+                q = apply_rope(q, pos, cfg.rope_theta)
+                k = apply_rope(k, pos, cfg.rope_theta)
+                attn = _chunked_attn(q, k, v, causal=False)  # bidirectional
+                x_ = x_ + attn.reshape(B, S, hq * hd) @ lp_["attn"]["wo"]
+                h2 = rms_norm(x_, lp_["norm2"])
+                return x_ + swiglu(h2, lp_["mlp"]["w_gate"], lp_["mlp"]["w_up"],
+                                   lp_["mlp"]["w_down"])
+
+            return jax.checkpoint(f)(lp, x), None
+
+        x, _ = scan_layers(body, x, params["enc_layers"], cfg.unroll_layers)
+        return rms_norm(x, params["enc_norm"])
+
+    def _cross(self, lp, x, enc_out):
+        cfg = self.cfg
+        B, S, d = x.shape
+        h, hd = cfg.n_heads, cfg.hd
+        q = (x @ lp["wq"]).reshape(B, S, h, hd)
+        k = (enc_out @ lp["wk"]).reshape(B, enc_out.shape[1], h, hd)
+        v = (enc_out @ lp["wv"]).reshape(B, enc_out.shape[1], h, hd)
+        out = _chunked_attn(q, k, v, causal=False)
+        return out.reshape(B, S, h * hd) @ lp["wo"]
+
+    def decode_stack(self, params, tokens, enc_out):
+        cfg = self.cfg
+        x = params["embed"][tokens]
+        x = residual_hint(x)
+
+        def body(x, lp):
+            def f(lp_, x_):
+                h = rms_norm(x_, lp_["norm1"])
+                B, S, d = h.shape
+                hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+                q = (h @ lp_["self_attn"]["wq"]).reshape(B, S, hq, hd)
+                k = (h @ lp_["self_attn"]["wk"]).reshape(B, S, hkv, hd)
+                v = (h @ lp_["self_attn"]["wv"]).reshape(B, S, hkv, hd)
+                pos = jnp.arange(S)[None, :]
+                q = apply_rope(q, pos, cfg.rope_theta)
+                k = apply_rope(k, pos, cfg.rope_theta)
+                attn = _chunked_attn(q, k, v, causal=True)
+                x_ = x_ + attn.reshape(B, S, hq * hd) @ lp_["self_attn"]["wo"]
+                h2 = rms_norm(x_, lp_["norm2"])
+                x_ = x_ + self._cross(lp_["cross_attn"], h2, enc_out)
+                h3 = rms_norm(x_, lp_["norm3"])
+                return x_ + swiglu(h3, lp_["mlp"]["w_gate"], lp_["mlp"]["w_up"],
+                                   lp_["mlp"]["w_down"])
+
+            return jax.checkpoint(f)(lp, x), None
+
+        x, _ = scan_layers(body, x, params["dec_layers"], cfg.unroll_layers)
+        return rms_norm(x, params["final_norm"])
+
+    def loss(self, params, batch):
+        """batch: {"frames": (B,S_enc,d), "tokens": (B,S_dec+1)}."""
+        enc_out = self.encode(params, batch["frames"])
+        tokens = batch["tokens"]
+        h = self.decode_stack(params, tokens[:, :-1], enc_out)
+        logits = h @ params["lm_head"]
+        return cross_entropy_loss(logits, tokens[:, 1:], self.cfg.vocab_padded)
+
+    # -------------------------------------------------------------- #
+    def init_cache(self, batch: int, seq: int, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        L = cfg.n_layers
+        return {
+            "k": jnp.zeros((L, batch, seq, cfg.n_kv_heads, cfg.hd), dtype),
+            "v": jnp.zeros((L, batch, seq, cfg.n_kv_heads, cfg.hd), dtype),
+            "cross_k": jnp.zeros((L, batch, seq, cfg.n_heads, cfg.hd), dtype),
+            "cross_v": jnp.zeros((L, batch, seq, cfg.n_heads, cfg.hd), dtype),
+        }
+
+    def cache_pspecs(self):
+        kv = P(None, ("pod", "data"), "model", None, None)
+        return {"k": kv, "v": kv, "cross_k": kv, "cross_v": kv}
+
+    def prefill(self, params, frames, tokens, cache_len: int):
+        """Encode frames, run the decoder prompt, build both caches."""
+        cfg = self.cfg
+        enc_out = self.encode(params, frames)
+        B, S = tokens.shape
+        x = params["embed"][tokens]
+
+        def body(x, lp):
+            h = rms_norm(x, lp["norm1"])
+            hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+            q = (h @ lp["self_attn"]["wq"]).reshape(B, S, hq, hd)
+            k = (h @ lp["self_attn"]["wk"]).reshape(B, S, hkv, hd)
+            v = (h @ lp["self_attn"]["wv"]).reshape(B, S, hkv, hd)
+            pos = jnp.arange(S)[None, :]
+            q = apply_rope(q, pos, cfg.rope_theta)
+            k = apply_rope(k, pos, cfg.rope_theta)
+            attn = _chunked_attn(q, k, v, causal=True)
+            x = x + attn.reshape(B, S, hq * hd) @ lp["self_attn"]["wo"]
+            h2 = rms_norm(x, lp["norm2"])
+            x = x + self._cross(lp["cross_attn"], h2, enc_out)
+            h3 = rms_norm(x, lp["norm3"])
+            x = x + swiglu(h3, lp["mlp"]["w_gate"], lp["mlp"]["w_up"],
+                           lp["mlp"]["w_down"])
+            ck = (enc_out @ lp["cross_attn"]["wk"]).reshape(
+                B, enc_out.shape[1], cfg.n_heads, hd)
+            cv = (enc_out @ lp["cross_attn"]["wv"]).reshape(
+                B, enc_out.shape[1], cfg.n_heads, hd)
+            kv = {"k": _pad(k, cache_len), "v": _pad(v, cache_len),
+                  "cross_k": _pad(ck, cache_len), "cross_v": _pad(cv, cache_len)}
+            return x, kv
+
+        x, cache = scan_layers(body, x, params["dec_layers"], cfg.unroll_layers)
+        h = rms_norm(x[:, -1:], params["final_norm"])
+        return h @ params["lm_head"], cache
+
+    def decode_step(self, params, cache, tokens, pos, **_):
+        cfg = self.cfg
+        B = tokens.shape[0]
+        x = params["embed"][tokens]
+
+        def body(carry, lp):
+            x, sk, sv, i = carry
+            ck = jax.lax.dynamic_index_in_dim(sk, i, 0, keepdims=False)
+            cv = jax.lax.dynamic_index_in_dim(sv, i, 0, keepdims=False)
+            xk = jax.lax.dynamic_index_in_dim(cache["cross_k"], i, 0, keepdims=False)
+            xv = jax.lax.dynamic_index_in_dim(cache["cross_v"], i, 0, keepdims=False)
+            h = rms_norm(x, lp["norm1"])
+            attn, ck2, cv2 = gqa_decode(lp["self_attn"], h, ck, cv, pos, cfg)
+            x = x + attn
+            h2 = rms_norm(x, lp["norm2"])
+            # cross attention against the static cross cache
+            hq, hd = cfg.n_heads, cfg.hd
+            q = (h2 @ lp["cross_attn"]["wq"]).reshape(B, 1, hq, hd)
+            scores = jnp.einsum("bqhd,bshd->bhqs", q.astype(jnp.float32),
+                                xk.astype(jnp.float32)) * (hd ** -0.5)
+            probs = jax.nn.softmax(scores, axis=-1)
+            out = jnp.einsum("bhqs,bshd->bqhd", probs, xv.astype(jnp.float32))
+            x = x + out.reshape(B, 1, hq * hd).astype(x.dtype) @ lp["cross_attn"]["wo"]
+            h3 = rms_norm(x, lp["norm3"])
+            x = x + swiglu(h3, lp["mlp"]["w_gate"], lp["mlp"]["w_up"],
+                           lp["mlp"]["w_down"])
+            sk = jax.lax.dynamic_update_slice_in_dim(sk, ck2[None].astype(sk.dtype), i, 0)
+            sv = jax.lax.dynamic_update_slice_in_dim(sv, cv2[None].astype(sv.dtype), i, 0)
+            return (x, sk, sv, i + 1), None
+
+        (x, sk, sv, _), _ = scan_layers(
+            body, (x, cache["k"], cache["v"], jnp.int32(0)),
+            params["dec_layers"], cfg.unroll_layers,
+        )
+        new_cache = {"k": sk, "v": sv,
+                     "cross_k": cache["cross_k"], "cross_v": cache["cross_v"]}
+        h = rms_norm(x, params["final_norm"])
+        return h @ params["lm_head"], new_cache
+
+
+def _pad(x, target: int):
+    pad = target - x.shape[1]
+    if pad <= 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[1] = (0, pad)
+    return jnp.pad(x, widths)

@@ -1,0 +1,370 @@
+"""Recurrent-family LMs with the standard model interface.
+
+XLSTMLM  — xlstm-1.3b: groups of 7 mLSTM + 1 sLSTM blocks (paper's [7:1]).
+Zamba2LM — zamba2-2.7b: Mamba2 backbone with one SHARED attention+FFN
+           block applied after every ``shared_attn_every`` layers (the
+           shared block has a single weight set used at all 9 sites).
+Both are sub-quadratic: decode carries O(1) recurrent state, so these two
+archs run the long_500k cell.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.attention import gqa_decode, gqa_forward, gqa_pspecs, init_gqa
+from repro import perf_flags
+from repro.models.common import (
+    batch_hint,
+    residual_hint,
+    scan_layers,
+    cross_entropy_loss,
+    dense_init,
+    embed_init,
+    init_swiglu,
+    param_dtype,
+    rms_norm,
+    shard_hint,
+    swiglu,
+    swiglu_pspecs,
+)
+from repro.models.ssm import (
+    init_mamba2,
+    init_mlstm,
+    init_slstm,
+    mamba2_forward,
+    mamba2_init_state,
+    mamba2_pspecs,
+    mamba2_state_pspecs,
+    mlstm_forward,
+    mlstm_init_state,
+    mlstm_pspecs,
+    mlstm_state_pspecs,
+    slstm_forward,
+    slstm_init_state,
+    slstm_pspecs,
+    slstm_state_pspecs,
+)
+
+
+def _group_structure(n_layers: int) -> Tuple[int, int]:
+    """(n_groups, mlstm_per_group); one sLSTM closes each group."""
+    if n_layers % 8 == 0:
+        return n_layers // 8, 7
+    return 1, max(1, n_layers - 1)
+
+
+class XLSTMLM:
+    def __init__(self, cfg):
+        self.cfg = cfg
+        self.n_groups, self.m_per = _group_structure(cfg.n_layers)
+
+    def init(self, rng) -> Dict:
+        cfg = self.cfg
+        dt = param_dtype(cfg)
+        k0, k1, k2, k3 = jax.random.split(rng, 4)
+        m_keys = jax.random.split(k0, self.n_groups * self.m_per).reshape(
+            self.n_groups, self.m_per, -1
+        )
+        mlstm = jax.vmap(jax.vmap(lambda k: init_mlstm(k, cfg, dt)))(m_keys)
+        slstm = jax.vmap(lambda k: init_slstm(k, cfg, dt))(
+            jax.random.split(k1, self.n_groups)
+        )
+        return {
+            "embed": embed_init(k2, (cfg.vocab_padded, cfg.d_model), dt),
+            "mlstm": mlstm,
+            "slstm": slstm,
+            "final_norm": jnp.ones((cfg.d_model,), dt),
+            "lm_head": dense_init(k3, (cfg.d_model, cfg.vocab_padded), 0, dt),
+        }
+
+    def param_pspecs(self) -> Dict:
+        def add(pre, tree):
+            return jax.tree_util.tree_map(
+                lambda s: P(*pre, *s), tree, is_leaf=lambda x: isinstance(x, P)
+            )
+
+        return {
+            "embed": P("model", "data"),
+            "mlstm": add((None, None), mlstm_pspecs(False)),
+            "slstm": add((None,), slstm_pspecs(False)),
+            "final_norm": P(None),
+            "lm_head": P("data", "model"),
+        }
+
+    def init_cache(self, batch: int, seq: int, dtype=jnp.bfloat16):
+        m = mlstm_init_state(self.cfg, batch)
+        s = slstm_init_state(self.cfg, batch)
+        return {
+            "mlstm": jax.tree_util.tree_map(
+                lambda a: jnp.broadcast_to(
+                    a[None, None], (self.n_groups, self.m_per) + a.shape
+                ),
+                m,
+            ),
+            "slstm": jax.tree_util.tree_map(
+                lambda a: jnp.broadcast_to(a[None], (self.n_groups,) + a.shape), s
+            ),
+        }
+
+    def cache_pspecs(self):
+        def add(pre, tree):
+            return jax.tree_util.tree_map(
+                lambda s: P(*pre, *s), tree, is_leaf=lambda x: isinstance(x, P)
+            )
+
+        return {
+            "mlstm": add((None, None), mlstm_state_pspecs()),
+            "slstm": add((None,), slstm_state_pspecs()),
+        }
+
+    def _stack(self, params, x, states):
+        """Run all groups. states=None -> fresh states; returns states."""
+        cfg = self.cfg
+
+        def group(x, slices):
+            mp, sp, mstate, sstate = slices
+
+            def m_body(x, ms):
+                lp, st = ms
+                x, st2 = jax.checkpoint(
+                    lambda lp_, x_, st_: mlstm_forward(lp_, x_, cfg, st_)
+                )(lp, x, st)
+                return x, st2
+
+            x, mstate2 = scan_layers(m_body, x, (mp, mstate), cfg.unroll_layers)
+            x, sstate2 = slstm_forward(sp, x, cfg, sstate)
+            return x, (mstate2, sstate2)
+
+        x, (mstates, sstates) = scan_layers(
+            group, x, (params["mlstm"], params["slstm"],
+                       states["mlstm"], states["slstm"]),
+            cfg.unroll_layers,
+        )
+        return x, {"mlstm": mstates, "slstm": sstates}
+
+    def forward(self, params, tokens, states=None):
+        x = params["embed"][tokens]
+        x = batch_hint(x) if perf_flags.BATCH_SHARD else residual_hint(x)
+        if states is None:
+            states = self.init_cache(tokens.shape[0], 0)
+        x, states = self._stack(params, x, states)
+        return rms_norm(x, params["final_norm"]), states
+
+    def loss(self, params, batch):
+        tokens = batch["tokens"]
+        h, _ = self.forward(params, tokens[:, :-1])
+        logits = h @ params["lm_head"]
+        return cross_entropy_loss(logits, tokens[:, 1:], self.cfg.vocab_padded)
+
+    def prefill(self, params, tokens, cache_len: int = 0):
+        h, states = self.forward(params, tokens)
+        logits = h[:, -1:] @ params["lm_head"]
+        return logits, states
+
+    def decode_step(self, params, cache, tokens, pos, **_):
+        h, states = self.forward(params, tokens, states=cache)
+        logits = h @ params["lm_head"]
+        return logits, states
+
+    def recurrence_flops_per_device(self, B: int, S: int, dp: int, tp: int) -> float:
+        """Analytic FLOPs of the mLSTM time recurrence, which XLA's cost
+        analysis can't see (while-loop body counted once). Heads (4) don't
+        divide a 16-way model axis, so the recurrence replicates over TP:
+        per-device work divides by dp only."""
+        cfg = self.cfg
+        di = 2 * cfg.d_model
+        hd = di // cfg.n_heads
+        per_step = 6.0 * cfg.n_heads * hd * hd  # C update + readout
+        total = per_step * B * S * cfg.n_layers
+        return total / max(1, dp)
+
+
+class Zamba2LM:
+    def __init__(self, cfg):
+        self.cfg = cfg
+        self.period = cfg.shared_attn_every or cfg.n_layers
+        self.n_groups = max(1, cfg.n_layers // self.period)
+
+    def init(self, rng) -> Dict:
+        cfg = self.cfg
+        dt = param_dtype(cfg)
+        k0, k1, k2, k3, k4, k5 = jax.random.split(rng, 6)
+        mamba = jax.vmap(jax.vmap(lambda k: init_mamba2(k, cfg, dt)))(
+            jax.random.split(k0, self.n_groups * self.period).reshape(
+                self.n_groups, self.period, -1
+            )
+        )
+        return {
+            "embed": embed_init(k1, (cfg.vocab_padded, cfg.d_model), dt),
+            "mamba": mamba,
+            "shared_attn": init_gqa(k2, cfg, dt),
+            "shared_mlp": init_swiglu(k3, cfg.d_model, cfg.d_ff, dt),
+            "shared_norm1": jnp.ones((cfg.d_model,), dt),
+            "shared_norm2": jnp.ones((cfg.d_model,), dt),
+            "final_norm": jnp.ones((cfg.d_model,), dt),
+            "lm_head": dense_init(k5, (cfg.d_model, cfg.vocab_padded), 0, dt),
+        }
+
+    def param_pspecs(self) -> Dict:
+        def add(pre, tree):
+            return jax.tree_util.tree_map(
+                lambda s: P(*pre, *s), tree, is_leaf=lambda x: isinstance(x, P)
+            )
+
+        return {
+            "embed": P("model", "data"),
+            "mamba": add((None, None), mamba2_pspecs(False)),
+            "shared_attn": gqa_pspecs(False),
+            "shared_mlp": swiglu_pspecs(False),
+            "shared_norm1": P(None),
+            "shared_norm2": P(None),
+            "final_norm": P(None),
+            "lm_head": P("data", "model"),
+        }
+
+    def init_cache(self, batch: int, seq: int, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        m = mamba2_init_state(cfg, batch)
+        return {
+            "mamba": jax.tree_util.tree_map(
+                lambda a: jnp.broadcast_to(
+                    a[None, None], (self.n_groups, self.period) + a.shape
+                ),
+                m,
+            ),
+            "attn_k": jnp.zeros(
+                (self.n_groups, batch, seq, cfg.n_kv_heads, cfg.hd), dtype
+            ),
+            "attn_v": jnp.zeros(
+                (self.n_groups, batch, seq, cfg.n_kv_heads, cfg.hd), dtype
+            ),
+        }
+
+    def cache_pspecs(self, batch: int = 2):
+        def add(pre, tree):
+            return jax.tree_util.tree_map(
+                lambda s: P(*pre, *s), tree, is_leaf=lambda x: isinstance(x, P)
+            )
+
+        # batch==1 (long_500k): shard the KV-cache SEQ dim over data instead
+        kv = (
+            P(None, None, ("pod", "data"), "model", None)
+            if batch == 1
+            else P(None, ("pod", "data"), None, "model", None)
+        )
+        return {
+            "mamba": add((None, None), mamba2_state_pspecs()),
+            "attn_k": kv,
+            "attn_v": kv,
+        }
+
+    def _shared_block(self, params, x):
+        cfg = self.cfg
+        h = rms_norm(x, params["shared_norm1"])
+        attn_out, kv = gqa_forward(params["shared_attn"], h, cfg, causal=True)
+        x = x + attn_out
+        h = rms_norm(x, params["shared_norm2"])
+        x = x + swiglu(h, params["shared_mlp"]["w_gate"],
+                       params["shared_mlp"]["w_up"], params["shared_mlp"]["w_down"])
+        return x, kv
+
+    def forward(self, params, tokens, states=None):
+        cfg = self.cfg
+        x = params["embed"][tokens]
+        x = batch_hint(x) if perf_flags.BATCH_SHARD else residual_hint(x)
+        if states is None:
+            states = self.init_cache(tokens.shape[0], 0)
+
+        def group(x, slices):
+            mp, mstate = slices
+
+            def m_body(x, ms):
+                lp, st = ms
+                x, st2 = jax.checkpoint(
+                    lambda lp_, x_, st_: mamba2_forward(lp_, x_, cfg, st_)
+                )(lp, x, st)
+                return x, st2
+
+            x, mstate2 = scan_layers(m_body, x, (mp, mstate), cfg.unroll_layers)
+            x, kv = self._shared_block(params, x)
+            return x, (mstate2, kv)
+
+        x, (mstates, kvs) = scan_layers(
+            group, x, (params["mamba"], states["mamba"]), cfg.unroll_layers
+        )
+        return rms_norm(x, params["final_norm"]), mstates, kvs
+
+    def loss(self, params, batch):
+        tokens = batch["tokens"]
+        h, _, _ = self.forward(params, tokens[:, :-1])
+        logits = h @ params["lm_head"]
+        return cross_entropy_loss(logits, tokens[:, 1:], self.cfg.vocab_padded)
+
+    def prefill(self, params, tokens, cache_len: int):
+        B, S = tokens.shape
+        h, mstates, (ks, vs) = self.forward(params, tokens)
+        pad = cache_len - S
+        ks = jnp.pad(ks, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))) if pad > 0 else ks
+        vs = jnp.pad(vs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))) if pad > 0 else vs
+        logits = h[:, -1:] @ params["lm_head"]
+        return logits, {"mamba": mstates, "attn_k": ks, "attn_v": vs}
+
+    def decode_step(self, params, cache, tokens, pos, **_):
+        cfg = self.cfg
+        x = params["embed"][tokens]
+
+        # full caches ride in the carry (in-place per-group update) so the
+        # 9x shared-attn KV cache is not duplicated by scan xs/ys buffers
+        def group(carry, mp):
+            x, mamba_st, ak, av, g = carry
+            mstate = jax.tree_util.tree_map(
+                lambda a: jax.lax.dynamic_index_in_dim(a, g, 0, keepdims=False),
+                mamba_st,
+            )
+
+            def m_body(x, ms):
+                lp, st = ms
+                x, st2 = mamba2_forward(lp, x, cfg, st)
+                return x, st2
+
+            x, mstate2 = scan_layers(m_body, x, (mp, mstate), cfg.unroll_layers)
+            ck = jax.lax.dynamic_index_in_dim(ak, g, 0, keepdims=False)
+            cv = jax.lax.dynamic_index_in_dim(av, g, 0, keepdims=False)
+            h = rms_norm(x, params["shared_norm1"])
+            attn_out, ck2, cv2 = gqa_decode(params["shared_attn"], h, ck, cv, pos, cfg)
+            x = x + attn_out
+            h = rms_norm(x, params["shared_norm2"])
+            x = x + swiglu(h, params["shared_mlp"]["w_gate"],
+                           params["shared_mlp"]["w_up"],
+                           params["shared_mlp"]["w_down"])
+            mamba_st = jax.tree_util.tree_map(
+                lambda a, u: jax.lax.dynamic_update_slice_in_dim(
+                    a, u[None].astype(a.dtype), g, 0),
+                mamba_st, mstate2,
+            )
+            ak = jax.lax.dynamic_update_slice_in_dim(ak, ck2[None].astype(ak.dtype), g, 0)
+            av = jax.lax.dynamic_update_slice_in_dim(av, cv2[None].astype(av.dtype), g, 0)
+            return (x, mamba_st, ak, av, g + 1), None
+
+        (x, mstates, ks, vs, _), _ = scan_layers(
+            group,
+            (x, cache["mamba"], cache["attn_k"], cache["attn_v"], jnp.int32(0)),
+            params["mamba"],
+            cfg.unroll_layers,
+        )
+        h = rms_norm(x, params["final_norm"])
+        logits = h @ params["lm_head"]
+        return logits, {"mamba": mstates, "attn_k": ks, "attn_v": vs}
+
+    def recurrence_flops_per_device(self, B: int, S: int, dp: int, tp: int) -> float:
+        """Mamba2's SSD recurrence: channels (di=2d) shard cleanly over the
+        model axis, so per-device work divides by dp*tp."""
+        cfg = self.cfg
+        di = 2 * cfg.d_model
+        per_step = 5.0 * di * cfg.ssm_state
+        total = per_step * B * S * cfg.n_layers
+        return total / max(1, dp * tp)

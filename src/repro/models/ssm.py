@@ -1,0 +1,309 @@
+"""Recurrent LMs: xLSTM (mLSTM + sLSTM blocks) and Mamba2 (SSD) blocks.
+
+xlstm-1.3b: 48 blocks in the paper's [7:1] ratio — groups of 7 mLSTM
+blocks followed by 1 sLSTM block (6 groups). mLSTM keeps a per-head
+matrix memory C (hd×hd) with exponential input/forget gating and the
+max-stabilizer m; sLSTM keeps scalar memories. Both are lax.scan
+recurrences over time — O(1) state decode, sub-quadratic everywhere
+(this is why long_500k is assigned to these archs).
+
+Mamba2 (used by zamba2): diagonal SSD recurrence h_t = a_t h_{t-1} +
+dt_t·B_t x_t with y_t = C_t·h_t + D·x_t over a state of N=64 per channel,
+preceded by a short causal depthwise conv.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro import perf_flags
+from repro.models.common import (
+    cross_entropy_loss,
+    dense_init,
+    embed_init,
+    param_dtype,
+    rms_norm,
+    shard_hint,
+)
+
+TIME_CHUNK = 64  # steps per remat chunk when REPRO_PERF_OPT=ssm_chunk
+
+
+def chunked_time_scan(step, carry, xs, chunk: int = TIME_CHUNK):
+    """Time recurrence with gradient checkpointing at chunk boundaries.
+
+    A plain ``lax.scan`` backward saves the carry at EVERY step — for
+    mLSTM's (B, h, hd, hd) matrix state that is S x state bytes (the 3.4TB
+    /device baseline). Chunked: save only n_chunks boundary states,
+    recompute inside a chunk on the backward pass. Memory becomes
+    (S/chunk + chunk) x state; compute pays one extra forward.
+    """
+    if not perf_flags.SSM_CHUNK:
+        return jax.lax.scan(step, carry, xs)
+    S = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    if S % chunk != 0 or S <= chunk:
+        return jax.lax.scan(step, carry, xs)
+    n = S // chunk
+
+    def chunk_body(c, xs_chunk):
+        return jax.lax.scan(step, c, xs_chunk)
+
+    xs_c = jax.tree_util.tree_map(
+        lambda a: a.reshape((n, chunk) + a.shape[1:]), xs
+    )
+    carry, ys = jax.lax.scan(jax.checkpoint(chunk_body), carry, xs_c)
+    ys = jax.tree_util.tree_map(
+        lambda a: a.reshape((S,) + a.shape[2:]), ys
+    )
+    return carry, ys
+
+# --------------------------------------------------------------------- #
+# mLSTM                                                                  #
+# --------------------------------------------------------------------- #
+def init_mlstm(key, cfg, dtype, proj_factor: int = 2):
+    d = cfg.d_model
+    di = proj_factor * d
+    h = cfg.n_heads
+    ks = jax.random.split(key, 7)
+    return {
+        "w_up": dense_init(ks[0], (d, di), 0, dtype),
+        "w_gate_up": dense_init(ks[1], (d, di), 0, dtype),
+        "wq": dense_init(ks[2], (di, di), 0, dtype),
+        "wk": dense_init(ks[3], (di, di), 0, dtype),
+        "wv": dense_init(ks[4], (di, di), 0, dtype),
+        "w_if": dense_init(ks[5], (di, 2 * h), 0, dtype),  # input/forget gates
+        "w_down": dense_init(ks[6], (di, d), 0, dtype),
+        "norm": jnp.ones((d,), dtype),
+    }
+
+
+def mlstm_pspecs(stacked: bool):
+    pre = ("layers",) if stacked else ()
+    return {
+        "w_up": P(*pre, "data", "model"),
+        "w_gate_up": P(*pre, "data", "model"),
+        "wq": P(*pre, "data", "model"),
+        "wk": P(*pre, "data", "model"),
+        "wv": P(*pre, "data", "model"),
+        "w_if": P(*pre, "data", None),
+        "w_down": P(*pre, "model", "data"),
+        "norm": P(*pre, None),
+    }
+
+
+def mlstm_init_state(cfg, batch: int, proj_factor: int = 2):
+    di = proj_factor * cfg.d_model
+    h = cfg.n_heads
+    hd = di // h
+    return {
+        "C": jnp.zeros((batch, h, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, h, hd), jnp.float32),
+        "m": jnp.full((batch, h), -1e30, jnp.float32),
+    }
+
+
+def mlstm_state_pspecs():
+    return {"C": P(("pod", "data"), "model", None, None),
+            "n": P(("pod", "data"), "model", None),
+            "m": P(("pod", "data"), "model")}
+
+
+def _mlstm_cell(state, qkvif):
+    """One time step. q,k,v: (B,h,hd); i_t,f_t: (B,h) pre-activations."""
+    q, k, v, ig, fg = qkvif
+    C, n, m = state["C"], state["n"], state["m"]
+    hd = q.shape[-1]
+    # stabilized exponential gating (xLSTM eq. 15-19)
+    m_new = jnp.maximum(fg + m, ig)
+    i_p = jnp.exp(ig - m_new)
+    f_p = jnp.exp(fg + m - m_new)
+    k_s = k / jnp.sqrt(jnp.float32(hd))
+    C_new = f_p[..., None, None] * C + i_p[..., None, None] * (
+        v[..., :, None] * k_s[..., None, :]
+    )
+    n_new = f_p[..., None] * n + i_p[..., None] * k_s
+    num = jnp.einsum("bhij,bhj->bhi", C_new, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhj,bhj->bh", n_new, q)), 1.0)
+    h_t = num / den[..., None]
+    return {"C": C_new, "n": n_new, "m": m_new}, h_t
+
+
+def mlstm_forward(lp, x, cfg, state=None, proj_factor: int = 2):
+    """x: (B, S, d). Returns (out, final_state)."""
+    B, S, d = x.shape
+    h = cfg.n_heads
+    xi = rms_norm(x, lp["norm"])
+    up = xi @ lp["w_up"]
+    gate = jax.nn.silu(xi @ lp["w_gate_up"])
+    di = up.shape[-1]
+    hd = di // h
+    q = (up @ lp["wq"]).reshape(B, S, h, hd).astype(jnp.float32)
+    k = (up @ lp["wk"]).reshape(B, S, h, hd).astype(jnp.float32)
+    v = (up @ lp["wv"]).reshape(B, S, h, hd).astype(jnp.float32)
+    gif = (up @ lp["w_if"]).reshape(B, S, 2, h).astype(jnp.float32)
+    ig, fg = gif[:, :, 0], jax.nn.log_sigmoid(gif[:, :, 1])
+    if state is None:
+        state = mlstm_init_state(cfg, B, proj_factor)
+
+    def step(carry, t_in):
+        return _mlstm_cell(carry, t_in)
+
+    xs = (q.swapaxes(0, 1), k.swapaxes(0, 1), v.swapaxes(0, 1),
+          ig.swapaxes(0, 1), fg.swapaxes(0, 1))
+    state, hs = chunked_time_scan(step, state, xs)
+    hs = hs.swapaxes(0, 1).reshape(B, S, di).astype(x.dtype)
+    out = (hs * gate) @ lp["w_down"]
+    return x + out, state
+
+
+# --------------------------------------------------------------------- #
+# sLSTM                                                                  #
+# --------------------------------------------------------------------- #
+def init_slstm(key, cfg, dtype, proj_factor: int = 2):
+    d = cfg.d_model
+    di = proj_factor * d
+    ks = jax.random.split(key, 4)
+    return {
+        "w_up": dense_init(ks[0], (d, di), 0, dtype),
+        "w_gates": dense_init(ks[1], (di, 4 * di), 0, dtype),  # z,i,f,o
+        "w_down": dense_init(ks[2], (di, d), 0, dtype),
+        "norm": jnp.ones((d,), dtype),
+    }
+
+
+def slstm_pspecs(stacked: bool):
+    pre = ("layers",) if stacked else ()
+    return {
+        "w_up": P(*pre, "data", "model"),
+        "w_gates": P(*pre, "model", None),
+        "w_down": P(*pre, "model", "data"),
+        "norm": P(*pre, None),
+    }
+
+
+def slstm_init_state(cfg, batch: int, proj_factor: int = 2):
+    di = proj_factor * cfg.d_model
+    return {
+        "c": jnp.zeros((batch, di), jnp.float32),
+        "n": jnp.ones((batch, di), jnp.float32),
+        "m": jnp.zeros((batch, di), jnp.float32),
+    }
+
+
+def slstm_state_pspecs():
+    return {"c": P(("pod", "data"), "model"),
+            "n": P(("pod", "data"), "model"),
+            "m": P(("pod", "data"), "model")}
+
+
+def slstm_forward(lp, x, cfg, state=None, proj_factor: int = 2):
+    B, S, d = x.shape
+    xi = rms_norm(x, lp["norm"])
+    up = xi @ lp["w_up"]
+    di = up.shape[-1]
+    gates = (up @ lp["w_gates"]).reshape(B, S, 4, di).astype(jnp.float32)
+    z, ig, fg, og = (gates[:, :, i] for i in range(4))
+    if state is None:
+        state = slstm_init_state(cfg, B, proj_factor)
+
+    def step(carry, t_in):
+        z_t, i_t, f_t, o_t = t_in
+        c, n, m = carry["c"], carry["n"], carry["m"]
+        f_l = jax.nn.log_sigmoid(f_t)
+        m_new = jnp.maximum(f_l + m, i_t)
+        i_p = jnp.exp(i_t - m_new)
+        f_p = jnp.exp(f_l + m - m_new)
+        c_new = f_p * c + i_p * jnp.tanh(z_t)
+        n_new = f_p * n + i_p
+        h_t = jax.nn.sigmoid(o_t) * c_new / jnp.maximum(n_new, 1.0)
+        return {"c": c_new, "n": n_new, "m": m_new}, h_t
+
+    xs = tuple(a.swapaxes(0, 1) for a in (z, ig, fg, og))
+    state, hs = chunked_time_scan(step, state, xs)
+    hs = hs.swapaxes(0, 1).astype(x.dtype)
+    out = hs @ lp["w_down"]
+    return x + out, state
+
+
+# --------------------------------------------------------------------- #
+# Mamba2 (SSD)                                                           #
+# --------------------------------------------------------------------- #
+def init_mamba2(key, cfg, dtype, expand: int = 2):
+    d = cfg.d_model
+    di = expand * d
+    N = cfg.ssm_state
+    ks = jax.random.split(key, 6)
+    return {
+        "w_in": dense_init(ks[0], (d, 2 * di), 0, dtype),        # x and z
+        "w_bcdt": dense_init(ks[1], (di, 2 * N + 1), 0, dtype),  # B, C, dt
+        "conv_w": dense_init(ks[2], (4, di), 0, dtype),          # depthwise
+        "a_log": jnp.zeros((di,), jnp.float32),
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "w_out": dense_init(ks[3], (di, d), 0, dtype),
+        "norm": jnp.ones((d,), dtype),
+    }
+
+
+def mamba2_pspecs(stacked: bool):
+    pre = ("layers",) if stacked else ()
+    return {
+        "w_in": P(*pre, "data", "model"),
+        "w_bcdt": P(*pre, "model", None),
+        "conv_w": P(*pre, None, "model"),
+        "a_log": P(*pre, "model"),
+        "d_skip": P(*pre, "model"),
+        "w_out": P(*pre, "model", "data"),
+        "norm": P(*pre, None),
+    }
+
+
+def mamba2_init_state(cfg, batch: int, expand: int = 2):
+    di = expand * cfg.d_model
+    return {
+        "h": jnp.zeros((batch, di, cfg.ssm_state), jnp.float32),
+        "conv": jnp.zeros((batch, 3, di), jnp.float32),  # last 3 inputs
+    }
+
+
+def mamba2_state_pspecs():
+    return {"h": P(("pod", "data"), "model", None),
+            "conv": P(("pod", "data"), None, "model")}
+
+
+def mamba2_forward(lp, x, cfg, state=None, expand: int = 2):
+    """x: (B, S, d) -> (out, state)."""
+    B, S, d = x.shape
+    N = cfg.ssm_state
+    xi = rms_norm(x, lp["norm"])
+    xz = xi @ lp["w_in"]
+    di = xz.shape[-1] // 2
+    u, z = xz[..., :di], jax.nn.silu(xz[..., di:])
+    if state is None:
+        state = mamba2_init_state(cfg, B, expand)
+    # causal depthwise conv (window 4) via shifted adds
+    conv_in = jnp.concatenate([state["conv"].astype(u.dtype), u], axis=1)
+    u_c = sum(conv_in[:, 3 - j : 3 - j + S] * lp["conv_w"][3 - j] for j in range(4))
+    u_c = jax.nn.silu(u_c)
+    new_conv = conv_in[:, -3:].astype(jnp.float32)
+
+    bcdt = (u_c @ lp["w_bcdt"]).astype(jnp.float32)
+    Bv, Cv, dt = bcdt[..., :N], bcdt[..., N : 2 * N], jax.nn.softplus(bcdt[..., -1:])
+    a = -jnp.exp(lp["a_log"])                            # (di,)
+    decay = jnp.exp(a[None, None, :] * dt)               # (B,S,di)
+    uf = u_c.astype(jnp.float32)
+
+    def step(h, t_in):
+        dec_t, B_t, C_t, u_t, dt_t = t_in
+        h = dec_t[..., None] * h + (dt_t[:, None] * u_t)[..., None] * B_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, C_t)
+        return h, y
+
+    xs = (decay.swapaxes(0, 1), Bv.swapaxes(0, 1), Cv.swapaxes(0, 1),
+          uf.swapaxes(0, 1), dt.swapaxes(0, 1)[..., 0])
+    h_state, ys = chunked_time_scan(step, state["h"], xs)
+    ys = ys.swapaxes(0, 1) + uf * lp["d_skip"][None, None, :]
+    out = ((ys.astype(x.dtype)) * z) @ lp["w_out"]
+    return x + out, {"h": h_state, "conv": new_conv}

@@ -1,0 +1,19 @@
+"""Model zoo: ``build_model(cfg)`` returns the family implementation."""
+from __future__ import annotations
+
+from repro.configs.base import ArchConfig
+from repro.models.dense import DecoderLM
+from repro.models.encdec import EncDecLM
+from repro.models.recurrent import XLSTMLM, Zamba2LM
+
+
+def build_model(cfg: ArchConfig):
+    if cfg.family in ("dense", "moe", "vlm"):
+        return DecoderLM(cfg)
+    if cfg.family == "ssm":
+        return XLSTMLM(cfg)
+    if cfg.family == "hybrid":
+        return Zamba2LM(cfg)
+    if cfg.family == "audio":
+        return EncDecLM(cfg)
+    raise ValueError(f"unknown family {cfg.family!r}")

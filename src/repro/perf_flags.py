@@ -1,0 +1,37 @@
+"""Perf-iteration feature flags (§Perf hillclimb).
+
+The baseline sweep runs with no flags; each hypothesis toggles one flag so
+before/after lowerings are controlled experiments:
+
+  REPRO_PERF_OPT=attn_flat,pv_bf16,ssm_chunk,batch_shard
+
+  attn_flat   — expand K/V to flat q-head space + head-shard the score
+                einsum (kills per-layer f32 partial-sum all-reduces at the
+                SP/TP boundary)
+  pv_bf16     — probs@V einsum in bf16 (softmax stays f32)
+  ssm_chunk   — time-chunked remat for mLSTM/Mamba2 scans (store chunk
+                boundaries, recompute inside chunks on backward)
+  batch_shard — recurrent models shard batch over the model axis too
+"""
+from __future__ import annotations
+
+import os
+
+_FLAGS = frozenset(
+    f.strip() for f in os.environ.get("REPRO_PERF_OPT", "").split(",") if f.strip()
+)
+
+
+def enabled(name: str) -> bool:
+    return name in _FLAGS
+
+
+ATTN_FLAT = enabled("attn_flat")
+ATTN_QSEQ = enabled("attn_qseq")   # q seq-sharded + K/V replicated (bf16
+                                   # all-gather instead of f32 all-reduce)
+ATTN_TP = enabled("attn_tp")       # K/V head-sharded like Q (classic TP
+                                   # attention; falls back when kv-heads
+                                   # don't divide the model axis)
+PV_BF16 = enabled("pv_bf16")
+SSM_CHUNK = enabled("ssm_chunk")
+BATCH_SHARD = enabled("batch_shard")

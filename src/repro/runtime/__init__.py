@@ -1,0 +1,11 @@
+from repro.runtime.sharding import resolve_pspec, resolve_tree, state_shardings
+from repro.runtime.steps import make_decode_step, make_prefill_step, make_train_step
+
+__all__ = [
+    "resolve_pspec",
+    "resolve_tree",
+    "state_shardings",
+    "make_train_step",
+    "make_prefill_step",
+    "make_decode_step",
+]

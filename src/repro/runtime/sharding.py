@@ -1,0 +1,76 @@
+"""Divisibility-aware sharding resolution.
+
+Model code declares *logical* PartitionSpecs (axis names like "layers"
+that are not mesh axes, TP specs on head counts that may not divide the
+mesh, etc.). ``resolve_pspec`` turns a logical spec into a legal physical
+spec for a concrete (mesh, shape):
+
+  * names that are not mesh axes -> None (e.g. the stacked-"layers" dim)
+  * a dim whose size does not divide the assigned mesh-axis product is
+    replicated instead (e.g. 8 KV heads on a 16-way "model" axis)
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _axis_size(mesh: Mesh, entry) -> int:
+    names = entry if isinstance(entry, tuple) else (entry,)
+    size = 1
+    for n in names:
+        size *= dict(zip(mesh.axis_names, mesh.devices.shape))[n]
+    return size
+
+
+def resolve_pspec(spec: P, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    if spec is None:
+        return P()
+    entries = list(spec)
+    # pad/truncate to rank
+    entries = entries[: len(shape)] + [None] * (len(shape) - len(entries))
+    out = []
+    for dim, entry in zip(shape, entries):
+        if entry is None:
+            out.append(None)
+            continue
+        names = entry if isinstance(entry, tuple) else (entry,)
+        names = tuple(n for n in names if n in mesh.axis_names)
+        if not names:
+            out.append(None)
+            continue
+        size = _axis_size(mesh, tuple(names))
+        if dim % size != 0:
+            out.append(None)  # replicate: not divisible
+        else:
+            out.append(names if len(names) > 1 else names[0])
+    return P(*out)
+
+
+def resolve_tree(spec_tree, shape_tree, mesh: Mesh):
+    """Map resolve_pspec over parallel (spec, shape) pytrees -> NamedShardings."""
+    return jax.tree_util.tree_map(
+        lambda spec, arr: NamedSharding(
+            mesh, resolve_pspec(spec, tuple(arr.shape), mesh)
+        ),
+        spec_tree,
+        shape_tree,
+        is_leaf=lambda x: isinstance(x, P) or x is None,
+    )
+
+
+def state_shardings(model, params_shape, opt_shape, mesh: Mesh):
+    """Shardings for (params, AdamWState) from the model's logical specs."""
+    from repro.optim.adamw import AdamWState
+
+    pspecs = model.param_pspecs()
+    param_sh = resolve_tree(pspecs, params_shape, mesh)
+    opt_sh = AdamWState(
+        step=NamedSharding(mesh, P()),
+        m=resolve_tree(pspecs, opt_shape.m, mesh),
+        v=resolve_tree(pspecs, opt_shape.v, mesh),
+    )
+    return param_sh, opt_sh

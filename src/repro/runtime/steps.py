@@ -1,0 +1,53 @@
+"""Step factories: the jit-able train / prefill / decode steps that the
+launcher shards and the dry-run lowers.
+
+train_step donates (params, opt_state) — on TPU this is what makes the
+async-fork checkpoint protection necessary: the pre-step buffers die at
+every step boundary (see repro.checkpoint.manager).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update
+from repro.optim.schedule import cosine_schedule
+
+
+def make_train_step(model, *, peak_lr: float = 3e-4, donate: bool = True):
+    def train_step(params, opt_state: AdamWState, batch):
+        loss, grads = jax.value_and_grad(model.loss)(params, batch)
+        lr = cosine_schedule(opt_state.step, peak_lr=peak_lr)
+        new_params, new_opt = adamw_update(params, grads, opt_state, lr)
+        return new_params, new_opt, loss
+
+    return train_step
+
+
+def make_prefill_step(model, cfg, shape):
+    def prefill_step(params, batch):
+        if cfg.family == "audio":
+            return model.prefill(params, batch["frames"], batch["tokens"],
+                                 cache_len=shape.seq_len)
+        return model.prefill(params, batch["tokens"], cache_len=shape.seq_len)
+
+    return prefill_step
+
+
+def make_decode_step(model, cfg, shape):
+    def decode_step(params, cache, batch):
+        kwargs = {}
+        if cfg.family == "vlm" and "mrope_positions" in batch:
+            kwargs["mrope_positions"] = batch["mrope_positions"]
+        return model.decode_step(params, cache, batch["tokens"], batch["pos"],
+                                 **kwargs)
+
+    return decode_step
+
+
+def init_train_state(model, rng):
+    params = model.init(rng)
+    return params, adamw_init(params)

@@ -1,0 +1,4 @@
+from repro.utils.tree import flatten_with_paths, leaf_nbytes, tree_bytes
+from repro.utils.timing import Timer, now_s
+
+__all__ = ["flatten_with_paths", "leaf_nbytes", "tree_bytes", "Timer", "now_s"]

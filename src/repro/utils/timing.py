@@ -1,0 +1,21 @@
+"""Monotonic timing helpers (the engine's latency bookkeeping)."""
+from __future__ import annotations
+
+import time
+
+
+def now_s() -> float:
+    return time.perf_counter()
+
+
+class Timer:
+    """Context manager measuring wall time in seconds."""
+
+    def __enter__(self):
+        self.start = time.perf_counter()
+        self.elapsed = 0.0
+        return self
+
+    def __exit__(self, *exc):
+        self.elapsed = time.perf_counter() - self.start
+        return False

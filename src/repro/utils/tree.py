@@ -1,0 +1,37 @@
+"""Pytree helpers shared by the snapshot core and the checkpoint manager."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:  # pragma: no cover - future jax key types
+            parts.append(str(p))
+    return "/".join(parts) if parts else "<root>"
+
+
+def flatten_with_paths(tree):
+    """Flatten ``tree`` -> (list[(path_str, leaf)], treedef).
+
+    The path strings name the "VMAs" of the block table; they are stable
+    across processes and stored in checkpoint manifests.
+    """
+    leaves_with_paths, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    return [(_path_str(p), leaf) for p, leaf in leaves_with_paths], treedef
+
+
+def leaf_nbytes(leaf) -> int:
+    return int(np.prod(leaf.shape)) * np.dtype(leaf.dtype).itemsize if leaf.shape else np.dtype(leaf.dtype).itemsize
+
+
+def tree_bytes(tree) -> int:
+    return sum(leaf_nbytes(l) for l in jax.tree_util.tree_leaves(tree))

@@ -1,0 +1,15 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches must
+see the single real CPU device; only launch/dryrun.py forces 512 devices
+(in a subprocess)."""
+import os
+
+import numpy as np
+import pytest
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+
+@pytest.fixture(autouse=True)
+def _seed():
+    np.random.seed(0)
+    yield

@@ -1,0 +1,75 @@
+"""Unit tests for the block table (the "page table" analogue)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import BlockState, BlockTable
+
+
+def _tree():
+    return {
+        "emb": jnp.zeros((1024, 64), jnp.float32),   # 256 KiB
+        "bias": jnp.zeros((7,), jnp.float32),        # tiny leaf
+        "scalar": jnp.float32(3.0),                  # scalar leaf
+    }
+
+
+def test_partitioning_covers_every_row():
+    table = BlockTable(_tree(), block_bytes=16 << 10)  # 64 rows/block
+    emb = next(h for h in table.leaf_handles if h.path == "emb")
+    assert [b.start for b in emb.blocks] == list(range(0, 1024, 64))
+    assert emb.blocks[-1].stop == 1024
+    assert sum(b.stop - b.start for b in emb.blocks) == 1024
+    # every leaf gets >= 1 block, including scalars
+    assert all(len(h.blocks) >= 1 for h in table.leaf_handles)
+    assert table.total_bytes == 1024 * 64 * 4 + 7 * 4 + 4
+
+
+def test_block_bytes_close_to_target():
+    table = BlockTable(_tree(), block_bytes=16 << 10)
+    emb = next(h for h in table.leaf_handles if h.path == "emb")
+    for b in emb.blocks:
+        assert b.nbytes == 16 << 10
+
+
+def test_flag_machine_trylock_semantics():
+    table = BlockTable(_tree(), block_bytes=16 << 10)
+    key = table.blocks[0].key
+    assert table.state(key) == BlockState.UNCOPIED
+    assert table.try_acquire(key)            # won the trylock
+    assert not table.try_acquire(key)        # second acquire loses
+    table.mark(key, BlockState.COPIED)
+    assert table.state(key) == BlockState.COPIED
+    assert not table.try_acquire(key)        # copied blocks never re-lock
+
+
+def test_two_way_pointer_closes_when_leaf_done():
+    table = BlockTable(_tree(), block_bytes=16 << 10)
+    emb = next(h for h in table.leaf_handles if h.path == "emb")
+    assert not table.leaf_done(emb.leaf_id)
+    for ref in emb.blocks:
+        assert table.try_acquire(ref.key)
+        table.mark(ref.key, BlockState.COPIED)
+    assert table.leaf_done(emb.leaf_id)  # O(1) check, no loop over PMDs
+
+
+def test_rollback_drops_protection():
+    table = BlockTable(_tree(), block_bytes=16 << 10)
+    emb = next(h for h in table.leaf_handles if h.path == "emb")
+    table.try_acquire(emb.blocks[0].key)
+    table.mark(emb.blocks[0].key, BlockState.COPIED)
+    n = table.rollback_leaf(emb.leaf_id)
+    assert n == len(emb.blocks) - 1
+    states = [table.state(b.key) for b in emb.blocks]
+    assert BlockState.UNCOPIED not in states and BlockState.COPYING not in states
+
+
+def test_mark_does_not_double_count_done():
+    table = BlockTable(_tree(), block_bytes=16 << 10)
+    emb = next(h for h in table.leaf_handles if h.path == "emb")
+    ref = emb.blocks[0]
+    table.try_acquire(ref.key)
+    table.mark(ref.key, BlockState.COPIED)
+    before = emb.twoway.remaining
+    table.mark(ref.key, BlockState.PERSISTED)  # COPIED->PERSISTED: no decrement
+    assert emb.twoway.remaining == before

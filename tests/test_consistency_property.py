@@ -1,0 +1,108 @@
+"""Property-based tests (hypothesis) for the system's core invariant:
+
+    For ANY interleaving of donated engine writes with the snapshot's
+    background copy, the materialized snapshot equals the fork-time (T0)
+    state exactly — the paper's consistency argument (§4.1, Table 2).
+
+Also checks the monotone flag machine and metrics invariants.
+"""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import PyTreeProvider, make_snapshotter
+
+MODES = ["blocking", "cow", "asyncfork"]
+
+
+@st.composite
+def update_script(draw):
+    """A random engine run: (rows, value) donated SET batches."""
+    n_rows = draw(st.sampled_from([64, 96, 128]))
+    n_updates = draw(st.integers(0, 12))
+    updates = []
+    for _ in range(n_updates):
+        k = draw(st.integers(1, 8))
+        rows = draw(
+            st.lists(st.integers(0, n_rows - 1), min_size=k, max_size=k, unique=True)
+        )
+        val = draw(st.floats(-100, 100, allow_nan=False, width=32))
+        updates.append((rows, val))
+    return n_rows, updates
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    script=update_script(),
+    mode=st.sampled_from(MODES),
+    block_bytes=st.sampled_from([512, 2048, 8192]),
+    threads=st.sampled_from([1, 3]),
+)
+def test_snapshot_equals_t0_under_any_interleaving(script, mode, block_bytes, threads):
+    n_rows, updates = script
+    state = {
+        "kv": jnp.arange(n_rows * 32, dtype=jnp.float32).reshape(n_rows, 32),
+        "meta": jnp.zeros((4,), jnp.float32),
+    }
+    prov = PyTreeProvider(state)
+    t0 = np.asarray(prov.leaf(0)).copy()  # 'kv' flattens first
+    snapper = make_snapshotter(
+        mode, prov, block_bytes=block_bytes, copier_threads=threads
+    )
+    snap = snapper.fork()
+    for rows, val in updates:
+        snapper.before_write(0, rows)
+        old = prov.leaf(0)
+        prov.update_leaf(0, old.at[np.asarray(rows)].set(val), delete_old=True)
+    tree = snap.to_tree()
+    np.testing.assert_array_equal(np.asarray(tree["kv"]), t0)
+    # live state reflects the last update per row
+    expect = t0.copy()
+    for rows, val in updates:
+        expect[np.asarray(rows)] = val
+    np.testing.assert_allclose(np.asarray(prov.leaf(0)), expect, rtol=0, atol=0)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    mode=st.sampled_from(MODES),
+    block_bytes=st.sampled_from([512, 4096]),
+)
+def test_every_block_copied_exactly_once(mode, block_bytes):
+    """parent-copied + child-copied == total blocks; no double copy."""
+    state = {"kv": jnp.ones((128, 64), jnp.float32)}
+    prov = PyTreeProvider(state)
+    snapper = make_snapshotter(mode, prov, block_bytes=block_bytes, copier_threads=2)
+    snap = snapper.fork()
+    for i in range(6):
+        snapper.before_write(0, [i * 16])
+        old = prov.leaf(0)
+        prov.update_leaf(0, old.at[i * 16].set(-1.0), delete_old=True)
+    tree = snap.to_tree()
+    assert np.asarray(tree["kv"]).shape == (128, 64)
+    m = snap.metrics
+    if mode == "blocking":
+        assert m.copied_blocks_parent == 0
+        assert m.copied_blocks_child == snap.table.n_blocks
+    else:
+        assert m.copied_blocks_parent + m.copied_blocks_child == snap.table.n_blocks
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.data())
+def test_metrics_out_of_service_bounded_by_wall_time(data):
+    import time
+
+    mode = data.draw(st.sampled_from(MODES))
+    state = {"kv": jnp.ones((256, 64), jnp.float32)}
+    prov = PyTreeProvider(state)
+    snapper = make_snapshotter(mode, prov, block_bytes=1024, copier_threads=2)
+    t_wall0 = time.perf_counter()
+    snap = snapper.fork()
+    for i in range(4):
+        snapper.before_write(0, [i])
+        old = prov.leaf(0)
+        prov.update_leaf(0, old.at[i].set(0.5), delete_old=True)
+    snap.to_tree()
+    wall = time.perf_counter() - t_wall0 + 1e-3
+    assert 0.0 <= snap.metrics.out_of_service_s <= wall

@@ -1,0 +1,71 @@
+"""§4.4 error handling: copy failures must roll back protection, abort the
+child, and leave the parent (engine) fully functional."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    AsyncForkSnapshotter,
+    FailingProvider,
+    MemorySink,
+    SnapshotError,
+)
+
+
+def _state():
+    return {"table": jnp.ones((256, 128), jnp.float32)}
+
+
+def test_child_copy_failure_aborts_snapshot_and_rolls_back():
+    prov = FailingProvider(_state(), fail_on=lambda ref: ref.block_id == 3)
+    snapper = AsyncForkSnapshotter(prov, block_bytes=4096, copier_threads=1)
+    snap = snapper.fork()
+    with pytest.raises(SnapshotError):
+        snap.wait(10)
+    assert snap.aborted
+    counts = snap.table.counts()
+    # rollback: nothing left write-protected or locked (§4.4 case 2)
+    assert counts["UNCOPIED"] == 0 and counts["COPYING"] == 0
+    assert all(h.twoway.error is not None for h in snap.table.leaf_handles)
+
+
+def test_parent_proactive_copy_failure_aborts_but_engine_survives():
+    # fail only when the PARENT does the proactive copy of block 5
+    prov = FailingProvider(_state(), fail_on=lambda ref: ref.block_id == 5)
+    snapper = AsyncForkSnapshotter(prov, block_bytes=4096, copier_threads=1,
+                                   yield_every=0)
+    # freeze the copier by monkeypatching its shard empty: use 0 threads trick
+    snap = snapper.fork()
+    # race: parent may or may not hit the failing block first; either way the
+    # engine write path must not raise.
+    rows = range(5 * 8, 5 * 8 + 4)
+    snapper.before_write(0, rows)  # must NOT raise even if snapshot aborts
+    old = prov.leaf(0)
+    prov.update_leaf(0, old.at[np.asarray(list(rows))].set(-1.0), delete_old=True)
+    assert float(prov.leaf(0)[40, 0]) == -1.0  # engine state intact
+
+
+def test_persister_abort_cleans_sink():
+    prov = FailingProvider(_state(), fail_on=lambda ref: ref.block_id == 7)
+    snapper = AsyncForkSnapshotter(prov, block_bytes=4096, copier_threads=1)
+    sink = MemorySink()
+    snap = snapper.fork(sink)
+    with pytest.raises(SnapshotError):
+        snap.wait_persisted(10)
+    assert sink.aborted or not sink.closed
+    assert not sink.blocks  # partial output removed
+
+
+def test_engine_can_fork_again_after_abort():
+    prov = FailingProvider(_state(), fail_on=lambda ref: ref.block_id == 2,
+                           max_failures=1)
+    snapper = AsyncForkSnapshotter(prov, block_bytes=4096, copier_threads=1)
+    s1 = snapper.fork()
+    with pytest.raises(SnapshotError):
+        s1.wait(10)
+    s2 = snapper.fork()  # budget exhausted -> this one succeeds
+    s2.wait(10)
+    assert s2.ok
+    tree = s2.to_tree()
+    np.testing.assert_array_equal(np.asarray(tree["table"]),
+                                  np.asarray(prov.leaf(0)))

@@ -1,0 +1,92 @@
+"""KV store + engine tests (the paper's parent process)."""
+import numpy as np
+import pytest
+
+from repro.core import FileSink, read_file_snapshot
+from repro.kvstore import KVEngine, KVStore, Workload
+
+
+def test_set_get_round_trip():
+    store = KVStore(capacity=4096, row_width=8, block_rows=256, seed=0)
+    rows = np.array([0, 5, 300, 4095], dtype=np.int64)
+    vals = np.random.rand(4, 8).astype(np.float32)
+    store.set(rows, vals)
+    got = store.get(rows)
+    order = np.argsort(rows)  # get() returns block-grouped order
+    np.testing.assert_allclose(got, vals[order], rtol=0, atol=0)
+
+
+def test_set_donates_only_touched_block():
+    store = KVStore(capacity=1024, block_rows=256, row_width=8)
+    untouched_before = store.provider.leaf(3)
+    store.set(np.array([0, 1]), np.zeros((2, 8), np.float32))
+    assert store.provider.leaf(3) is untouched_before  # other blocks alive
+
+
+def test_before_write_hook_called_per_block():
+    store = KVStore(capacity=1024, block_rows=256, row_width=8)
+    seen = []
+    store.set(
+        np.array([0, 256, 700]),
+        np.zeros((3, 8), np.float32),
+        before_write=seen.append,
+    )
+    assert seen == [0, 1, 2]
+
+
+def test_capacity_rounds_to_block_multiple():
+    store = KVStore(capacity=1000, block_rows=256, row_width=8)
+    assert store.capacity == 1024 and store.n_blocks == 4
+
+
+def test_workload_event_stream_reproducible():
+    wl = Workload(rate_qps=500, set_ratio=0.5, batch=8, seed=3)
+    a = wl.events(4096, 0.5)
+    b = wl.events(4096, 0.5)
+    assert len(a) == len(b) > 0
+    assert all(x.t == y.t and x.op == y.op and np.array_equal(x.rows, y.rows)
+               for x, y in zip(a, b))
+    assert {e.op for e in a} == {"set", "get"}
+
+
+@pytest.mark.parametrize("pattern", ["uniform", "gaussian", "zipf"])
+def test_workload_patterns_in_range(pattern):
+    wl = Workload(rate_qps=500, pattern=pattern, batch=8, seed=1)
+    for ev in wl.events(4096, 0.2):
+        assert ev.rows.min() >= 0 and ev.rows.max() < 4096
+
+
+@pytest.mark.parametrize("mode", ["blocking", "cow", "asyncfork"])
+def test_engine_snapshot_consistency_end_to_end(mode, tmp_path):
+    """BGSAVE during live traffic -> persisted file equals T0 state."""
+    store = KVStore(capacity=2048, block_rows=256, row_width=16, seed=0)
+    eng = KVEngine(store, mode=mode, copier_threads=2,
+                   persist_bandwidth=None, copier_duty=1.0)
+    store.warmup(batch=8)
+    t0 = store.read_all().copy()
+    sink = FileSink(str(tmp_path / mode))
+    snap = eng.bgsave(sink)
+    # hammer the store while the snapshot is in flight
+    wl = Workload(rate_qps=1e9, set_ratio=1.0, batch=8, seed=2)
+    vals = np.random.rand(8, 16).astype(np.float32)
+    for ev in wl.events(store.capacity, 1e-4)[:50]:
+        store.set(ev.rows, vals, before_write=eng._write_hook)
+    assert snap.wait_persisted(30)
+    restored = read_file_snapshot(str(tmp_path / mode))
+    # leaf paths are blocks/<i>
+    got = np.concatenate([restored[f"blocks/{b}"] for b in range(store.n_blocks)])
+    np.testing.assert_array_equal(got, t0)
+    assert store.read_all().shape == t0.shape  # engine alive and well
+
+
+def test_engine_report_metrics_present():
+    store = KVStore(capacity=2048, block_rows=256, row_width=16)
+    eng = KVEngine(store, mode="asyncfork", copier_threads=2,
+                   persist_bandwidth=None, copier_duty=1.0)
+    wl = Workload(rate_qps=300, set_ratio=0.5, batch=8, seed=0)
+    rep = eng.run(wl, duration_s=0.5, bgsave_at=(0.3,))
+    s = rep.summary()
+    for k in ("snap_p99_ms", "snap_max_ms", "normal_p99_ms", "fork_ms",
+              "interruptions", "out_of_service_ms"):
+        assert k in s
+    assert rep.snapshot_lat.size + rep.normal_lat.size > 0

@@ -1,0 +1,148 @@
+"""Behavioural tests for the three snapshotters (paper §3, §4, §5.2)."""
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    AsyncForkSnapshotter,
+    BlockingSnapshotter,
+    CowSnapshotter,
+    MemorySink,
+    NullSink,
+    PyTreeProvider,
+    make_snapshotter,
+)
+
+
+def _state(rows=256, cols=128):
+    return {
+        "table": jnp.arange(rows * cols, dtype=jnp.float32).reshape(rows, cols),
+        "aux": jnp.full((16, 32), 7.0, jnp.float32),
+    }
+
+
+def _copy_host(prov):
+    import jax
+
+    return jax.tree_util.tree_map(lambda a: np.asarray(a).copy(), prov.tree())
+
+
+def _donated_update(prov, snapper, leaf_id, rows, value):
+    """The engine's donated write: proactive sync -> update -> delete old."""
+    snapper.before_write(leaf_id, rows)
+    old = prov.leaf(leaf_id)
+    new = old.at[np.asarray(rows)].set(value)
+    prov.update_leaf(leaf_id, new, delete_old=True)  # donation
+
+
+@pytest.mark.parametrize("mode", ["blocking", "cow", "asyncfork"])
+def test_snapshot_is_point_in_time_consistent(mode):
+    prov = PyTreeProvider(_state())
+    snapper = make_snapshotter(mode, prov, block_bytes=4096, copier_threads=2)
+    t0 = _copy_host(prov)
+    snap = snapper.fork()
+    for step in range(8):
+        _donated_update(prov, snapper, 1, list(range(step * 4, step * 4 + 4)), -1.0)
+    tree = snap.to_tree()
+    np.testing.assert_array_equal(np.asarray(tree["table"]), t0["table"])
+    np.testing.assert_array_equal(np.asarray(tree["aux"]), t0["aux"])
+    # and the engine's live state has the new values
+    assert float(prov.leaf(1)[0, 0]) == -1.0
+
+
+def test_asyncfork_fork_is_metadata_only():
+    """Fig 22: Async-fork's fork() must be far cheaper than default fork."""
+    prov = PyTreeProvider(_state(rows=4096, cols=512))  # 8 MiB leaf
+    blocking = BlockingSnapshotter(prov, block_bytes=64 << 10)
+    async_ = AsyncForkSnapshotter(prov, block_bytes=64 << 10, copier_threads=2)
+    s1 = blocking.fork()
+    s2 = async_.fork()
+    s2.wait(10)
+    assert s2.metrics.fork_s < s1.metrics.fork_s / 3
+    assert s2.metrics.copied_blocks_child + s2.metrics.copied_blocks_parent == s2.table.n_blocks
+
+
+def test_blocking_never_interrupts_after_fork():
+    prov = PyTreeProvider(_state())
+    snapper = BlockingSnapshotter(prov, block_bytes=4096)
+    snapper.fork()
+    stall = snapper.before_write(1, range(10))
+    snap = snapper.active()
+    assert stall == 0.0 or all(s.metrics.n_interruptions == 0 for s in snap)
+
+
+def test_cow_interrupts_for_whole_persist_window():
+    """ODF model: writes stall while the (slow) persister is running."""
+    prov = PyTreeProvider(_state(rows=512, cols=128))
+    snapper = CowSnapshotter(prov, block_bytes=4096)
+    sink = NullSink(bandwidth=2e6)  # slow disk: ~130ms persist window
+    snap = snapper.fork(sink)
+    time.sleep(0.01)
+    _donated_update(prov, snapper, 1, range(4), -5.0)
+    assert snap.metrics.n_interruptions >= 1
+    snap.wait_persisted(30)
+    # after the window, writes are free
+    n_before = snap.metrics.n_interruptions
+    _donated_update(prov, snapper, 1, range(4, 8), -6.0)
+    assert snap.metrics.n_interruptions == n_before
+
+
+def test_asyncfork_interrupts_only_during_copy_window():
+    prov = PyTreeProvider(_state(rows=512, cols=128))
+    snapper = AsyncForkSnapshotter(prov, block_bytes=4096, copier_threads=1)
+    sink = NullSink(bandwidth=2e6)  # persist long outlives the copy window
+    snap = snapper.fork(sink)
+    snap.wait(10)  # copy window closed; persister still running
+    assert not snap.persist_done.is_set()
+    n_before = snap.metrics.n_interruptions
+    _donated_update(prov, snapper, 1, range(4), -5.0)
+    assert snap.metrics.n_interruptions == n_before  # no stall post-copy
+    snap.wait_persisted(30)
+
+
+def test_parallel_copiers_cover_all_blocks():
+    prov = PyTreeProvider(_state(rows=2048, cols=256))
+    for threads in (1, 2, 4, 8):
+        snapper = AsyncForkSnapshotter(prov, block_bytes=16 << 10, copier_threads=threads)
+        snap = snapper.fork()
+        snap.wait(10)
+        counts = snap.table.counts()
+        assert counts["UNCOPIED"] == 0 and counts["COPYING"] == 0
+        tree = snap.to_tree()
+        np.testing.assert_array_equal(np.asarray(tree["table"]), np.asarray(prov.leaf(1)))
+
+
+def test_consecutive_snapshots_serialize_per_leaf():
+    """§5.2: a second fork proactively completes the previous child's copy."""
+    prov = PyTreeProvider(_state(rows=4096, cols=512))
+    snapper = AsyncForkSnapshotter(prov, block_bytes=32 << 10, copier_threads=1)
+    t0 = _copy_host(prov)
+    s1 = snapper.fork()
+    s2 = snapper.fork()  # immediately: s1's copier can't have finished
+    # s1 must be complete (every block copied) the moment fork #2 returns
+    assert all(snapper.provider is prov for _ in [0])
+    assert s1.table.counts()["UNCOPIED"] == 0
+    _donated_update(prov, snapper, 1, range(8), -3.0)
+    s1.wait(10)
+    s2.wait(10)
+    np.testing.assert_array_equal(np.asarray(s1.to_tree()["table"]), t0["table"])
+    np.testing.assert_array_equal(np.asarray(s2.to_tree()["table"]), t0["table"])
+
+
+def test_memory_sink_round_trip():
+    prov = PyTreeProvider(_state())
+    snapper = AsyncForkSnapshotter(prov, block_bytes=4096, copier_threads=2)
+    sink = MemorySink()
+    snap = snapper.fork(sink)
+    snap.wait_persisted(10)
+    assert sink.closed
+    total = sum(b.nbytes for b in sink.blocks.values())
+    assert total == snap.table.total_bytes
+
+
+def test_unknown_mode_raises():
+    prov = PyTreeProvider(_state())
+    with pytest.raises(ValueError):
+        make_snapshotter("sharedpt", prov)

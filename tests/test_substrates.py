@@ -1,0 +1,86 @@
+"""Optimizer, schedule, data pipeline, sharding resolution."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import SHAPES, get_config
+from repro.configs.base import ShapeCfg
+from repro.data.pipeline import SyntheticPipeline, batch_pspecs, make_batch_specs
+from repro.optim import adamw_init, adamw_update, cosine_schedule
+from repro.optim.adamw import global_norm
+
+
+def test_adamw_reduces_quadratic_loss():
+    params = {"w": jnp.array([3.0, -2.0])}
+    state = adamw_init(params)
+    loss = lambda p: jnp.sum(p["w"] ** 2)
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        params, state = adamw_update(params, g, state, lr=0.05, weight_decay=0.0)
+    assert float(loss(params)) < 1e-2
+    assert int(state.step) == 200
+
+
+def test_adamw_clips_global_norm():
+    params = {"w": jnp.ones((4,))}
+    state = adamw_init(params)
+    huge = {"w": jnp.full((4,), 1e6)}
+    p2, s2 = adamw_update(params, huge, state, lr=0.1, clip_norm=1.0,
+                          weight_decay=0.0)
+    # update magnitude bounded by lr * (1/sqrt(vhat)) ~ O(lr)
+    assert float(jnp.abs(p2["w"] - params["w"]).max()) < 1.0
+
+
+def test_moments_are_fp32():
+    params = {"w": jnp.ones((4,), jnp.bfloat16)}
+    state = adamw_init(params)
+    assert state.m["w"].dtype == jnp.float32
+    assert state.v["w"].dtype == jnp.float32
+
+
+def test_cosine_schedule_shape():
+    assert float(cosine_schedule(jnp.int32(0))) < 1e-5
+    peak = float(cosine_schedule(jnp.int32(100)))
+    end = float(cosine_schedule(jnp.int32(10_000)))
+    assert peak > end > 0
+
+
+def test_batch_specs_cover_all_cells():
+    for arch in ("phi3-mini-3.8b", "whisper-medium", "qwen2-vl-7b"):
+        cfg = get_config(arch)
+        for shape in SHAPES.values():
+            specs = make_batch_specs(cfg, shape)
+            assert "tokens" in specs
+            ps = batch_pspecs(cfg, shape, multi_pod=True)
+            assert set(ps) == set(specs)
+
+
+def test_pipeline_prefetch_and_reproducibility():
+    cfg = get_config("phi3-mini-3.8b").reduced()
+    shape = ShapeCfg("t", seq_len=32, global_batch=2, kind="train")
+    a = next(iter(SyntheticPipeline(cfg, shape, seed=3)))
+    b = next(iter(SyntheticPipeline(cfg, shape, seed=3)))
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    assert a["tokens"].shape == (2, 33)
+    assert a["tokens"].max() < cfg.vocab
+
+
+def test_resolve_pspec_divisibility():
+    from repro.runtime.sharding import resolve_pspec
+
+    mesh = jax.make_mesh((1,), ("model",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    # mesh axis of size 1 divides everything
+    assert resolve_pspec(P("model", None), (8, 4), mesh) == P("model", None)
+    # unknown logical names drop to None
+    assert resolve_pspec(P("layers", "model"), (8, 4), mesh) == P(None, "model")
+    # non-divisible dims replicate (simulated via axis size 1 is trivial;
+    # use shape 0 edge to ensure no crash)
+    assert resolve_pspec(None, (8,), mesh) == P()
+
+
+def test_global_norm():
+    t = {"a": jnp.ones((3,)), "b": jnp.full((4,), 2.0)}
+    assert np.isclose(float(global_norm(t)), np.sqrt(3 + 16))
