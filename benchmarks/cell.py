@@ -24,6 +24,8 @@ def run(spec):
         copier_threads=spec.get("threads", 8),
         persist_bandwidth=spec.get("persist_bw", 50e6),
         copier_duty=spec.get("duty", 0.3 / 8),
+        backend=spec.get("backend", "host"),
+        incremental=spec.get("incremental", False),
     )
     wl = Workload(
         rate_qps=spec.get("qps", 400),

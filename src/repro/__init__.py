@@ -1,0 +1,1 @@
+"""Async-fork snapshot substrate for JAX state (see DESIGN.md)."""

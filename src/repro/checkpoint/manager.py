@@ -52,13 +52,26 @@ class TrainSnapshotManager:
         copier_threads: int = 4,
         block_bytes: int = 4 << 20,
         copier_duty: float = 1.0,
+        backend: str = "host",
+        incremental: bool = False,
+        full_every: int = 4,
     ):
+        """``incremental=True`` turns the checkpoint stream into a delta
+        chain: each save diffs against the previous save's retained T0
+        image (the ``dirty`` kernel) and persists only changed blocks,
+        with a full-snapshot anchor every ``full_every`` saves so restore
+        chains stay short. ``backend`` picks host or device staging."""
         self.directory = directory
         self.mode = mode
         self.copier_threads = copier_threads
         self.block_bytes = block_bytes
         self.copier_duty = copier_duty
+        self.backend = backend
+        self.incremental = bool(incremental)
+        self.full_every = max(1, int(full_every))
         self._snaps: List[Tuple[SnapshotHandle, PyTreeProvider]] = []
+        self._chain_base: Optional[Tuple[SnapshotHandle, str]] = None
+        self._chain_len = 0
         self.stall_log: List[Tuple[str, float]] = []  # (what, seconds)
 
     # ------------------------------------------------------------------ #
@@ -76,24 +89,46 @@ class TrainSnapshotManager:
                     prov.update_leaf(h.leaf_id, _TOMBSTONE)
 
     def save(self, step: int, params, opt_state: AdamWState) -> SnapshotHandle:
-        """Take a checkpoint of (params, opt_state) at this step boundary."""
+        """Take a checkpoint of (params, opt_state) at this step boundary.
+
+        With ``incremental`` enabled, saves between anchors are deltas:
+        the snapshot diffs against the previous save's T0 image and its
+        FileSink manifest records the parent directory + carried blocks.
+        """
         t0 = time.perf_counter()
         state = {"params": params, "opt": {"step": opt_state.step,
                                            "m": opt_state.m, "v": opt_state.v}}
         provider = PyTreeProvider(state)  # pins T0 refs (CoW data pages)
-        path = os.path.join(self.directory, f"step_{step:08d}")
-        sink = FileSink(path)
+        dirname = f"step_{step:08d}"
+        path = os.path.join(self.directory, dirname)
+        base: Optional[SnapshotHandle] = None
+        parent: Optional[str] = None
+        if self.incremental and self._chain_base is not None:
+            prev_snap, prev_dir = self._chain_base
+            if prev_snap.aborted:
+                # the base's sink directory is gone (FileSink.abort);
+                # restart the chain with a fresh full anchor
+                self._chain_base, self._chain_len = None, 0
+            elif self._chain_len % self.full_every != 0:
+                base, parent = prev_snap, prev_dir
+        sink = FileSink(path, parent=parent)
         if self.mode == "blocking":
-            snapper = BlockingSnapshotter(provider, block_bytes=self.block_bytes)
+            snapper = BlockingSnapshotter(
+                provider, block_bytes=self.block_bytes, backend=self.backend
+            )
         else:
             snapper = AsyncForkSnapshotter(
                 provider,
                 block_bytes=self.block_bytes,
                 copier_threads=self.copier_threads,
                 copier_duty=self.copier_duty,
+                backend=self.backend,
             )
-        snap = snapper.fork(sink)
+        snap = snapper.fork(sink, incremental=base is not None, base=base)
         self._snaps.append((snap, provider))
+        if self.incremental:
+            self._chain_base = (snap, dirname)
+            self._chain_len += 1
         self.stall_log.append(("save", time.perf_counter() - t0))
         return snap
 

@@ -1,9 +1,23 @@
 # The paper's primary contribution: Async-fork as a snapshot substrate for
 # sharded JAX state (see DESIGN.md for the page-table -> block-table mapping).
-from repro.core.blocks import BlockRef, BlockState, BlockTable, LeafHandle, TwoWayPointer
+from repro.core.blocks import (
+    BlockGeometry,
+    BlockRef,
+    BlockState,
+    BlockTable,
+    LeafHandle,
+    TwoWayPointer,
+)
 from repro.core.metrics import SnapshotMetrics
 from repro.core.provider import FailingProvider, PyTreeProvider
 from repro.core.sinks import FileSink, MemorySink, NullSink, Sink, read_file_snapshot
+from repro.core.staging import (
+    STAGING_BACKENDS,
+    DeviceStaging,
+    HostStaging,
+    StagingBackend,
+    make_staging,
+)
 from repro.core.snapshot import (
     SNAPSHOTTERS,
     AsyncForkSnapshotter,
@@ -16,6 +30,12 @@ from repro.core.snapshot import (
 )
 
 __all__ = [
+    "BlockGeometry",
+    "StagingBackend",
+    "HostStaging",
+    "DeviceStaging",
+    "STAGING_BACKENDS",
+    "make_staging",
     "BlockRef",
     "BlockState",
     "BlockTable",

@@ -82,6 +82,22 @@ class TwoWayPointer:
             self.closed = True
 
 
+@dataclasses.dataclass(frozen=True)
+class BlockGeometry:
+    """Block-table layout of one leaf, shared by staging backends and the
+    dirty-epoch comparison: the leaf reshaped to (n_blocks, block_elems)
+    with only the final block zero-padded."""
+
+    n_blocks: int
+    rows_per_block: int
+    row_elems: int
+    block_elems: int
+    total_elems: int
+
+    def matches(self, other: "BlockGeometry") -> bool:
+        return self == other
+
+
 @dataclasses.dataclass
 class LeafHandle:
     """One "VMA": a pytree leaf plus its block list and two-way pointer."""
@@ -92,6 +108,26 @@ class LeafHandle:
     dtype: Any
     blocks: List[BlockRef]
     twoway: TwoWayPointer
+
+    def geometry(self) -> Optional[BlockGeometry]:
+        """Blocked layout of this leaf, or None for a zero-block leaf."""
+        if not self.blocks:
+            return None
+        rows_per_block = self.blocks[0].stop - self.blocks[0].start
+        if self.shape:
+            total = 1
+            for d in self.shape:
+                total *= int(d)
+            row_elems = total // max(1, int(self.shape[0]))
+        else:
+            total = row_elems = 1
+        return BlockGeometry(
+            n_blocks=len(self.blocks),
+            rows_per_block=rows_per_block,
+            row_elems=row_elems,
+            block_elems=rows_per_block * row_elems,
+            total_elems=total,
+        )
 
 
 class BlockTable:

@@ -24,6 +24,7 @@ class SnapshotMetrics:
     persist_s: float = 0.0            # full snapshot window (fork -> durable)
     copied_blocks_child: int = 0
     copied_blocks_parent: int = 0     # proactive syncs / CoW faults
+    inherited_blocks: int = 0         # clean blocks adopted from the base epoch
     aborted: bool = False
 
     def __post_init__(self):
@@ -69,4 +70,5 @@ class SnapshotMetrics:
             "out_of_service_ms": self.out_of_service_s * 1e3,
             "parent_copied_blocks": float(self.copied_blocks_parent),
             "child_copied_blocks": float(self.copied_blocks_child),
+            "inherited_blocks": float(self.inherited_blocks),
         }

@@ -62,6 +62,16 @@ class PyTreeProvider:
         with self._leaf_locks[leaf_id]:
             return self._leaves[leaf_id]
 
+    def with_leaf(self, leaf_id: int, fn: Callable[[Any], Any]):
+        """Run ``fn(live_leaf)`` under the leaf lock.
+
+        Device-staging backends use this to launch + complete an on-device
+        block copy while the buffer is pinned: a donated update cannot
+        delete the source buffer until ``fn`` returns.
+        """
+        with self._leaf_locks[leaf_id]:
+            return fn(self._leaves[leaf_id])
+
     def tree(self):
         with self._meta_lock:
             return jax.tree_util.tree_unflatten(self.treedef, list(self._leaves))

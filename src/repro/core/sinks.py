@@ -19,10 +19,24 @@ from repro.core.blocks import BlockRef, LeafHandle
 
 
 class Sink:
+    """``write_block`` accepts host numpy blocks or device (jax) blocks —
+    device-staged snapshots hand sinks device arrays and the sink decides
+    when (if ever) to pull the bytes to the host."""
+
+    inherited: frozenset = frozenset()
+
+    def set_delta(self, inherited, parent: Optional[str] = None) -> None:
+        """Incremental epochs: declare the block keys this snapshot does
+        NOT carry (they are inherited from the base epoch). Called before
+        ``open``. ``parent`` optionally names the base snapshot."""
+        self.inherited = frozenset(inherited)
+        if parent is not None:
+            self.parent = parent
+
     def open(self, leaf_handles: List[LeafHandle]) -> None:  # pragma: no cover
         raise NotImplementedError
 
-    def write_block(self, ref: BlockRef, data: np.ndarray) -> None:  # pragma: no cover
+    def write_block(self, ref: BlockRef, data) -> None:  # pragma: no cover
         raise NotImplementedError
 
     def close(self) -> None:
@@ -79,15 +93,22 @@ class FileSink(Sink):
     Layout: ``<dir>/leaf_<id>.bin`` written at block offsets (pwrite-style,
     so parallel persisters could write out of order), plus ``manifest.json``
     describing paths/shapes/dtypes — enough to restore without pickles.
+
+    Incremental epochs: the manifest's per-leaf ``carried`` list records
+    which block ids this snapshot actually wrote; everything else is
+    inherited from the ``parent`` snapshot directory (a sibling directory
+    name or an absolute path). ``read_file_snapshot`` follows the chain.
     """
 
-    def __init__(self, directory: str):
+    def __init__(self, directory: str, parent: Optional[str] = None):
         self.dir = directory
+        self.parent = parent
         self._files: Dict[int, object] = {}
         self._lock = threading.Lock()
 
     def open(self, leaf_handles):
         os.makedirs(self.dir, exist_ok=True)
+        inherited = self.inherited
         manifest = {
             "leaves": [
                 {
@@ -96,10 +117,17 @@ class FileSink(Sink):
                     "shape": list(h.shape),
                     "dtype": h.dtype.name if hasattr(h.dtype, "name") else str(h.dtype),
                     "file": f"leaf_{h.leaf_id}.bin",
+                    "blocks": [[b.start, b.stop, b.nbytes] for b in h.blocks],
+                    "carried": [
+                        b.block_id for b in h.blocks
+                        if b.key not in inherited
+                    ],
                 }
                 for h in leaf_handles
             ]
         }
+        if self.parent is not None:
+            manifest["parent"] = self.parent
         with open(os.path.join(self.dir, "manifest.json.tmp"), "w") as f:
             json.dump(manifest, f)
         self._handles = {h.leaf_id: h for h in leaf_handles}
@@ -136,13 +164,48 @@ class FileSink(Sink):
 
 
 def read_file_snapshot(directory: str):
-    """Restore {path: np.ndarray} from a FileSink directory."""
+    """Restore {path: np.ndarray} from a FileSink directory.
+
+    Incremental snapshots resolve transparently: blocks a manifest does
+    not carry are filled from the ``parent`` snapshot (itself possibly a
+    delta — the chain bottoms out at a full-snapshot anchor).
+    """
     with open(os.path.join(directory, "manifest.json")) as f:
         manifest = json.load(f)
+
+    parent_cache = {}
+
+    def _parent():
+        # resolved lazily: a manifest may name a parent yet carry every
+        # block (e.g. nothing was clean), and the parent directory need
+        # not exist in that case
+        if "out" not in parent_cache:
+            parent = manifest["parent"]
+            pdir = parent if os.path.isabs(parent) else os.path.join(
+                os.path.dirname(os.path.abspath(directory)), parent
+            )
+            parent_cache["out"] = read_file_snapshot(pdir)
+        return parent_cache["out"]
+
+    has_parent = manifest.get("parent") is not None
     out = {}
     for leaf in manifest["leaves"]:
         arr = np.fromfile(
             os.path.join(directory, leaf["file"]), dtype=np.dtype(leaf["dtype"])
         )
-        out[leaf["path"]] = arr.reshape(leaf["shape"]) if leaf["shape"] else arr[0]
+        arr = arr.reshape(leaf["shape"]) if leaf["shape"] else (arr[0] if arr.size else arr)
+        blocks = leaf.get("blocks")
+        carried = leaf.get("carried")
+        if has_parent and blocks is not None and carried is not None:
+            carried_set = set(carried)
+            missing = [b for b in range(len(blocks)) if b not in carried_set]
+            if missing:
+                parr = _parent()[leaf["path"]]
+                if leaf["shape"]:
+                    for b in missing:
+                        start, stop, _ = blocks[b]
+                        arr[start:stop] = parr[start:stop]
+                else:
+                    arr = parr  # scalar leaf inherited wholesale
+        out[leaf["path"]] = arr
     return out

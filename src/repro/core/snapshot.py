@@ -24,16 +24,17 @@ from __future__ import annotations
 import sys
 import threading
 import time
-from typing import Dict, Iterable, List, Optional, Sequence, Tuple
-
-import numpy as np
+from typing import List, Optional, Sequence, Tuple
 
 from repro.core.blocks import BlockRef, BlockState, BlockTable
 from repro.core.metrics import SnapshotMetrics
 from repro.core.provider import PyTreeProvider
 from repro.core.sinks import Sink
+from repro.core.staging import HostStaging, StagingBackend, make_staging
+from repro.kernels.ops import dirty_op, flags_from_device, to_blocked
 
 import jax
+import jax.numpy as jnp
 
 
 class SnapshotError(RuntimeError):
@@ -43,49 +44,42 @@ class SnapshotError(RuntimeError):
 class SnapshotHandle:
     """One in-flight snapshot epoch ("the child process")."""
 
-    def __init__(self, table: BlockTable, provider: PyTreeProvider, mode: str):
+    def __init__(
+        self,
+        table: BlockTable,
+        provider: PyTreeProvider,
+        mode: str,
+        backend: Optional[StagingBackend] = None,
+    ):
         self.table = table
         self.provider = provider
         self.mode = mode
+        self.backend = backend if backend is not None else HostStaging(table, provider)
         self.metrics = SnapshotMetrics()
         self.error: Optional[BaseException] = None
         self.aborted = False
         self.t0 = time.perf_counter()
+        self.fork_start = self.t0  # overwritten by Snapshotter.fork() entry
+        self.inherited: set = set()  # block keys carried from the base epoch
         self.copy_done = threading.Event()     # child finished PMD/PTE copy
         self.persist_done = threading.Event()  # snapshot durable ("RDB written")
-        self._staging: Dict[int, np.ndarray] = {}
-        self._staging_lock = threading.Lock()
         self._abort_lock = threading.Lock()
 
     # ------------------------------------------------------------------ #
-    # staging                                                            #
+    # staging (delegated to the pluggable backend)                       #
     # ------------------------------------------------------------------ #
-    def _leaf_staging(self, leaf_id: int) -> np.ndarray:
-        with self._staging_lock:
-            buf = self._staging.get(leaf_id)
-            if buf is None:
-                h = self.table.leaf_handles[leaf_id]
-                shape = h.shape if h.shape else (1,)
-                buf = np.empty(shape, dtype=h.dtype)
-                self._staging[leaf_id] = buf
-        return buf
-
     def stage_block(self, ref: BlockRef) -> None:
         """Copy one block's T0 content into the snapshot's private staging.
 
         Caller must hold the block in COPYING state (the trylock). Errors
         propagate; the caller routes them into :meth:`abort` (§4.4).
         """
-        buf = self._leaf_staging(ref.leaf_id)
-        if self.table.leaf_handles[ref.leaf_id].shape:
-            self.provider.read_block_into(ref, buf[ref.start : ref.stop])
-        else:
-            self.provider.read_block_into(ref, buf[0:1].reshape(()) if buf.ndim else buf)
+        self.backend.stage_block(ref)
 
-    def staged_block(self, ref: BlockRef) -> np.ndarray:
-        buf = self._staging[ref.leaf_id]
-        h = self.table.leaf_handles[ref.leaf_id]
-        return buf[ref.start : ref.stop] if h.shape else buf[0]
+    def staged_block(self, ref: BlockRef):
+        """Staged content of one block — host numpy (HostStaging) or a
+        device array (DeviceStaging); sinks accept either."""
+        return self.backend.staged_block(ref)
 
     # ------------------------------------------------------------------ #
     # parent-side proactive synchronization (§4.2)                        #
@@ -211,12 +205,7 @@ class SnapshotHandle:
         if self.mode == "cow" and not self.persist_done.is_set():
             self.finish()
         self.wait()
-        leaves = []
-        for h in self.table.leaf_handles:
-            buf = self._staging.get(h.leaf_id)
-            if buf is None:  # zero-block leaf
-                buf = np.empty(h.shape if h.shape else (1,), dtype=h.dtype)
-            leaves.append(buf if h.shape else buf[0])
+        leaves = [self.backend.leaf_array(h.leaf_id) for h in self.table.leaf_handles]
         return jax.tree_util.tree_unflatten(self.table.treedef, leaves)
 
     @property
@@ -230,13 +219,20 @@ def _persister(snap: SnapshotHandle, sink: Sink, order: Sequence[BlockRef]) -> N
     In CoW mode this thread *is* what keeps the snapshot window open: a
     block that the parent never writes is staged here (ODF's child reading
     the shared table) right before persisting.
+
+    Incremental epochs: blocks marked clean at fork time (``snap.inherited``)
+    are never staged nor written — the sink's delta manifest records that
+    they are inherited from the base epoch.
     """
     try:
+        sink.set_delta(snap.inherited)
         sink.open(snap.table.leaf_handles)
         for ref in order:
             if snap.aborted:
                 sink.abort()
                 return
+            if ref.key in snap.inherited:
+                continue
             st = snap.table.state(ref.key)
             while st == BlockState.UNCOPIED or st == BlockState.COPYING:
                 if st == BlockState.UNCOPIED and snap.table.try_acquire(ref.key):
@@ -276,6 +272,8 @@ class Snapshotter:
         copier_threads: int = 1,
         yield_every: int = 1,
         copier_duty: float = 1.0,
+        backend: str = "host",
+        retain_images: bool = False,
     ):
         """``copier_duty`` < 1 throttles child-side copier threads to that
         fraction of a core. On a single-core host (this container) the
@@ -283,12 +281,20 @@ class Snapshotter:
         parent serves — does not hold; a duty cycle emulates the dedicated
         core by stretching the copy window instead of starving the parent.
         Set to 1.0 on multi-core hosts. (See DESIGN.md §2, changed
-        assumptions.)"""
+        assumptions.)
+
+        ``backend`` picks where the T0 image is staged ("host" numpy
+        buffers or "device" blocked jax.Arrays driven by the Pallas
+        snapcopy kernel). ``retain_images`` keeps a reference to the most
+        recent epoch so ``fork(incremental=True)`` can diff against it."""
         self.provider = provider
         self.block_bytes = int(block_bytes)
         self.copier_threads = int(copier_threads)
         self.yield_every = int(yield_every)
         self.copier_duty = float(copier_duty)
+        self.backend = backend
+        self.retain_images = bool(retain_images)
+        self._last_snap: Optional[SnapshotHandle] = None
         self._active: List[SnapshotHandle] = []
         self._active_lock = threading.Lock()
         self.forks = 0
@@ -327,8 +333,106 @@ class Snapshotter:
                     if not prev.table.leaf_done(h.leaf_id):
                         prev.complete_leaf(h.leaf_id)
 
+    # -- shared fork machinery ---------------------------------------------
+    def _begin(
+        self,
+        fork_start: float,
+        incremental: bool = False,
+        base: Optional[SnapshotHandle] = None,
+    ) -> SnapshotHandle:
+        """Common fork prologue: serialize the previous epoch, build the
+        block table + staging backend, and (incremental) mark clean blocks
+        PERSISTED so neither copier nor persister ever touches them."""
+        self._serialize_previous()
+        table = BlockTable(self.provider.tree(), self.block_bytes)
+        snap = SnapshotHandle(
+            table, self.provider, self.mode,
+            backend=make_staging(self.backend, table, self.provider),
+        )
+        snap.fork_start = fork_start
+        if incremental:
+            self._mark_clean_blocks(snap, base or self._last_snap)
+        return snap
+
+    def _finish_fork(self, snap: SnapshotHandle) -> None:
+        self.forks += 1
+        self._register(snap)
+        if self.retain_images:
+            self._last_snap = snap
+
+    def _mark_clean_blocks(
+        self, snap: SnapshotHandle, base: Optional[SnapshotHandle]
+    ) -> None:
+        """Incremental epoch: run the ``dirty`` kernel against the base
+        epoch's retained T0 image and adopt every unchanged block.
+
+        Clean blocks are marked PERSISTED at fork time — the strongest
+        flag, so the parent never proactively syncs them, the copier's
+        trylock never wins them, and the persister skips them (they go
+        into the sink's delta manifest instead). A missing/aborted base or
+        a geometry mismatch degrades to a full snapshot for that leaf.
+        """
+        if base is None or base.aborted:
+            return
+        # The base image must be fully staged before we can diff against
+        # it. An incomplete or failed base image (timeout / abort) would
+        # diff against uninitialized staging memory, so any such epoch
+        # degrades to a full snapshot instead. A cow base only finishes
+        # staging when its sink-paced persist window closes — waiting for
+        # that here would stall fork() (the serving thread) for the whole
+        # window, so a still-persisting cow base also degrades to full
+        # rather than blocking.
+        if base.mode == "cow":
+            if not base.persist_done.is_set() or base.error is not None:
+                return
+        else:
+            try:
+                if not base.wait(600):
+                    return
+            except SnapshotError:
+                return
+        for h in snap.table.leaf_handles:
+            g = h.geometry()
+            if g is None:
+                continue
+            if h.leaf_id >= len(base.table.leaf_handles):
+                continue
+            bh = base.table.leaf_handles[h.leaf_id]
+            bg = bh.geometry()
+            if (
+                bg is None
+                or not g.matches(bg)
+                or bh.shape != h.shape
+                or bh.dtype != h.dtype
+                or bh.path != h.path
+            ):
+                continue  # reshaped leaf: every block is dirty
+            prev = base.backend.blocked_image(h.leaf_id)
+            if prev is None:
+                continue
+            prev_dev = jnp.asarray(prev)
+            cur = self.provider.with_leaf(
+                h.leaf_id,
+                lambda leaf: to_blocked(leaf, g.n_blocks, g.block_elems),
+            )
+            dirty = flags_from_device(dirty_op(prev_dev, cur))
+            clean_ids = [b for b in range(g.n_blocks) if not dirty[b]]
+            if not clean_ids:
+                continue
+            snap.backend.adopt(h.leaf_id, prev, clean_ids)
+            for b in clean_ids:
+                ref = h.blocks[b]
+                snap.table.mark(ref.key, BlockState.PERSISTED)
+                snap.inherited.add(ref.key)
+            snap.metrics.inherited_blocks += len(clean_ids)
+
     # -- implemented by subclasses ----------------------------------------
-    def fork(self, sink: Optional[Sink] = None) -> SnapshotHandle:  # pragma: no cover
+    def fork(
+        self,
+        sink: Optional[Sink] = None,
+        incremental: bool = False,
+        base: Optional[SnapshotHandle] = None,
+    ) -> SnapshotHandle:  # pragma: no cover
         raise NotImplementedError
 
 
@@ -337,11 +441,15 @@ class BlockingSnapshotter(Snapshotter):
 
     mode = "blocking"
 
-    def fork(self, sink: Optional[Sink] = None) -> SnapshotHandle:
+    def fork(
+        self,
+        sink: Optional[Sink] = None,
+        incremental: bool = False,
+        base: Optional[SnapshotHandle] = None,
+    ) -> SnapshotHandle:
         t0 = time.perf_counter()
-        self._serialize_previous()
-        table = BlockTable(self.provider.tree(), self.block_bytes)
-        snap = SnapshotHandle(table, self.provider, self.mode)
+        snap = self._begin(t0, incremental, base)
+        table = snap.table
         for ref in table.blocks:  # synchronous level-by-level copy (§3.1)
             if table.try_acquire(ref.key):
                 try:
@@ -350,12 +458,11 @@ class BlockingSnapshotter(Snapshotter):
                     snap.abort(exc)
                     raise SnapshotError("fork failed") from exc
                 table.mark(ref.key, BlockState.COPIED)
-        snap.metrics.copied_blocks_child = table.n_blocks
+                snap.metrics.copied_blocks_child += 1
         snap.copy_done.set()
         snap.metrics.fork_s = time.perf_counter() - t0
         snap.metrics.copy_window_s = snap.metrics.fork_s
-        self.forks += 1
-        self._register(snap)
+        self._finish_fork(snap)
         self._start_persist(snap, sink)
         return snap
 
@@ -375,15 +482,17 @@ class CowSnapshotter(Snapshotter):
 
     mode = "cow"
 
-    def fork(self, sink: Optional[Sink] = None) -> SnapshotHandle:
+    def fork(
+        self,
+        sink: Optional[Sink] = None,
+        incremental: bool = False,
+        base: Optional[SnapshotHandle] = None,
+    ) -> SnapshotHandle:
         t0 = time.perf_counter()
-        self._serialize_previous()
-        table = BlockTable(self.provider.tree(), self.block_bytes)
-        snap = SnapshotHandle(table, self.provider, self.mode)
+        snap = self._begin(t0, incremental, base)
         snap.copy_done.set()  # no child-side table copy at all
         snap.metrics.fork_s = time.perf_counter() - t0
-        self.forks += 1
-        self._register(snap)
+        self._finish_fork(snap)
         if sink is not None:
             threading.Thread(
                 target=_persister, args=(snap, sink, snap.table.blocks), daemon=True
@@ -398,15 +507,19 @@ class AsyncForkSnapshotter(Snapshotter):
 
     mode = "asyncfork"
 
-    def fork(self, sink: Optional[Sink] = None) -> SnapshotHandle:
+    def fork(
+        self,
+        sink: Optional[Sink] = None,
+        incremental: bool = False,
+        base: Optional[SnapshotHandle] = None,
+    ) -> SnapshotHandle:
         t0 = time.perf_counter()
-        self._serialize_previous()
         # Parent copies PGD/PUD (tree metadata) and write-protects PMDs
-        # (flag init) — this is ALL the parent does inside fork().
-        table = BlockTable(self.provider.tree(), self.block_bytes)
-        snap = SnapshotHandle(table, self.provider, self.mode)
-        self.forks += 1
-        self._register(snap)
+        # (flag init) — this is ALL the parent does inside fork(); an
+        # incremental fork additionally runs the device-side dirty scan.
+        snap = self._begin(t0, incremental, base)
+        table = snap.table
+        self._finish_fork(snap)
         snap.metrics.fork_s = time.perf_counter() - t0
 
         # cond_resched() analogue at the interpreter level: don't let a

@@ -1,0 +1,259 @@
+"""Staging backends — where a snapshot epoch's T0 image physically lives.
+
+The snapshot protocol (flag machine, proactive synchronization, persister)
+is backend-agnostic; a ``StagingBackend`` owns only the data movement of
+``stage_block`` and the layout of the staged image:
+
+  * ``HostStaging``   — the original path: one host numpy buffer per leaf,
+    blocks staged with a device->host memcpy under the provider leaf lock.
+  * ``DeviceStaging`` — the T0 image stays on device as blocked
+    ``jax.Array``s; each stage runs the Pallas ``snapcopy`` kernel with the
+    ``BlockTable`` flag vector mirrored into the kernel's ``flags`` input,
+    so blocks the parent already proactively copied are skipped inside the
+    kernel — the device-level implementation of §4.2's "eliminating
+    unnecessary synchronizations". On TPU this is an HBM->HBM copy that
+    never round-trips through the host until a sink asks for bytes.
+
+Both backends expose ``blocked_image`` (the (n_blocks, block_elems) layout
+the ``dirty`` kernel compares across epochs) and ``adopt`` (inherit clean
+blocks from the previous epoch's retained image — incremental snapshots).
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.blocks import BlockRef, BlockState, BlockTable
+from repro.core.provider import PyTreeProvider
+from repro.kernels.ops import flags_to_device, snapcopy_op, to_blocked
+
+
+def mirror_flags(table: BlockTable, leaf_id: int,
+                 force_uncopied: Optional[int] = None) -> np.ndarray:
+    """Mirror one leaf's BlockTable states into a kernel flag vector.
+
+    ``force_uncopied`` re-opens one block (the caller holds it in COPYING —
+    the trylock — so its table state would otherwise make the kernel skip
+    the very block being staged).
+    """
+    handle = table.leaf_handles[leaf_id]
+    flags = np.empty((len(handle.blocks),), np.int32)
+    for i, ref in enumerate(handle.blocks):
+        flags[i] = int(table.state(ref.key))
+    if force_uncopied is not None:
+        flags[force_uncopied] = int(BlockState.UNCOPIED)
+    return flags
+
+
+class StagingBackend:
+    """Per-epoch T0 image storage + block copy mechanics."""
+
+    name = "base"
+
+    def __init__(self, table: BlockTable, provider: PyTreeProvider):
+        self.table = table
+        self.provider = provider
+
+    def stage_block(self, ref: BlockRef) -> None:  # pragma: no cover
+        raise NotImplementedError
+
+    def staged_block(self, ref: BlockRef):  # pragma: no cover
+        raise NotImplementedError
+
+    def leaf_array(self, leaf_id: int) -> np.ndarray:  # pragma: no cover
+        raise NotImplementedError
+
+    def blocked_image(self, leaf_id: int):  # pragma: no cover
+        raise NotImplementedError
+
+    def adopt(self, leaf_id: int, prev_blocked,
+              block_ids: Sequence[int]) -> None:  # pragma: no cover
+        raise NotImplementedError
+
+
+class HostStaging(StagingBackend):
+    """Numpy staging buffers on the host (the seed implementation)."""
+
+    name = "host"
+
+    def __init__(self, table: BlockTable, provider: PyTreeProvider):
+        super().__init__(table, provider)
+        self._staging: Dict[int, np.ndarray] = {}
+        self._lock = threading.Lock()
+
+    def _leaf_staging(self, leaf_id: int) -> np.ndarray:
+        with self._lock:
+            buf = self._staging.get(leaf_id)
+            if buf is None:
+                h = self.table.leaf_handles[leaf_id]
+                shape = h.shape if h.shape else (1,)
+                buf = np.empty(shape, dtype=h.dtype)
+                self._staging[leaf_id] = buf
+        return buf
+
+    def stage_block(self, ref: BlockRef) -> None:
+        buf = self._leaf_staging(ref.leaf_id)
+        if self.table.leaf_handles[ref.leaf_id].shape:
+            self.provider.read_block_into(ref, buf[ref.start : ref.stop])
+        else:
+            self.provider.read_block_into(
+                ref, buf[0:1].reshape(()) if buf.ndim else buf
+            )
+
+    def staged_block(self, ref: BlockRef) -> np.ndarray:
+        buf = self._staging[ref.leaf_id]
+        h = self.table.leaf_handles[ref.leaf_id]
+        return buf[ref.start : ref.stop] if h.shape else buf[0]
+
+    def leaf_array(self, leaf_id: int) -> np.ndarray:
+        h = self.table.leaf_handles[leaf_id]
+        buf = self._staging.get(leaf_id)
+        if buf is None:  # zero-block leaf
+            buf = np.empty(h.shape if h.shape else (1,), dtype=h.dtype)
+        return buf if h.shape else buf[0]
+
+    def blocked_image(self, leaf_id: int) -> Optional[np.ndarray]:
+        h = self.table.leaf_handles[leaf_id]
+        g = h.geometry()
+        if g is None or leaf_id not in self._staging:
+            return None
+        flat = np.ascontiguousarray(self._staging[leaf_id]).reshape(-1)
+        pad = g.n_blocks * g.block_elems - flat.shape[0]
+        if pad:
+            flat = np.concatenate([flat, np.zeros((pad,), flat.dtype)])
+        return flat.reshape(g.n_blocks, g.block_elems)
+
+    def adopt(self, leaf_id: int, prev_blocked, block_ids: Sequence[int]) -> None:
+        if not block_ids:
+            return
+        h = self.table.leaf_handles[leaf_id]
+        g = h.geometry()
+        buf = self._leaf_staging(leaf_id)
+        pb = np.asarray(prev_blocked)
+        for b in block_ids:
+            ref = h.blocks[b]
+            rows = ref.stop - ref.start
+            if h.shape:
+                buf[ref.start : ref.stop] = pb[b, : rows * g.row_elems].reshape(
+                    (rows,) + h.shape[1:]
+                )
+            else:
+                buf[0] = pb[b, 0]
+
+
+class DeviceStaging(StagingBackend):
+    """Blocked ``jax.Array`` staging driven by the ``snapcopy`` kernel.
+
+    Each leaf's image is a (n_blocks, block_elems) device array; a stage is
+    one kernel launch whose flag vector mirrors the BlockTable, with only
+    the staged block forced open. The whole launch runs under the provider
+    leaf lock so a donated update can neither free the source buffer
+    mid-copy nor interleave with another stage of the same leaf (stages of
+    one leaf are read-modify-write on its image).
+    """
+
+    name = "device"
+
+    def __init__(self, table: BlockTable, provider: PyTreeProvider):
+        super().__init__(table, provider)
+        self._dst: Dict[int, jnp.ndarray] = {}
+        self._staged: Dict[int, np.ndarray] = {}  # bool per block, in dst
+        self._lock = threading.Lock()
+
+    def _ensure(self, leaf_id: int):
+        with self._lock:
+            dst = self._dst.get(leaf_id)
+            if dst is None:
+                h = self.table.leaf_handles[leaf_id]
+                g = h.geometry()
+                dst = jnp.zeros((g.n_blocks, g.block_elems), dtype=h.dtype)
+                self._dst[leaf_id] = dst
+                self._staged[leaf_id] = np.zeros((g.n_blocks,), bool)
+        return dst
+
+    def stage_block(self, ref: BlockRef) -> None:
+        h = self.table.leaf_handles[ref.leaf_id]
+        g = h.geometry()
+        self._ensure(ref.leaf_id)
+
+        def _stage(leaf):
+            # A block copied opportunistically by an earlier launch already
+            # holds final T0 content (it was UNCOPIED under this same lock
+            # when copied) — the official stage is then a no-op, which
+            # makes total staging work O(leaf) instead of one full-leaf
+            # kernel round-trip per block.
+            if self._staged[ref.leaf_id][ref.block_id]:
+                return
+            # The flag mirror MUST be taken under the leaf lock: only there
+            # does UNCOPIED provably imply live-content == T0 (a parent
+            # write needs this same lock, and its proactive sync marks the
+            # block before the donated update commits). A mirror taken
+            # earlier could see a block as UNCOPIED that a peer has since
+            # staged and the parent has since overwritten.
+            host_flags = mirror_flags(
+                self.table, ref.leaf_id, force_uncopied=ref.block_id
+            )
+            # Blocks already sitting in dst (staged or opportunistically
+            # copied on an earlier launch) are skipped: their content is
+            # final T0, and recopying them every launch would make staging
+            # O(n_blocks^2) in kernel copy work.
+            already = self._staged[ref.leaf_id]
+            host_flags[already] = int(BlockState.COPIED)
+            host_flags[ref.block_id] = int(BlockState.UNCOPIED)
+            src = to_blocked(leaf, g.n_blocks, g.block_elems)
+            new_dst, _ = snapcopy_op(src, self._dst[ref.leaf_id],
+                                     flags_to_device(host_flags))
+            new_dst.block_until_ready()  # copy must finish before unlock
+            self._dst[ref.leaf_id] = new_dst
+            self._staged[ref.leaf_id] |= host_flags == int(BlockState.UNCOPIED)
+
+        self.provider.with_leaf(ref.leaf_id, _stage)
+
+    def staged_block(self, ref: BlockRef):
+        h = self.table.leaf_handles[ref.leaf_id]
+        g = h.geometry()
+        blk = self._dst[ref.leaf_id][ref.block_id]
+        if not h.shape:
+            return blk[0]
+        rows = ref.stop - ref.start
+        return blk[: rows * g.row_elems].reshape((rows,) + h.shape[1:])
+
+    def leaf_array(self, leaf_id: int) -> np.ndarray:
+        h = self.table.leaf_handles[leaf_id]
+        g = h.geometry()
+        if g is None or leaf_id not in self._dst:
+            arr = np.empty(h.shape if h.shape else (1,), dtype=h.dtype)
+            return arr if h.shape else arr[0]
+        flat = np.asarray(self._dst[leaf_id]).reshape(-1)[: g.total_elems]
+        return flat.reshape(h.shape) if h.shape else flat.reshape(())
+
+    def blocked_image(self, leaf_id: int):
+        return self._dst.get(leaf_id)
+
+    def adopt(self, leaf_id: int, prev_blocked, block_ids: Sequence[int]) -> None:
+        if not block_ids:
+            return
+        dst = self._ensure(leaf_id)
+        idx = jnp.asarray(np.asarray(block_ids, np.int32))
+        src = jnp.asarray(prev_blocked, dtype=dst.dtype)
+        self._dst[leaf_id] = dst.at[idx].set(src[idx])
+        self._staged[leaf_id][np.asarray(block_ids)] = True
+
+
+STAGING_BACKENDS = {
+    "host": HostStaging,
+    "device": DeviceStaging,
+}
+
+
+def make_staging(name: str, table: BlockTable, provider: PyTreeProvider) -> StagingBackend:
+    try:
+        cls = STAGING_BACKENDS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown staging backend {name!r}; pick from {sorted(STAGING_BACKENDS)}"
+        )
+    return cls(table, provider)

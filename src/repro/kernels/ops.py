@@ -3,6 +3,13 @@
 On this CPU container the kernels run with interpret=True (the kernel body
 executes in Python for correctness); on TPU set ``interpret=False`` and the
 same BlockSpecs drive real VMEM tiling.
+
+The ``*_op`` entry points are what the snapshot core's ``DeviceStaging``
+backend calls: they pick a legal tile for arbitrary block widths and keep
+the (src, dst, flags) round trip entirely in device arrays — the flag
+vector is the device-side mirror of the ``BlockTable`` state machine, so
+the kernel's skip predicate implements §4.2's "eliminating unnecessary
+synchronizations" on the copy path itself.
 """
 from __future__ import annotations
 
@@ -10,6 +17,7 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import snapcopy as _k
 
@@ -26,6 +34,50 @@ def dirty_blocks(old, new, tile: int = _k.DEFAULT_TILE):
     return _k.dirty(old, new, tile=tile, interpret=not ON_TPU)
 
 
+# Interpret mode executes one Python iteration per grid step, so the tile
+# cap is the latency knob: keep strips VMEM-sized on real TPU, but let a
+# strip span a whole block on CPU where the "VMEM" is imaginary and grid
+# steps are the only cost.
+_TILE_CAP = _k.DEFAULT_TILE if ON_TPU else (1 << 18)
+
+
+def pick_tile(elems: int, cap: int = None) -> int:
+    """Largest power-of-two divisor of ``elems`` not above ``cap``.
+
+    Block widths come from arbitrary (rows_per_block * row_elems) products,
+    which are usually power-of-two-rich but not guaranteed multiples of the
+    default tile; the grid still needs elems % tile == 0.
+    """
+    if cap is None:
+        cap = _TILE_CAP
+    tile = 1
+    while tile * 2 <= cap and elems % (tile * 2) == 0:
+        tile *= 2
+    return tile
+
+
+def snapcopy_op(src, dst, flags, *, tile: int | None = None):
+    """Masked block copy with automatic legal tiling.
+
+    src, dst: (n_blocks, elems) same dtype; flags: (n_blocks,) int32 with
+    the BlockTable convention (0 = UNCOPIED is copied + flipped to COPIED;
+    anything else keeps the existing dst content). Returns (dst', flags').
+    """
+    if tile is None:
+        tile = pick_tile(src.shape[1])
+    return masked_block_copy(src, dst, flags, tile=tile)
+
+
+def dirty_op(old, new, *, tile: int | None = None):
+    """Block-level delta detection with automatic legal tiling.
+
+    Returns (n_blocks,) int32: 1 where any element of the block differs.
+    """
+    if tile is None:
+        tile = pick_tile(old.shape[1])
+    return dirty_blocks(old, new, tile=tile)
+
+
 def as_blocks(x, block_elems: int):
     """View a flat array as (n_blocks, block_elems), padding the tail."""
     flat = x.reshape(-1)
@@ -33,3 +85,27 @@ def as_blocks(x, block_elems: int):
     if pad:
         flat = jnp.pad(flat, (0, pad))
     return flat.reshape(-1, block_elems)
+
+
+@partial(jax.jit, static_argnames=("n_blocks", "elems"))
+def to_blocked(leaf, n_blocks: int, elems: int):
+    """Reshape a leaf into its (n_blocks, elems) block-table layout.
+
+    Valid because blocks partition a leaf into equal contiguous row ranges
+    (only the last block may be short): the layout is exactly ``as_blocks``
+    with the tail pad landing entirely in the final block. ``n_blocks`` is
+    static so a geometry mismatch fails at trace time, not silently.
+    """
+    blocked = as_blocks(jnp.asarray(leaf), elems)
+    assert blocked.shape[0] == n_blocks, (blocked.shape, n_blocks)
+    return blocked
+
+
+def flags_to_device(flags) -> jax.Array:
+    """Host BlockState values -> device int32 flag vector for the kernels."""
+    return jnp.asarray(np.asarray(flags, dtype=np.int32))
+
+
+def flags_from_device(flags) -> np.ndarray:
+    """Kernel flag vector -> host int32 (for folding back into BlockTable)."""
+    return np.asarray(flags, dtype=np.int32)

@@ -56,7 +56,13 @@ class KVEngine:
         copier_threads: int = 8,
         persist_bandwidth: Optional[float] = 2e9,
         copier_duty: Optional[float] = None,
+        backend: str = "host",
+        incremental: bool = False,
     ):
+        """``backend`` selects the staging substrate ("host" numpy or
+        "device" Pallas-kernel staging); ``incremental=True`` makes every
+        BGSAVE after the first a dirty-block delta against the previous
+        epoch's retained T0 image (high-frequency, low-cost BGSAVE)."""
         self.store = store
         self.mode = mode
         if copier_duty is None:
@@ -66,12 +72,15 @@ class KVEngine:
             copier_duty = 0.3 / max(1, copier_threads)
         # copy granularity == the store's physical block (one leaf = one
         # "PMD + 512-PTE table"), so block_bytes just needs to cover a leaf
+        self.incremental = bool(incremental)
         self.snapshotter = make_snapshotter(
             mode,
             store.provider,
             block_bytes=store.block_nbytes,
             copier_threads=copier_threads,
             copier_duty=copier_duty,
+            backend=backend,
+            retain_images=self.incremental,
         )
         self.persist_bandwidth = persist_bandwidth
         self._snaps: List[SnapshotHandle] = []
@@ -80,7 +89,7 @@ class KVEngine:
     def bgsave(self, sink: Optional[Sink] = None) -> SnapshotHandle:
         if sink is None:
             sink = NullSink(bandwidth=self.persist_bandwidth)
-        snap = self.snapshotter.fork(sink)
+        snap = self.snapshotter.fork(sink, incremental=self.incremental)
         self._snaps.append(snap)
         return snap
 
@@ -97,7 +106,7 @@ class KVEngine:
         events = workload.events(store.capacity, duration_s)
         vals_pool = np.random.rand(64, workload.batch, store.row_width).astype(np.float32)
         bgsave_times = sorted(f * duration_s for f in bgsave_at)
-        windows: List[Tuple[float, SnapshotHandle]] = []
+        windows: List[SnapshotHandle] = []
 
         lat: List[Tuple[float, float]] = []  # (arrival, latency)
         t0 = time.perf_counter()
@@ -107,9 +116,9 @@ class KVEngine:
             # BGSAVE trigger (the parent invokes fork inline — it stalls here)
             while bg_i < len(bgsave_times) and now >= bgsave_times[bg_i]:
                 sink = sink_factory() if sink_factory else NullSink(self.persist_bandwidth)
-                snap = self.snapshotter.fork(sink)
+                snap = self.snapshotter.fork(sink, incremental=self.incremental)
                 self._snaps.append(snap)
-                windows.append((bgsave_times[bg_i], snap))
+                windows.append(snap)
                 bg_i += 1
                 now = time.perf_counter() - t0
             if ev.t > now:
@@ -121,11 +130,16 @@ class KVEngine:
             lat.append((ev.t, (time.perf_counter() - t0) - ev.t))
         run_end = time.perf_counter() - t0
 
-        # classify: snapshot queries arrive in [fork_start, persist_done]
+        # classify: snapshot queries arrive in [fork_start, persist_done].
+        # The span anchors at the REAL fork timestamp the snapshotter
+        # stamped on the handle — not the scheduled bgsave time — so
+        # queries served between schedule and actual fork stay "normal".
         spans = []
-        for t_start, snap in windows:
+        for snap in windows:
             snap.wait_persisted(120)
-            spans.append((t_start, t_start + snap.metrics.persist_s))
+            lo = snap.fork_start - t0
+            hi = (snap.t0 - t0) + snap.metrics.persist_s
+            spans.append((lo, hi))
         normal, snapq = [], []
         for t_a, l in lat:
             if any(lo <= t_a <= hi for lo, hi in spans):
@@ -139,7 +153,7 @@ class KVEngine:
             instance_bytes=store.nbytes,
             normal_lat=np.array(normal),
             snapshot_lat=np.array(snapq),
-            snapshot_metrics=[s.metrics.summary() for _, s in windows],
+            snapshot_metrics=[s.metrics.summary() for s in windows],
             throughput_buckets=buckets,
             duration_s=run_end,
         )

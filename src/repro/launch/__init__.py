@@ -1,0 +1,1 @@
+"""Launch-scale tooling: meshes, dry-run cost model, serving/training drivers."""

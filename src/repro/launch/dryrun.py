@@ -102,6 +102,9 @@ def _compile_cell(cfg, shape, mesh):
 
 def _cost_of(compiled):
     cost = compiled.cost_analysis() or {}
+    # older JAX returns a one-entry list of per-device dicts
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
     colls = collective_bytes(compiled.as_text())
     return (float(cost.get("flops", 0.0)),
             float(cost.get("bytes accessed", 0.0)),

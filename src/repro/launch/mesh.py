@@ -8,6 +8,8 @@ from __future__ import annotations
 
 import jax
 
+from repro.runtime.sharding import make_mesh
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     """Single pod: (data=16, model=16) = 256 chips.
@@ -15,19 +17,14 @@ def make_production_mesh(*, multi_pod: bool = False):
     pure data parallelism across pods (DCN), "data"/"model" are ICI."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh():
     """A 1x1 (data, model) mesh on whatever devices exist — used by smoke
     tests and examples so shard_map code paths run unchanged on CPU."""
     n = len(jax.devices())
-    return jax.make_mesh(
-        (1, n), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    return make_mesh((1, n), ("data", "model"))
 
 
 # TPU v5e hardware constants for the roofline model (per chip)

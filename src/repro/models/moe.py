@@ -24,6 +24,20 @@ from jax.sharding import PartitionSpec as P
 
 from repro.models.common import dense_init
 
+# version guard: shard_map graduated from jax.experimental to jax.shard_map
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+else:  # older JAX
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+
+def _axis_size(name) -> int:
+    """Version-guarded ``jax.lax.axis_size`` (older JAX spells it
+    ``psum(1, name)``, which folds to the static mesh-axis size)."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(name)
+    return jax.lax.psum(1, name)
+
 
 def init_moe(key, cfg, dtype):
     d, e, f = cfg.d_model, cfg.n_experts, cfg.d_ff_expert
@@ -80,7 +94,7 @@ def moe_shard_fn(x, router_w, w_gate, w_up, w_down, *, cfg, ep_axis="model"):
     T, D = x.shape
     E = cfg.n_experts
     k = cfg.top_k
-    ep = jax.lax.axis_size(ep_axis) if ep_axis else 1
+    ep = _axis_size(ep_axis) if ep_axis else 1
     E_loc = E // ep
     my_rank = jax.lax.axis_index(ep_axis) if ep_axis else 0
 
@@ -146,7 +160,7 @@ def moe_decode_fn(x, router_w, w_gate, w_up, w_down, *, cfg, ep_axis="model"):
     instead of two all_to_alls."""
     T, D = x.shape
     E, k = cfg.n_experts, cfg.top_k
-    ep = jax.lax.axis_size(ep_axis) if ep_axis else 1
+    ep = _axis_size(ep_axis) if ep_axis else 1
     E_loc = E // ep
     my_rank = jax.lax.axis_index(ep_axis) if ep_axis else 0
 
@@ -201,7 +215,7 @@ def moe_forward(params, x, cfg, mesh=None, decode: bool = False):
                 )
                 return out.reshape(xt.shape)
 
-            out = jax.shard_map(
+            out = _shard_map(
                 body_d,
                 mesh=env_mesh,
                 in_specs=(P(pod, None, None), P(None, None),
@@ -218,7 +232,7 @@ def moe_forward(params, x, cfg, mesh=None, decode: bool = False):
                 aux = jax.lax.pmean(aux, all_axes)
                 return out.reshape(xt.shape), aux
 
-            out, aux = jax.shard_map(
+            out, aux = _shard_map(
                 body,
                 mesh=env_mesh,
                 in_specs=(P(pod, "model", None), P(None, None),

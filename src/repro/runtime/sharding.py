@@ -18,6 +18,31 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 
+def make_mesh(axis_shapes, axis_names, *, devices=None) -> Mesh:
+    """Version-guarded ``jax.make_mesh``.
+
+    ``jax.sharding.AxisType`` exists only on newer JAX (and the
+    ``axis_types=`` kwarg with it); older releases build the same
+    Auto-typed mesh with no kwarg. All repo code goes through this helper
+    so both old and new JAX work unchanged.
+    """
+    shapes, names = tuple(axis_shapes), tuple(axis_names)
+    if not hasattr(jax, "make_mesh"):  # predates jax.make_mesh entirely
+        from jax.experimental import mesh_utils
+
+        devs = mesh_utils.create_device_mesh(
+            shapes, devices=list(devices) if devices is not None else None
+        )
+        return Mesh(devs, names)
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    kw = {}
+    if devices is not None:
+        kw["devices"] = devices
+    if axis_type is not None:
+        kw["axis_types"] = (axis_type.Auto,) * len(names)
+    return jax.make_mesh(shapes, names, **kw)
+
+
 def _axis_size(mesh: Mesh, entry) -> int:
     names = entry if isinstance(entry, tuple) else (entry,)
     size = 1

@@ -8,6 +8,11 @@ Also checks the monotone flag machine and metrics invariants.
 """
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need the optional 'test' extra"
+)
 from hypothesis import given, settings, strategies as st
 
 from repro.core import PyTreeProvider, make_snapshotter

@@ -46,6 +46,8 @@ def test_parent_proactive_copy_failure_aborts_but_engine_survives():
 
 
 def test_persister_abort_cleans_sink():
+    import time
+
     prov = FailingProvider(_state(), fail_on=lambda ref: ref.block_id == 7)
     snapper = AsyncForkSnapshotter(prov, block_bytes=4096, copier_threads=1)
     sink = MemorySink()
@@ -53,6 +55,11 @@ def test_persister_abort_cleans_sink():
     with pytest.raises(SnapshotError):
         snap.wait_persisted(10)
     assert sink.aborted or not sink.closed
+    # abort() unblocks waiters immediately (§4.4); the persister thread
+    # notices asynchronously and then removes partial output — poll for it
+    deadline = time.monotonic() + 5.0
+    while sink.blocks and time.monotonic() < deadline:
+        time.sleep(0.01)
     assert not sink.blocks  # partial output removed
 
 

@@ -31,8 +31,8 @@ cfg = dataclasses.replace(get_config("qwen3-moe-30b-a3b").reduced(),
 params = init_moe(jax.random.PRNGKey(0), cfg, jnp.float32)
 x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model), jnp.float32)
 ref, _ = moe_forward(params, x, cfg)  # no-mesh single-device path
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.runtime.sharding import make_mesh
+mesh = make_mesh((2, 4), ("data", "model"))
 with mesh:
     out, aux = jax.jit(lambda p, x: moe_forward(p, x, cfg))(params, x)
 err = float(jnp.abs(out - ref).max())
@@ -61,8 +61,8 @@ params, opt = init_train_state(model, jax.random.PRNGKey(0))
 batch = {"tokens": np.random.randint(0, cfg.vocab, (4, 33)).astype(np.int32)}
 fn = make_train_step(model)
 ref_loss = float(fn(params, opt, batch)[2])
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.runtime.sharding import make_mesh
+mesh = make_mesh((2, 4), ("data", "model"))
 pspecs = model.param_pspecs()
 shard = lambda spec, arr: jax.device_put(
     arr, NamedSharding(mesh, resolve_pspec(spec, tuple(arr.shape), mesh)))
@@ -92,7 +92,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs import get_config
 from repro.models import build_model
 from repro.runtime.steps import init_train_state
-from repro.runtime.sharding import resolve_pspec
+from repro.runtime.sharding import make_mesh, resolve_pspec
 from repro.checkpoint import TrainSnapshotManager, restore_checkpoint
 cfg = dataclasses.replace(get_config("phi3-mini-3.8b").reduced(),
                           vocab=512, d_model=64)
@@ -105,8 +105,7 @@ with tempfile.TemporaryDirectory() as d:
     mgr.wait_all(120)
     rp, ro = restore_checkpoint(os.path.join(d, "step_00000000"))
 for shape_ in [(2, 4), (8, 1)]:
-    mesh = jax.make_mesh(shape_, ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh(shape_, ("data", "model"))
     pspecs = model.param_pspecs()
     def place(spec, arr):
         return jax.device_put(jnp.asarray(arr), NamedSharding(
@@ -131,8 +130,8 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, dataclasses
 import repro.launch.dryrun as dr
 from repro.configs import get_config, SHAPES
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.runtime.sharding import make_mesh
+mesh = make_mesh((2, 4), ("data", "model"))
 cfg = dataclasses.replace(get_config("phi3-mini-3.8b").reduced(), vocab=512)
 compiled = dr._compile_cell(cfg, SHAPES["train_4k"], mesh)
 f, b, c, colls = dr._cost_of(compiled)

@@ -1,0 +1,216 @@
+"""Staging backends + incremental (dirty-block) snapshot epochs.
+
+Backend parity: HostStaging and DeviceStaging must produce identical T0
+images under concurrent donated writes in all three snapshotter modes.
+Incremental epochs: only dirty blocks reach the sink, restores through a
+FileSink delta chain equal the full-snapshot restore.
+"""
+import os
+import tempfile
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    BlockState,
+    MemorySink,
+    FileSink,
+    PyTreeProvider,
+    make_snapshotter,
+    read_file_snapshot,
+)
+from repro.core.staging import mirror_flags
+from repro.kernels.ops import pick_tile, to_blocked
+
+MODES = ["blocking", "cow", "asyncfork"]
+BACKENDS = ["host", "device"]
+
+
+def _state(rows=128, cols=32):
+    return {
+        "kv": jnp.arange(rows * cols, dtype=jnp.float32).reshape(rows, cols),
+        "meta": jnp.full((4,), 7.0, jnp.float32),
+        "step": jnp.float32(11.0),
+    }
+
+
+def _donated_update(prov, snapper, leaf_id, rows, value):
+    snapper.before_write(leaf_id, rows)
+    old = prov.leaf(leaf_id)
+    prov.update_leaf(leaf_id, old.at[np.asarray(rows)].set(value), delete_old=True)
+
+
+# --------------------------------------------------------------------- #
+# backend parity                                                        #
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("mode", MODES)
+def test_backends_consistent_under_writes(mode, backend):
+    prov = PyTreeProvider(_state())
+    t0_kv = np.asarray(prov.leaf(0)).copy()
+    snapper = make_snapshotter(
+        mode, prov, block_bytes=2048, copier_threads=2, backend=backend
+    )
+    snap = snapper.fork()
+    for step in range(8):
+        _donated_update(prov, snapper, 0, list(range(step * 4, step * 4 + 4)), -1.0)
+    tree = snap.to_tree()
+    np.testing.assert_array_equal(np.asarray(tree["kv"]), t0_kv)
+    np.testing.assert_array_equal(np.asarray(tree["meta"]), np.full((4,), 7.0))
+    assert float(np.asarray(tree["step"])) == 11.0
+    assert float(prov.leaf(0)[0, 0]) == -1.0  # live state moved on
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_backend_persists_through_sink(backend):
+    prov = PyTreeProvider(_state())
+    sink = MemorySink()
+    snapper = make_snapshotter(
+        "asyncfork", prov, block_bytes=2048, copier_threads=2, backend=backend
+    )
+    snap = snapper.fork(sink)
+    snap.wait_persisted(60)
+    assert sink.closed
+    assert len(sink.blocks) == snap.table.n_blocks
+    # sink contents reassemble to the T0 leaf regardless of backend
+    h = snap.table.leaf_handles[0]
+    rebuilt = np.concatenate(
+        [np.asarray(sink.blocks[(0, b.block_id)]) for b in h.blocks]
+    )
+    np.testing.assert_array_equal(rebuilt, np.asarray(snap.to_tree()["kv"]))
+
+
+# --------------------------------------------------------------------- #
+# incremental epochs                                                    #
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("mode", MODES)
+def test_incremental_persists_exactly_dirty_blocks(mode, backend):
+    prov = PyTreeProvider(_state())
+    snapper = make_snapshotter(
+        mode, prov, block_bytes=2048, copier_threads=2,
+        backend=backend, retain_images=True,
+    )
+    s1 = snapper.fork(MemorySink())
+    s1.wait_persisted(60)
+    # kv blocks are 2048B/(32*4B) = 16 rows; touch rows in exactly 2 blocks
+    for r in (0, 17):
+        _donated_update(prov, snapper, 0, [r], -5.0)
+    live_kv = np.asarray(prov.leaf(0)).copy()
+    sink2 = MemorySink()
+    s2 = snapper.fork(sink2, incremental=True)
+    s2.wait_persisted(60)
+    # exactly the 2 dirty kv blocks persisted; meta/step unchanged -> inherited
+    assert set(sink2.blocks) == {(0, 0), (0, 1)}
+    assert s2.metrics.inherited_blocks == s2.table.n_blocks - 2
+    assert all(
+        s2.table.state(k) == BlockState.PERSISTED for k in s2.inherited
+    )
+    np.testing.assert_array_equal(np.asarray(s2.to_tree()["kv"]), live_kv)
+
+
+def test_incremental_without_base_is_full():
+    prov = PyTreeProvider(_state())
+    snapper = make_snapshotter(
+        "asyncfork", prov, block_bytes=2048, retain_images=True
+    )
+    sink = MemorySink()
+    snap = snapper.fork(sink, incremental=True)  # no previous epoch yet
+    snap.wait_persisted(60)
+    assert snap.metrics.inherited_blocks == 0
+    assert len(sink.blocks) == snap.table.n_blocks
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_incremental_restore_equals_full_restore(backend, tmp_path):
+    prov = PyTreeProvider(_state())
+    snapper = make_snapshotter(
+        "asyncfork", prov, block_bytes=2048, copier_threads=2,
+        backend=backend, retain_images=True,
+    )
+    s1 = snapper.fork(FileSink(str(tmp_path / "full_0")))
+    s1.wait_persisted(60)
+    for r in (3, 40, 90):
+        _donated_update(prov, snapper, 0, [r], 123.0)
+    _donated_update(prov, snapper, 1, [2], -9.0)
+
+    # delta snapshot chained on full_0 + an independent full snapshot
+    s2 = snapper.fork(
+        FileSink(str(tmp_path / "delta_1"), parent="full_0"), incremental=True
+    )
+    s2.wait_persisted(60)
+    full = make_snapshotter("blocking", prov, block_bytes=2048, backend=backend)
+    s3 = full.fork(FileSink(str(tmp_path / "full_1")))
+    s3.wait_persisted(60)
+
+    delta_restore = read_file_snapshot(str(tmp_path / "delta_1"))
+    full_restore = read_file_snapshot(str(tmp_path / "full_1"))
+    assert set(delta_restore) == set(full_restore)
+    for path in full_restore:
+        np.testing.assert_array_equal(delta_restore[path], full_restore[path])
+
+
+def test_filesink_delta_manifest_round_trip(tmp_path):
+    """The delta manifest records carried vs inherited blocks and the
+    parent link resolves relative to the sibling directory."""
+    import json
+
+    prov = PyTreeProvider(_state())
+    snapper = make_snapshotter(
+        "blocking", prov, block_bytes=2048, retain_images=True
+    )
+    s1 = snapper.fork(FileSink(str(tmp_path / "a")))
+    s1.wait_persisted(60)
+    _donated_update(prov, snapper, 0, [0], 1.5)
+    live = np.asarray(prov.leaf(0)).copy()
+    s2 = snapper.fork(FileSink(str(tmp_path / "b"), parent="a"), incremental=True)
+    s2.wait_persisted(60)
+
+    with open(tmp_path / "b" / "manifest.json") as f:
+        manifest = json.load(f)
+    assert manifest["parent"] == "a"
+    kv = next(l for l in manifest["leaves"] if l["path"] == "kv")
+    assert kv["carried"] == [0]  # only the written block travels
+    assert len(kv["blocks"]) == s2.table.leaf_handles[0].geometry().n_blocks
+    out = read_file_snapshot(str(tmp_path / "b"))
+    np.testing.assert_array_equal(out["kv"], live)
+
+
+def test_fork_start_is_stamped_before_table_build():
+    prov = PyTreeProvider(_state())
+    snapper = make_snapshotter("blocking", prov, block_bytes=2048)
+    snap = snapper.fork()
+    # fork_start anchors the engine's snapshot-window span at the real
+    # fork entry, which precedes the handle's t0 (post-table-build)
+    assert snap.fork_start <= snap.t0
+
+
+# --------------------------------------------------------------------- #
+# kernel wrapper helpers                                                #
+# --------------------------------------------------------------------- #
+def test_pick_tile_divides():
+    for elems in (1024, 512, 96, 33, 1):
+        t = pick_tile(elems)
+        assert elems % t == 0 and t <= 1024
+
+
+def test_to_blocked_round_trip():
+    leaf = jnp.arange(10 * 3, dtype=jnp.float32).reshape(10, 3)
+    blocked = to_blocked(leaf, 3, 12)  # 4 rows per block, last block padded
+    assert blocked.shape == (3, 12)
+    flat = np.asarray(blocked).reshape(-1)[: 10 * 3]
+    np.testing.assert_array_equal(flat.reshape(10, 3), np.asarray(leaf))
+
+
+def test_mirror_flags_tracks_table_state():
+    from repro.core import BlockTable
+
+    table = BlockTable(_state(), block_bytes=2048)
+    h = table.leaf_handles[0]
+    table.try_acquire(h.blocks[0].key)          # -> COPYING
+    table.mark(h.blocks[1].key, BlockState.COPIED)
+    flags = mirror_flags(table, 0, force_uncopied=0)
+    assert flags[0] == int(BlockState.UNCOPIED)  # forced open for the stage
+    assert flags[1] == int(BlockState.COPIED)
+    assert flags[2] == int(BlockState.UNCOPIED)

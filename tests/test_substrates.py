@@ -68,10 +68,9 @@ def test_pipeline_prefetch_and_reproducibility():
 
 
 def test_resolve_pspec_divisibility():
-    from repro.runtime.sharding import resolve_pspec
+    from repro.runtime.sharding import make_mesh, resolve_pspec
 
-    mesh = jax.make_mesh((1,), ("model",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("model",))
     # mesh axis of size 1 divides everything
     assert resolve_pspec(P("model", None), (8, 4), mesh) == P("model", None)
     # unknown logical names drop to None
