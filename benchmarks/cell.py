@@ -10,22 +10,29 @@ import sys
 def run(spec):
     import numpy as np
 
-    from repro.kvstore import KVEngine, KVStore, Workload
+    from repro.kvstore import KVEngine, KVStore, ShardedKVStore, Workload
 
-    store = KVStore(
-        capacity=int(spec["size_mb"] * (1 << 20) / (4 * spec.get("row_width", 256))),
+    capacity = int(spec["size_mb"] * (1 << 20) / (4 * spec.get("row_width", 256)))
+    shards = int(spec.get("shards", 1))
+    store_kw = dict(
         row_width=spec.get("row_width", 256),
         block_rows=spec.get("block_rows", 256),
         seed=0,
     )
+    store = (ShardedKVStore(capacity, shards=shards, **store_kw)
+             if shards > 1 else KVStore(capacity, **store_kw))
     eng = KVEngine(
         store,
         mode=spec["mode"],
         copier_threads=spec.get("threads", 8),
         persist_bandwidth=spec.get("persist_bw", 50e6),
-        copier_duty=spec.get("duty", 0.3 / 8),
+        # duty default defers to the engine's shard-aware default
+        # (0.3/threads/sqrt(shards)) so 1-shard and N-shard cells compare
+        # like against like; pass "duty" explicitly to pin it
+        copier_duty=spec.get("duty"),
         backend=spec.get("backend", "host"),
         incremental=spec.get("incremental", False),
+        persist_workers=spec.get("persist_workers"),
     )
     wl = Workload(
         rate_qps=spec.get("qps", 400),

@@ -283,6 +283,26 @@ def incremental_snapshot_window():
         )
 
 
+def shard_scaling():
+    """New cell: cross-shard BGSAVE at a fixed instance size — the fork
+    barrier keeps the union point-in-time while each shard gets its own
+    copiers and a slice of the shared persist pool, so the copy window and
+    snapshot-query tail shrink as the shard count grows."""
+    for shards in ([1, 2, 4] if FAST else [1, 2, 4, 8]):
+        # duty=None -> the engine's shard-aware default for every shard
+        # count (per-shard copier budget decaying 1/sqrt(N)), so the cells
+        # compare like against like; one copier per shard and a modest
+        # query rate keep GIL churn on this single-core host from
+        # swamping the per-shard window gains
+        r = run_cell({"mode": "asyncfork", "size_mb": 128, "duration": 6.0,
+                      "qps": 100, "shards": shards, "threads": 1,
+                      "duty": None, "persist_workers": max(2, shards)})
+        _row(f"shard_scaling/{shards}shards", r["copy_window_ms"] * 1e3,
+             f"snap_p99_us={r['snap_p99_ms']*1e3:.0f};"
+             f"snap_max_us={r['snap_max_ms']*1e3:.0f};"
+             f"min_tput={r['min_tput_qps']:.0f}")
+
+
 def main() -> None:
     print("name,us_per_call,derived")
     fig3_fork_time_vs_size()
@@ -298,6 +318,7 @@ def main() -> None:
     kernel_snapcopy_bandwidth()
     staging_backend_bandwidth()
     incremental_snapshot_window()
+    shard_scaling()
 
 
 if __name__ == "__main__":

@@ -31,7 +31,10 @@ def main():
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--save-every", type=int, default=50)
     ap.add_argument("--mode", default="asyncfork", choices=["blocking", "asyncfork"])
-    ap.add_argument("--out", default="results/ckpts")
+    ap.add_argument("--out", default=None,  # default: outside the repo tree
+                    help="checkpoint dir (default: $REPRO_CKPT_DIR or <tempdir>/repro_ckpts)")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="partition each save across N parallel snapshot shards")
     args = ap.parse_args()
 
     # ~100M params: phi3-mini family at reduced width
@@ -55,14 +58,18 @@ def main():
     fn = make_train_step(model, peak_lr=1e-3)
     donating = jax.jit(fn, donate_argnums=(0, 1))
     nondonating = jax.jit(fn)
-    mgr = TrainSnapshotManager(args.out, mode=args.mode, copier_threads=4)
+    mgr = TrainSnapshotManager(args.out, mode=args.mode, copier_threads=4,
+                               shards=args.shards)
+    print(f"checkpointing to {mgr.directory} "
+          f"({args.shards} shard{'s' if args.shards > 1 else ''})")
 
-    losses, step_t = [], []
+    losses, step_t, saved_steps = [], [], []
     for step in range(args.steps):
         batch = next(data)
         t0 = time.perf_counter()
         if step and step % args.save_every == 0:
             snap = mgr.save(step, params, opt)
+            saved_steps.append(step)
             print(f"  step {step}: save() stalled "
                   f"{mgr.stall_log[-1][1]*1e3:.2f} ms ({args.mode})")
         step_fn = nondonating if mgr.snapshot_active() else donating
@@ -78,9 +85,13 @@ def main():
     print(f"final loss {losses[-1]:.4f} (from {losses[0]:.4f}); "
           f"p99 step {np.percentile(step_t, 99)*1e3:.0f} ms")
 
-    # restore the last checkpoint and verify round trip
-    last = sorted(os.listdir(args.out))[-1]
-    rparams, ropt = restore_checkpoint(os.path.join(args.out, last))
+    if not saved_steps:
+        print("no checkpoints taken (use --save-every < --steps); skipping restore")
+        return
+    # restore the last checkpoint THIS run wrote (the default directory is
+    # shared and persistent, so listing it could pick up stale runs)
+    last = f"step_{saved_steps[-1]:08d}"
+    rparams, ropt = restore_checkpoint(os.path.join(mgr.directory, last))
     r_leaves = jax.tree_util.tree_leaves(rparams)
     print(f"restored {last}: {len(r_leaves)} param leaves, "
           f"opt step {int(np.asarray(ropt.step))}")

@@ -1,3 +1,7 @@
-from repro.checkpoint.manager import TrainSnapshotManager, restore_checkpoint
+from repro.checkpoint.manager import (
+    TrainSnapshotManager,
+    default_checkpoint_dir,
+    restore_checkpoint,
+)
 
-__all__ = ["TrainSnapshotManager", "restore_checkpoint"]
+__all__ = ["TrainSnapshotManager", "default_checkpoint_dir", "restore_checkpoint"]

@@ -19,20 +19,33 @@ updates (DESIGN.md §2):
     transient decays leaf-by-leaf instead of persisting for the window.
   * When the copy window closes, the loop gets the donating step back.
 
-``restore_checkpoint`` reads a FileSink directory back into (params, opt)
-host trees; re-device_put with any mesh's shardings gives elastic
-restore (different device counts / topologies) for free.
+Sharded checkpoints (``shards > 1``): the state's leaves are partitioned
+(greedy by bytes) across N shard providers, each with its own block table
+and snapshotter; all shards stamp T0 behind the coordinator's fork
+barrier and persist through one shared parallel pipeline into
+``step_X/shard_k/`` FileSinks under a composite manifest (DESIGN.md §6).
+
+``restore_checkpoint`` reads a FileSink directory — flat, delta-chained,
+or composite-sharded (each shard resolving its own chain) — back into
+(params, opt) host trees; re-device_put with any mesh's shardings gives
+elastic restore (different device counts / topologies) for free.
+
+Output location: ``directory=None`` defaults to ``$REPRO_CKPT_DIR`` or
+``<tempdir>/repro_ckpts`` — OUTSIDE the repo tree, so checkpoint binaries
+can never be committed by accident (PR 1 landed 661 MB under
+``results/ckpts/`` this way). Pass an explicit path to override.
 """
 from __future__ import annotations
 
 import os
-import threading
+import tempfile
 import time
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
-import jax
 import numpy as np
 
+from repro.core.coordinator import CoordinatedSnapshot, ShardedSnapshotCoordinator
+from repro.core.persist import PersistPipeline
 from repro.core.provider import PyTreeProvider
 from repro.core.sinks import FileSink, read_file_snapshot
 from repro.core.snapshot import (
@@ -41,13 +54,43 @@ from repro.core.snapshot import (
     SnapshotHandle,
 )
 from repro.optim.adamw import AdamWState
-from repro.utils.tree import flatten_with_paths
+from repro.utils.tree import flatten_with_paths, leaf_nbytes
+
+
+def default_checkpoint_dir() -> str:
+    """Checkpoints default OUTSIDE the repo tree; override with the
+    ``REPRO_CKPT_DIR`` environment variable or an explicit ``directory``."""
+    return os.environ.get(
+        "REPRO_CKPT_DIR", os.path.join(tempfile.gettempdir(), "repro_ckpts")
+    )
+
+
+def _shard_leaves(flat: Sequence[Tuple[str, object]], shards: int) -> List[List[Tuple[str, object]]]:
+    """Greedy byte-balanced partition of (path, leaf) pairs into shards.
+
+    Deterministic for a fixed state structure, so shard k holds the same
+    leaves at every save — a requirement for per-shard delta chains."""
+    order = sorted(range(len(flat)), key=lambda i: -leaf_nbytes(flat[i][1]))
+    loads = [0] * shards
+    out: List[List[Tuple[str, object]]] = [[] for _ in range(shards)]
+    for i in order:
+        k = loads.index(min(loads))
+        out[k].append(flat[i])
+        loads[k] += leaf_nbytes(flat[i][1])
+    return out
+
+
+def _nest_tree(pairs: Sequence[Tuple[str, object]]) -> Dict:
+    tree: Dict = {}
+    for path, leaf in pairs:
+        _nest(tree, path.split("/"), leaf)
+    return tree
 
 
 class TrainSnapshotManager:
     def __init__(
         self,
-        directory: str,
+        directory: Optional[str] = None,
         mode: str = "asyncfork",
         copier_threads: int = 4,
         block_bytes: int = 4 << 20,
@@ -55,13 +98,22 @@ class TrainSnapshotManager:
         backend: str = "host",
         incremental: bool = False,
         full_every: int = 4,
+        shards: int = 1,
+        persist_workers: Optional[int] = None,
     ):
         """``incremental=True`` turns the checkpoint stream into a delta
         chain: each save diffs against the previous save's retained T0
         image (the ``dirty`` kernel) and persists only changed blocks,
         with a full-snapshot anchor every ``full_every`` saves so restore
-        chains stay short. ``backend`` picks host or device staging."""
-        self.directory = directory
+        chains stay short. ``backend`` picks host or device staging.
+
+        ``shards > 1`` partitions the state across that many independent
+        snapshot epochs per save (fork barrier + shared persist pipeline;
+        ``persist_workers`` sizes the pool, default one per shard).
+
+        ``directory=None`` resolves via :func:`default_checkpoint_dir`
+        (outside the repo tree)."""
+        self.directory = directory if directory is not None else default_checkpoint_dir()
         self.mode = mode
         self.copier_threads = copier_threads
         self.block_bytes = block_bytes
@@ -69,8 +121,13 @@ class TrainSnapshotManager:
         self.backend = backend
         self.incremental = bool(incremental)
         self.full_every = max(1, int(full_every))
+        self.shards = max(1, int(shards))
+        self._pipeline = PersistPipeline(
+            workers=persist_workers if persist_workers is not None
+            else max(1, self.shards)
+        )
         self._snaps: List[Tuple[SnapshotHandle, PyTreeProvider]] = []
-        self._chain_base: Optional[Tuple[SnapshotHandle, str]] = None
+        self._chain_base: Optional[Tuple[List[SnapshotHandle], str]] = None
         self._chain_len = 0
         self.stall_log: List[Tuple[str, float]] = []  # (what, seconds)
 
@@ -88,30 +145,7 @@ class TrainSnapshotManager:
                 if snap.table.leaf_done(h.leaf_id):
                     prov.update_leaf(h.leaf_id, _TOMBSTONE)
 
-    def save(self, step: int, params, opt_state: AdamWState) -> SnapshotHandle:
-        """Take a checkpoint of (params, opt_state) at this step boundary.
-
-        With ``incremental`` enabled, saves between anchors are deltas:
-        the snapshot diffs against the previous save's T0 image and its
-        FileSink manifest records the parent directory + carried blocks.
-        """
-        t0 = time.perf_counter()
-        state = {"params": params, "opt": {"step": opt_state.step,
-                                           "m": opt_state.m, "v": opt_state.v}}
-        provider = PyTreeProvider(state)  # pins T0 refs (CoW data pages)
-        dirname = f"step_{step:08d}"
-        path = os.path.join(self.directory, dirname)
-        base: Optional[SnapshotHandle] = None
-        parent: Optional[str] = None
-        if self.incremental and self._chain_base is not None:
-            prev_snap, prev_dir = self._chain_base
-            if prev_snap.aborted:
-                # the base's sink directory is gone (FileSink.abort);
-                # restart the chain with a fresh full anchor
-                self._chain_base, self._chain_len = None, 0
-            elif self._chain_len % self.full_every != 0:
-                base, parent = prev_snap, prev_dir
-        sink = FileSink(path, parent=parent)
+    def _make_snapshotter(self, provider: PyTreeProvider):
         if self.mode == "blocking":
             snapper = BlockingSnapshotter(
                 provider, block_bytes=self.block_bytes, backend=self.backend
@@ -124,15 +158,76 @@ class TrainSnapshotManager:
                 copier_duty=self.copier_duty,
                 backend=self.backend,
             )
-        snap = snapper.fork(sink, incremental=base is not None, base=base)
-        self._snaps.append((snap, provider))
+        snapper.persist_pipeline = self._pipeline
+        return snapper
+
+    def save(
+        self, step: int, params, opt_state: AdamWState
+    ) -> Union[SnapshotHandle, CoordinatedSnapshot]:
+        """Take a checkpoint of (params, opt_state) at this step boundary.
+
+        With ``incremental`` enabled, saves between anchors are deltas:
+        each shard's snapshot diffs against the previous save's T0 image
+        and its FileSink manifest records the parent directory + carried
+        blocks. Returns a :class:`SnapshotHandle` (``shards == 1``) or a
+        :class:`CoordinatedSnapshot` (``shards > 1``).
+        """
+        t0 = time.perf_counter()
+        state = {"params": params, "opt": {"step": opt_state.step,
+                                           "m": opt_state.m, "v": opt_state.v}}
+        dirname = f"step_{step:08d}"
+        path = os.path.join(self.directory, dirname)
+
+        bases: List[Optional[SnapshotHandle]] = [None] * self.shards
+        parent: Optional[str] = None
+        if self.incremental and self._chain_base is not None:
+            prev_parts, prev_dir = self._chain_base
+            if any(p.aborted for p in prev_parts):
+                # a base sink directory is gone (FileSink.abort);
+                # restart the chain with a fresh full anchor
+                self._chain_base, self._chain_len = None, 0
+            elif self._chain_len % self.full_every != 0:
+                bases, parent = list(prev_parts), prev_dir
+
+        if self.shards == 1:
+            provider = PyTreeProvider(state)  # pins T0 refs (CoW data pages)
+            sink = FileSink(path, parent=parent)
+            snapper = self._make_snapshotter(provider)
+            snap = snapper.fork(sink, incremental=bases[0] is not None,
+                                base=bases[0])
+            parts, providers = [snap], [provider]
+            result: Union[SnapshotHandle, CoordinatedSnapshot] = snap
+        else:
+            flat, _ = flatten_with_paths(state)
+            shard_flat = _shard_leaves(flat, self.shards)
+            providers = [PyTreeProvider(_nest_tree(pairs))
+                         for pairs in shard_flat]
+            # a per-save coordinator over the per-save providers: its fork
+            # barrier stamps every shard's T0 before any copier starts
+            # (the training loop is paused inside save(), so the write
+            # gate is uncontended) and all shards share this manager's
+            # persist pipeline
+            coord = ShardedSnapshotCoordinator(
+                providers, mode=self.mode, pipeline=self._pipeline,
+                block_bytes=self.block_bytes,
+                copier_threads=self.copier_threads,
+                copier_duty=self.copier_duty, backend=self.backend,
+            )
+            result = coord.bgsave_to_dir(path, parent=parent, bases=bases,
+                                         prefix="")
+            parts = result.parts
+
+        for snap, prov in zip(parts, providers):
+            self._snaps.append((snap, prov))
         if self.incremental:
-            self._chain_base = (snap, dirname)
+            self._chain_base = (parts, dirname)
             self._chain_len += 1
         self.stall_log.append(("save", time.perf_counter() - t0))
-        return snap
+        return result
 
     def wait_all(self, timeout: float = 600.0) -> None:
+        """Block until every save is durable; surfaces the first abort
+        (even with persist workers still in flight) as SnapshotError."""
         for snap, _ in self._snaps:
             snap.wait_persisted(timeout)
 
@@ -163,6 +258,10 @@ _TOMBSTONE = _Tombstone()
 
 def restore_checkpoint(directory: str) -> Tuple[Dict, AdamWState]:
     """Read a checkpoint back into host numpy trees.
+
+    Handles flat, delta-chained, and composite (sharded) snapshot
+    directories alike — ``read_file_snapshot`` resolves shard manifests
+    and per-shard parent chains transparently.
 
     Elastic restart: callers re-``device_put`` these with whatever mesh
     they now have — nothing in the file format encodes the old topology.

@@ -8,9 +8,22 @@ from repro.core.blocks import (
     LeafHandle,
     TwoWayPointer,
 )
+from repro.core.coordinator import (
+    AggregateMetrics,
+    CoordinatedSnapshot,
+    ShardedSnapshotCoordinator,
+)
 from repro.core.metrics import SnapshotMetrics
+from repro.core.persist import PersistJob, PersistPipeline
 from repro.core.provider import FailingProvider, PyTreeProvider
-from repro.core.sinks import FileSink, MemorySink, NullSink, Sink, read_file_snapshot
+from repro.core.sinks import (
+    FileSink,
+    MemorySink,
+    NullSink,
+    Sink,
+    read_file_snapshot,
+    write_composite_manifest,
+)
 from repro.core.staging import (
     STAGING_BACKENDS,
     DeviceStaging,
@@ -30,6 +43,12 @@ from repro.core.snapshot import (
 )
 
 __all__ = [
+    "AggregateMetrics",
+    "CoordinatedSnapshot",
+    "ShardedSnapshotCoordinator",
+    "PersistJob",
+    "PersistPipeline",
+    "write_composite_manifest",
     "BlockGeometry",
     "StagingBackend",
     "HostStaging",

@@ -1,0 +1,305 @@
+"""Sharded snapshot coordinator — cross-shard BGSAVE with a fork barrier.
+
+Production Redis clusters shard the keyspace and BGSAVE shards
+independently; the paper's design (one child per VMA, one RDB writer)
+snapshots a single instance. This module is the distributed analogue for
+our substrate: the state is partitioned into N shards, each owning its own
+``BlockTable`` + ``Snapshotter`` + staging backend, and the coordinator
+
+  (a) takes a **consistent cross-shard BGSAVE** via a fork barrier: every
+      shard's ``fork_prepare`` (write-protect + T0 stamp) completes while
+      the write gate is held, before ANY shard's ``fork_commit`` launches
+      copiers — so the union of shard images is a single point-in-time cut
+      (consistency argument in DESIGN.md §6);
+  (b) persists all shard epochs through one shared
+      :class:`~repro.core.persist.PersistPipeline` — a bounded work queue
+      feeding a pool of persister workers that write blocks out of order
+      into each shard's ``FileSink`` (pwrite layout), so N shards drain at
+      pool parallelism instead of one disk stream per instance.
+
+Writers cooperate through :attr:`write_gate`: the engine holds the gate
+across ``before_write`` → donated-update-commit for each touched block
+(``KVStore.set(gate=...)`` does this), and ``bgsave`` holds it across the
+barrier. A single-threaded engine (the paper's Redis model) never contends.
+"""
+from __future__ import annotations
+
+import os
+import threading
+from typing import Dict, List, Optional, Sequence
+
+from repro.core.persist import PersistPipeline
+from repro.core.provider import PyTreeProvider
+from repro.core.sinks import FileSink, Sink, write_composite_manifest
+from repro.core.snapshot import SnapshotHandle, Snapshotter, make_snapshotter
+
+
+class AggregateMetrics:
+    """Read-only roll-up of per-shard :class:`SnapshotMetrics`.
+
+    The parent-visible quantities sum (fork stalls and interruptions all
+    land on the serving thread); the window quantities take the max (the
+    barrier's window closes when the slowest shard's does).
+    """
+
+    def __init__(self, parts: Sequence[SnapshotHandle]):
+        self._parts = list(parts)
+
+    @property
+    def fork_s(self) -> float:
+        """Serving-thread stall of the whole barrier: first prepare entry
+        to last commit exit. Per-part fork_s intervals overlap (prepares
+        and commits run sequentially on one thread), so summing them would
+        overstate the stall roughly in proportion to shard count."""
+        starts = [p.fork_start for p in self._parts]
+        ends = [p.fork_start + p.metrics.fork_s for p in self._parts]
+        return max(ends) - min(starts)
+
+    @property
+    def _t0(self) -> float:
+        return min(p.t0 for p in self._parts)
+
+    @property
+    def copy_window_s(self) -> float:
+        """Barrier start to the slowest shard's copy-window close."""
+        return max(
+            ((p.t0 - self._t0) + p.metrics.copy_window_s for p in self._parts),
+            default=0.0,
+        )
+
+    @property
+    def persist_s(self) -> float:
+        """Barrier start to the slowest shard's durability."""
+        return max(
+            ((p.t0 - self._t0) + p.metrics.persist_s for p in self._parts),
+            default=0.0,
+        )
+
+    @property
+    def copied_blocks_child(self) -> int:
+        return sum(p.metrics.copied_blocks_child for p in self._parts)
+
+    @property
+    def copied_blocks_parent(self) -> int:
+        return sum(p.metrics.copied_blocks_parent for p in self._parts)
+
+    @property
+    def inherited_blocks(self) -> int:
+        return sum(p.metrics.inherited_blocks for p in self._parts)
+
+    @property
+    def n_interruptions(self) -> int:
+        return sum(p.metrics.n_interruptions for p in self._parts)
+
+    @property
+    def out_of_service_s(self) -> float:
+        """Fig 20 analogue: one barrier stall + every parent-side copy
+        stall (per-part out_of_service_s would re-count overlapping fork
+        intervals, shard count times)."""
+        return self.fork_s + sum(
+            d for p in self._parts for _, d, _ in p.metrics.interruptions
+        )
+
+    def histogram_us(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for p in self._parts:
+            for k, v in p.metrics.histogram_us().items():
+                out[k] = out.get(k, 0) + v
+        return out
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "fork_ms": self.fork_s * 1e3,
+            "copy_window_ms": self.copy_window_s * 1e3,
+            "persist_ms": self.persist_s * 1e3,
+            "interruptions": float(self.n_interruptions),
+            "out_of_service_ms": self.out_of_service_s * 1e3,
+            "parent_copied_blocks": float(self.copied_blocks_parent),
+            "child_copied_blocks": float(self.copied_blocks_child),
+            "inherited_blocks": float(self.inherited_blocks),
+            "shards": float(len(self._parts)),
+            "per_shard": [p.metrics.summary() for p in self._parts],
+        }
+
+
+class CoordinatedSnapshot:
+    """The union of per-shard epochs taken at one fork barrier."""
+
+    def __init__(self, parts: List[SnapshotHandle], directory: Optional[str] = None):
+        self.parts = parts
+        self.directory = directory
+        self.t0 = min(p.t0 for p in parts)
+        self.fork_start = min(p.fork_start for p in parts)
+
+    @property
+    def metrics(self) -> AggregateMetrics:
+        return AggregateMetrics(self.parts)
+
+    @property
+    def aborted(self) -> bool:
+        return any(p.aborted for p in self.parts)
+
+    @property
+    def ok(self) -> bool:
+        return not self.aborted
+
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        ok = True
+        for p in self.parts:
+            ok = p.wait(timeout) and ok
+        return ok
+
+    def wait_persisted(self, timeout: Optional[float] = None) -> bool:
+        ok = True
+        for p in self.parts:
+            ok = p.wait_persisted(timeout) and ok
+        return ok
+
+    def to_trees(self) -> List:
+        """Per-shard T0 pytrees, in shard order."""
+        return [p.to_tree() for p in self.parts]
+
+
+class ShardedSnapshotCoordinator:
+    """N shard snapshotters + fork barrier + shared persist pipeline.
+
+    ``providers`` are the per-shard state providers (one ``PyTreeProvider``
+    per shard); every shard gets its own snapshotter built from the same
+    ``mode``/``**snapshotter_kw``. ``persist_workers`` sizes the shared
+    pipeline (default: one worker per shard, min 2).
+    """
+
+    def __init__(
+        self,
+        providers: Sequence[PyTreeProvider],
+        mode: str = "asyncfork",
+        persist_workers: Optional[int] = None,
+        persist_queue_depth: int = 64,
+        pipeline: Optional[PersistPipeline] = None,
+        **snapshotter_kw,
+    ):
+        if not providers:
+            raise ValueError("need at least one shard provider")
+        self.mode = mode
+        self.snapshotters: List[Snapshotter] = [
+            make_snapshotter(mode, p, **snapshotter_kw) for p in providers
+        ]
+        if pipeline is None:
+            workers = persist_workers if persist_workers is not None \
+                else max(2, len(self.snapshotters))
+            pipeline = PersistPipeline(workers=workers,
+                                       queue_depth=persist_queue_depth)
+        self.pipeline = pipeline
+        for sn in self.snapshotters:
+            sn.persist_pipeline = self.pipeline
+        self.write_gate = threading.RLock()
+        self._snaps: List[CoordinatedSnapshot] = []
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.snapshotters)
+
+    # -- engine-facing ---------------------------------------------------
+    def before_write(self, shard_id: int, leaf_id: int, rows=None) -> float:
+        """Proactive synchronization for one shard's leaf. The caller must
+        hold :attr:`write_gate` across this call AND the donated update it
+        guards (``KVStore.set(gate=...)`` does); the gate is reentrant so
+        ``bgsave`` can run under it too."""
+        return self.snapshotters[shard_id].before_write(leaf_id, rows)
+
+    # -- the barrier -----------------------------------------------------
+    def bgsave(
+        self,
+        sinks: Optional[Sequence[Optional[Sink]]] = None,
+        sink_factory=None,
+        incremental: bool = False,
+        bases: Optional[Sequence[Optional[SnapshotHandle]]] = None,
+    ) -> CoordinatedSnapshot:
+        """Consistent cross-shard BGSAVE.
+
+        Under the write gate: phase 1 prepares every shard (stamp T0 +
+        write-protect — after this, any write anywhere proactively syncs),
+        then phase 2 commits every shard (copiers + persist jobs start).
+        No write can commit between two shards' T0 stamps, so the union of
+        shard images is the state at one instant.
+
+        ``bases`` overrides the incremental diff base per shard (used by
+        checkpoint delta chains): shard k is incremental iff ``bases[k]``
+        is not None. Without ``bases``, ``incremental`` applies globally
+        against each snapshotter's retained image.
+        """
+        if sinks is not None and len(sinks) != self.n_shards:
+            raise ValueError(f"need {self.n_shards} sinks, got {len(sinks)}")
+        if bases is not None and len(bases) != self.n_shards:
+            raise ValueError(f"need {self.n_shards} bases, got {len(bases)}")
+        parts: List[SnapshotHandle] = []
+        with self.write_gate:
+            try:
+                for k, sn in enumerate(self.snapshotters):
+                    parts.append(sn.fork_prepare(
+                        incremental=incremental if bases is None
+                        else bases[k] is not None,
+                        base=None if bases is None else bases[k],
+                    ))
+                for k, sn in enumerate(self.snapshotters):
+                    sink = sinks[k] if sinks is not None else (
+                        sink_factory(k) if sink_factory is not None else None
+                    )
+                    sn.fork_commit(parts[k], sink)
+            except BaseException as exc:
+                # a mid-barrier failure must not leave prepared-but-never-
+                # committed epochs behind: their events would never fire
+                # (wait_all stalls to timeout) and they would pin T0 refs
+                # in their snapshotter's active list forever
+                for p in parts:
+                    if not p.persist_done.is_set():
+                        p.abort(exc)
+                raise
+        snap = CoordinatedSnapshot(parts)
+        self._snaps.append(snap)
+        return snap
+
+    def bgsave_to_dir(
+        self,
+        directory: str,
+        parent: Optional[str] = None,
+        incremental: bool = False,
+        bases: Optional[Sequence[Optional[SnapshotHandle]]] = None,
+        prefix: str = "shard{k}/",
+    ) -> CoordinatedSnapshot:
+        """BGSAVE into ``<directory>/shard_<k>/`` FileSinks plus a top-level
+        composite manifest that ``read_file_snapshot`` resolves. ``parent``
+        (a sibling snapshot directory name) chains incremental epochs:
+        shard k inherits from ``../<parent>/shard_<k>``."""
+        sinks = [
+            FileSink(
+                os.path.join(directory, f"shard_{k}"),
+                parent=None if parent is None
+                else os.path.join("..", parent, f"shard_{k}"),
+            )
+            for k in range(self.n_shards)
+        ]
+        snap = self.bgsave(sinks=sinks, incremental=incremental, bases=bases)
+        write_composite_manifest(
+            directory,
+            [{"dir": f"shard_{k}", "prefix": prefix.format(k=k)}
+             for k in range(self.n_shards)],
+        )
+        snap.directory = directory
+        return snap
+
+    # -- lifecycle -------------------------------------------------------
+    def active(self) -> List[CoordinatedSnapshot]:
+        self._snaps = [
+            s for s in self._snaps
+            if not all(p.copy_done.is_set() and p.persist_done.is_set()
+                       for p in s.parts)
+        ]
+        return list(self._snaps)
+
+    def wait_all(self, timeout: float = 600.0) -> None:
+        """Block until every registered epoch is durable; surfaces the
+        first shard abort as :class:`SnapshotError` (workers may still be
+        in flight on other shards — their jobs drain as no-ops)."""
+        for snap in list(self._snaps):
+            snap.wait_persisted(timeout)

@@ -1,0 +1,197 @@
+"""Parallel persist pipeline — the "RDB writer" generalized to a pool.
+
+The paper's child persists the snapshot with a single sequential writer
+(§5.2): one thread walks the block order, stages anything the copiers have
+not reached yet, and streams it to the sink. That caps snapshot throughput
+at one disk stream per instance. This module extracts that loop into a
+:class:`PersistPipeline`: a bounded work queue feeding ``workers`` persister
+threads that write blocks **out of order** into the sink (``FileSink``'s
+pwrite-style layout makes out-of-order writes safe), with per-epoch jobs
+tracked so ``close()``/``abort()`` still fire exactly once per sink.
+
+A pipeline with ``workers=1`` behaves exactly like the paper's single
+writer (same staging, same pacing against a slow sink); the sharded
+coordinator shares one wider pipeline across all shard epochs so N shards
+persist concurrently without N uncoordinated thread herds.
+
+Workers are lazy: they spawn on the first job and exit after an idle
+period with no jobs in flight, so short-lived snapshotters (one per
+checkpoint save) do not leak threads.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from typing import List, Optional, Sequence
+
+from repro.core.blocks import BlockRef, BlockState
+
+
+class PersistJob:
+    """One epoch's persist: a (snapshot, sink) pair plus completion tracking.
+
+    ``_outstanding`` counts enqueued-but-unwritten blocks; the job finishes
+    (sink close/abort + ``persist_done``) when the producer has enqueued its
+    whole order and the count drains to zero — regardless of which worker
+    wrote the last block.
+    """
+
+    def __init__(self, snap, sink, order: Sequence[BlockRef], on_finish=None):
+        self.snap = snap
+        self.sink = sink
+        self.order = list(order)
+        self.failed = False
+        self._on_finish = on_finish
+        self._mu = threading.Lock()
+        self._outstanding = 0
+        self._submitted_all = False
+
+    # -- accounting (producer increments, workers decrement) ---------------
+    def _block_enqueued(self) -> None:
+        with self._mu:
+            self._outstanding += 1
+
+    def _block_finished(self) -> None:
+        with self._mu:
+            self._outstanding -= 1
+            done = self._submitted_all and self._outstanding == 0
+        if done:
+            self._finish()
+
+    def _all_enqueued(self) -> None:
+        with self._mu:
+            self._submitted_all = True
+            done = self._outstanding == 0
+        if done:
+            self._finish()
+
+    def fail(self, exc: BaseException) -> None:
+        """§4.4 case 3 routed through the pipeline: abort the epoch; the
+        job's remaining blocks drain as no-ops and ``_finish`` cleans up."""
+        with self._mu:
+            self.failed = True
+        self.snap.abort(exc)
+
+    def _finish(self) -> None:
+        snap, sink = self.snap, self.sink
+        try:
+            if self.failed or snap.aborted:
+                sink.abort()
+            else:
+                sink.close()
+                snap.metrics.persist_s = time.perf_counter() - snap.t0
+        except BaseException as exc:
+            snap.abort(exc)
+            sink.abort()
+        finally:
+            snap.persist_done.set()
+            if self._on_finish is not None:
+                self._on_finish(self)
+
+
+class PersistPipeline:
+    """Bounded work queue + persister worker pool, shared across epochs."""
+
+    def __init__(self, workers: int = 1, queue_depth: int = 64,
+                 idle_timeout: float = 1.0):
+        self.workers = max(1, int(workers))
+        self.queue_depth = max(1, int(queue_depth))
+        self.idle_timeout = float(idle_timeout)
+        self._q: "queue.Queue" = queue.Queue(maxsize=self.queue_depth)
+        self._mu = threading.Lock()
+        self._threads: List[threading.Thread] = []
+        self._active_jobs = 0
+
+    # ------------------------------------------------------------------ #
+    def submit(self, snap, sink, order: Optional[Sequence[BlockRef]] = None) -> PersistJob:
+        """Start persisting one epoch. Returns immediately; completion is
+        signalled through ``snap.persist_done`` (and errors via
+        ``snap.wait_persisted``), same contract as the old single persister."""
+        job = PersistJob(
+            snap, sink,
+            order if order is not None else snap.table.blocks,
+            on_finish=self._job_finished,
+        )
+        with self._mu:
+            self._active_jobs += 1
+        self._ensure_workers()
+        threading.Thread(target=self._produce, args=(job,), daemon=True).start()
+        return job
+
+    def _job_finished(self, job: PersistJob) -> None:
+        with self._mu:
+            self._active_jobs -= 1
+
+    def _ensure_workers(self) -> None:
+        with self._mu:
+            self._threads = [t for t in self._threads if t.is_alive()]
+            while len(self._threads) < self.workers:
+                t = threading.Thread(target=self._worker, daemon=True)
+                t.start()
+                self._threads.append(t)
+
+    # ------------------------------------------------------------------ #
+    def _produce(self, job: PersistJob) -> None:
+        """Open the sink, then feed the bounded queue (backpressure: a slow
+        sink throttles staging exactly like the old sequential persister)."""
+        snap, sink = job.snap, job.sink
+        try:
+            sink.set_delta(snap.inherited)
+            sink.open(snap.table.leaf_handles)
+        except BaseException as exc:
+            job.fail(exc)
+            job._all_enqueued()
+            return
+        for ref in job.order:
+            if job.failed or snap.aborted:
+                break
+            if ref.key in snap.inherited:
+                continue
+            job._block_enqueued()
+            self._q.put((job, ref))
+        job._all_enqueued()
+
+    def _worker(self) -> None:
+        me = threading.current_thread()
+        while True:
+            try:
+                job, ref = self._q.get(timeout=self.idle_timeout)
+            except queue.Empty:
+                with self._mu:
+                    if self._active_jobs == 0:
+                        # Deregister BEFORE returning, atomically with the
+                        # idle check: submit() increments _active_jobs under
+                        # this same mutex, so it either sees us gone (and
+                        # respawns) or we see its job (and keep running) —
+                        # an exiting-but-alive thread can never absorb a
+                        # worker slot while a job is pending.
+                        if me in self._threads:
+                            self._threads.remove(me)
+                        return
+                continue
+            self._persist_block(job, ref)
+
+    def _persist_block(self, job: PersistJob, ref: BlockRef) -> None:
+        """The old persister's per-block body: ensure the block is staged
+        (the child's shared-table read in CoW mode), then write it out."""
+        snap, sink = job.snap, job.sink
+        try:
+            if not (job.failed or snap.aborted):
+                table = snap.table
+                st = table.state(ref.key)
+                while st in (BlockState.UNCOPIED, BlockState.COPYING):
+                    if st == BlockState.UNCOPIED and table.try_acquire(ref.key):
+                        snap.stage_block(ref)
+                        table.mark(ref.key, BlockState.COPIED)
+                        snap.metrics.copied_blocks_child += 1
+                        st = BlockState.COPIED
+                        break
+                    st = table.wait_not_copying(ref.key)
+                if not (job.failed or snap.aborted):
+                    sink.write_block(ref, snap.staged_block(ref))
+                    table.mark(ref.key, BlockState.PERSISTED)
+        except BaseException as exc:
+            job.fail(exc)
+        finally:
+            job._block_finished()

@@ -90,21 +90,33 @@ class MemorySink(Sink):
 class FileSink(Sink):
     """One binary file per leaf + a JSON manifest (the "RDB file").
 
-    Layout: ``<dir>/leaf_<id>.bin`` written at block offsets (pwrite-style,
-    so parallel persisters could write out of order), plus ``manifest.json``
-    describing paths/shapes/dtypes — enough to restore without pickles.
+    Layout: ``<dir>/leaf_<id>.bin`` written at block offsets with
+    ``os.pwrite``, plus ``manifest.json`` describing paths/shapes/dtypes —
+    enough to restore without pickles. Writes carry their own offset and
+    never seek, so any number of persister workers can write blocks
+    **out of order and in parallel** into the same file (the pipeline in
+    :mod:`repro.core.persist` relies on this).
+
+    Block offsets are precomputed once in :meth:`open` as a per-leaf
+    prefix-sum table — the seed recomputed ``sum(nbytes)`` per call, which
+    made a leaf's persist O(blocks²).
 
     Incremental epochs: the manifest's per-leaf ``carried`` list records
     which block ids this snapshot actually wrote; everything else is
     inherited from the ``parent`` snapshot directory (a sibling directory
-    name or an absolute path). ``read_file_snapshot`` follows the chain.
+    name, a relative path, or an absolute path). ``read_file_snapshot``
+    follows the chain.
     """
 
     def __init__(self, directory: str, parent: Optional[str] = None):
         self.dir = directory
         self.parent = parent
         self._files: Dict[int, object] = {}
+        self._offsets: Dict[int, np.ndarray] = {}  # leaf_id -> prefix sums
         self._lock = threading.Lock()
+        self._cv = threading.Condition(self._lock)
+        self._inflight = 0
+        self._open = False
 
     def open(self, leaf_handles):
         os.makedirs(self.dir, exist_ok=True)
@@ -132,21 +144,44 @@ class FileSink(Sink):
             json.dump(manifest, f)
         self._handles = {h.leaf_id: h for h in leaf_handles}
         for h in leaf_handles:
+            self._offsets[h.leaf_id] = np.cumsum(
+                [0] + [b.nbytes for b in h.blocks]
+            )
             fp = open(os.path.join(self.dir, f"leaf_{h.leaf_id}.bin"), "wb")
-            total = sum(b.nbytes for b in h.blocks)
+            total = int(self._offsets[h.leaf_id][-1])
             if total:
                 fp.truncate(total)
             self._files[h.leaf_id] = fp
+        with self._lock:
+            self._open = True
 
     def write_block(self, ref, data):
-        h = self._handles[ref.leaf_id]
-        offset = sum(b.nbytes for b in h.blocks[: ref.block_id])
-        fp = self._files[ref.leaf_id]
+        # Serialize (and, for device blocks, pull to host) OUTSIDE any lock;
+        # pwrite itself is positioned + thread-safe, so concurrent workers
+        # writing different blocks of one leaf never contend.
+        payload = np.ascontiguousarray(data).tobytes()
+        offset = int(self._offsets[ref.leaf_id][ref.block_id])
         with self._lock:
-            fp.seek(offset)
-            fp.write(np.ascontiguousarray(data).tobytes())
+            if not self._open:
+                raise RuntimeError("FileSink closed or aborted")
+            fd = self._files[ref.leaf_id].fileno()
+            self._inflight += 1
+        try:
+            os.pwrite(fd, payload, offset)
+        finally:
+            with self._cv:
+                self._inflight -= 1
+                self._cv.notify_all()
+
+    def _drain(self):
+        """Quiesce in-flight writes and bar new ones (close/abort barrier)."""
+        with self._cv:
+            self._open = False
+            while self._inflight:
+                self._cv.wait(timeout=1.0)
 
     def close(self):
+        self._drain()
         for fp in self._files.values():
             fp.close()
         os.replace(
@@ -155,6 +190,7 @@ class FileSink(Sink):
         )
 
     def abort(self):
+        self._drain()
         for fp in self._files.values():
             try:
                 fp.close()
@@ -163,15 +199,40 @@ class FileSink(Sink):
         shutil.rmtree(self.dir, ignore_errors=True)
 
 
+def write_composite_manifest(directory: str, shards: List[Dict]) -> None:
+    """Top-level manifest for a sharded snapshot: ``shards`` is a list of
+    ``{"dir": <relative shard dir>, "prefix": <leaf-path prefix>}`` entries.
+    ``read_file_snapshot`` merges the shard restores (each shard dir is a
+    normal FileSink directory, possibly the head of its own delta chain)."""
+    os.makedirs(directory, exist_ok=True)
+    tmp = os.path.join(directory, "manifest.json.tmp")
+    with open(tmp, "w") as f:
+        json.dump({"composite": True, "shards": shards}, f)
+    os.replace(tmp, os.path.join(directory, "manifest.json"))
+
+
 def read_file_snapshot(directory: str):
     """Restore {path: np.ndarray} from a FileSink directory.
 
     Incremental snapshots resolve transparently: blocks a manifest does
     not carry are filled from the ``parent`` snapshot (itself possibly a
-    delta — the chain bottoms out at a full-snapshot anchor).
+    delta — the chain bottoms out at a full-snapshot anchor). Sharded
+    snapshots (a composite manifest naming per-shard FileSink dirs) merge
+    into one flat dict, each shard's leaf paths under its ``prefix``.
     """
     with open(os.path.join(directory, "manifest.json")) as f:
         manifest = json.load(f)
+
+    if manifest.get("composite"):
+        out = {}
+        for entry in manifest["shards"]:
+            sdir = entry["dir"]
+            if not os.path.isabs(sdir):
+                sdir = os.path.join(directory, sdir)
+            prefix = entry.get("prefix", "")
+            for path, arr in read_file_snapshot(sdir).items():
+                out[prefix + path] = arr
+        return out
 
     parent_cache = {}
 
@@ -206,6 +267,10 @@ def read_file_snapshot(directory: str):
                         start, stop, _ = blocks[b]
                         arr[start:stop] = parr[start:stop]
                 else:
-                    arr = parr  # scalar leaf inherited wholesale
+                    # scalar leaf inherited wholesale — copy, never alias:
+                    # callers mutate restored arrays in place when resolving
+                    # further deltas, and an alias would corrupt the parent's
+                    # cached restore
+                    arr = np.array(parr, copy=True)
         out[leaf["path"]] = arr
     return out

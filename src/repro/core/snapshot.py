@@ -24,10 +24,11 @@ from __future__ import annotations
 import sys
 import threading
 import time
-from typing import List, Optional, Sequence, Tuple
+from typing import List, Optional, Tuple
 
 from repro.core.blocks import BlockRef, BlockState, BlockTable
 from repro.core.metrics import SnapshotMetrics
+from repro.core.persist import PersistPipeline
 from repro.core.provider import PyTreeProvider
 from repro.core.sinks import Sink
 from repro.core.staging import HostStaging, StagingBackend, make_staging
@@ -213,54 +214,18 @@ class SnapshotHandle:
         return not self.aborted
 
 
-def _persister(snap: SnapshotHandle, sink: Sink, order: Sequence[BlockRef]) -> None:
-    """The child's IO loop: ensure each block is staged, then write it out.
-
-    In CoW mode this thread *is* what keeps the snapshot window open: a
-    block that the parent never writes is staged here (ODF's child reading
-    the shared table) right before persisting.
-
-    Incremental epochs: blocks marked clean at fork time (``snap.inherited``)
-    are never staged nor written — the sink's delta manifest records that
-    they are inherited from the base epoch.
-    """
-    try:
-        sink.set_delta(snap.inherited)
-        sink.open(snap.table.leaf_handles)
-        for ref in order:
-            if snap.aborted:
-                sink.abort()
-                return
-            if ref.key in snap.inherited:
-                continue
-            st = snap.table.state(ref.key)
-            while st == BlockState.UNCOPIED or st == BlockState.COPYING:
-                if st == BlockState.UNCOPIED and snap.table.try_acquire(ref.key):
-                    snap.stage_block(ref)
-                    snap.table.mark(ref.key, BlockState.COPIED)
-                    snap.metrics.copied_blocks_child += 1  # child's shared read
-                    st = BlockState.COPIED
-                    break
-                st = snap.table.wait_not_copying(ref.key)
-            if snap.aborted:
-                sink.abort()
-                return
-            sink.write_block(ref, snap.staged_block(ref))
-            snap.table.mark(ref.key, BlockState.PERSISTED)
-        sink.close()
-        snap.metrics.persist_s = time.perf_counter() - snap.t0
-    except BaseException as exc:
-        snap.abort(exc)
-        sink.abort()
-    finally:
-        snap.persist_done.set()
-
-
 class Snapshotter:
     """Factory + registry for snapshot epochs over one engine state.
 
     ``block_bytes`` is the copy granularity ("512 PTEs"); ``copier_threads``
     maps to the paper's child-side kernel threads (§5.1, Figs 14/15).
+
+    The persister ("the child writing the RDB file") lives in
+    :mod:`repro.core.persist`: every sink-backed epoch is submitted to a
+    :class:`PersistPipeline`. ``persist_workers=1`` (the default) is the
+    paper's single sequential writer; more workers write blocks out of
+    order in parallel (the sharded coordinator shares one pipeline across
+    shards by assigning :attr:`persist_pipeline`).
     """
 
     mode = "base"
@@ -274,6 +239,8 @@ class Snapshotter:
         copier_duty: float = 1.0,
         backend: str = "host",
         retain_images: bool = False,
+        persist_workers: int = 1,
+        persist_queue_depth: int = 64,
     ):
         """``copier_duty`` < 1 throttles child-side copier threads to that
         fraction of a core. On a single-core host (this container) the
@@ -294,10 +261,20 @@ class Snapshotter:
         self.copier_duty = float(copier_duty)
         self.backend = backend
         self.retain_images = bool(retain_images)
+        self.persist_workers = max(1, int(persist_workers))
+        self.persist_queue_depth = int(persist_queue_depth)
+        self.persist_pipeline: Optional[PersistPipeline] = None  # lazy/injected
         self._last_snap: Optional[SnapshotHandle] = None
         self._active: List[SnapshotHandle] = []
         self._active_lock = threading.Lock()
         self.forks = 0
+
+    def _pipeline(self) -> PersistPipeline:
+        if self.persist_pipeline is None:
+            self.persist_pipeline = PersistPipeline(
+                workers=self.persist_workers, queue_depth=self.persist_queue_depth
+            )
+        return self.persist_pipeline
 
     # -- engine-facing ---------------------------------------------------
     def before_write(self, leaf_id: int, rows=None) -> float:
@@ -426,20 +403,27 @@ class Snapshotter:
                 snap.inherited.add(ref.key)
             snap.metrics.inherited_blocks += len(clean_ids)
 
-    # -- implemented by subclasses ----------------------------------------
-    def fork(
+    # -- two-phase fork ----------------------------------------------------
+    def fork_prepare(
         self,
-        sink: Optional[Sink] = None,
         incremental: bool = False,
         base: Optional[SnapshotHandle] = None,
+    ) -> SnapshotHandle:
+        """Phase 1 ("stamp T0"): serialize the previous epoch, build the
+        write-protected block table, register the epoch. After this call
+        every parent write routes through proactive synchronization, but no
+        copier or persister has started — the sharded coordinator prepares
+        ALL shards before committing any, so the union of shard images is a
+        single point-in-time cut (DESIGN.md §6)."""
+        snap = self._begin(time.perf_counter(), incremental, base)
+        self._finish_fork(snap)
+        return snap
+
+    def fork_commit(
+        self, snap: SnapshotHandle, sink: Optional[Sink] = None
     ) -> SnapshotHandle:  # pragma: no cover
+        """Phase 2: mode-specific copy/copier launch + persist start."""
         raise NotImplementedError
-
-
-class BlockingSnapshotter(Snapshotter):
-    """The default ``fork``: parent copies the whole "page table" inline."""
-
-    mode = "blocking"
 
     def fork(
         self,
@@ -447,8 +431,17 @@ class BlockingSnapshotter(Snapshotter):
         incremental: bool = False,
         base: Optional[SnapshotHandle] = None,
     ) -> SnapshotHandle:
-        t0 = time.perf_counter()
-        snap = self._begin(t0, incremental, base)
+        return self.fork_commit(self.fork_prepare(incremental, base), sink)
+
+
+class BlockingSnapshotter(Snapshotter):
+    """The default ``fork``: parent copies the whole "page table" inline."""
+
+    mode = "blocking"
+
+    def fork_commit(
+        self, snap: SnapshotHandle, sink: Optional[Sink] = None
+    ) -> SnapshotHandle:
         table = snap.table
         for ref in table.blocks:  # synchronous level-by-level copy (§3.1)
             if table.try_acquire(ref.key):
@@ -460,9 +453,8 @@ class BlockingSnapshotter(Snapshotter):
                 table.mark(ref.key, BlockState.COPIED)
                 snap.metrics.copied_blocks_child += 1
         snap.copy_done.set()
-        snap.metrics.fork_s = time.perf_counter() - t0
+        snap.metrics.fork_s = time.perf_counter() - snap.fork_start
         snap.metrics.copy_window_s = snap.metrics.fork_s
-        self._finish_fork(snap)
         self._start_persist(snap, sink)
         return snap
 
@@ -471,9 +463,7 @@ class BlockingSnapshotter(Snapshotter):
             snap.persist_done.set()
             snap.metrics.persist_s = snap.metrics.fork_s
             return
-        threading.Thread(
-            target=_persister, args=(snap, sink, snap.table.blocks), daemon=True
-        ).start()
+        self._pipeline().submit(snap, sink)
 
 
 class CowSnapshotter(Snapshotter):
@@ -482,21 +472,13 @@ class CowSnapshotter(Snapshotter):
 
     mode = "cow"
 
-    def fork(
-        self,
-        sink: Optional[Sink] = None,
-        incremental: bool = False,
-        base: Optional[SnapshotHandle] = None,
+    def fork_commit(
+        self, snap: SnapshotHandle, sink: Optional[Sink] = None
     ) -> SnapshotHandle:
-        t0 = time.perf_counter()
-        snap = self._begin(t0, incremental, base)
         snap.copy_done.set()  # no child-side table copy at all
-        snap.metrics.fork_s = time.perf_counter() - t0
-        self._finish_fork(snap)
+        snap.metrics.fork_s = time.perf_counter() - snap.fork_start
         if sink is not None:
-            threading.Thread(
-                target=_persister, args=(snap, sink, snap.table.blocks), daemon=True
-            ).start()
+            self._pipeline().submit(snap, sink)
         # with sink=None the CoW window stays open until snap.finish()
         return snap
 
@@ -507,20 +489,14 @@ class AsyncForkSnapshotter(Snapshotter):
 
     mode = "asyncfork"
 
-    def fork(
-        self,
-        sink: Optional[Sink] = None,
-        incremental: bool = False,
-        base: Optional[SnapshotHandle] = None,
+    def fork_commit(
+        self, snap: SnapshotHandle, sink: Optional[Sink] = None
     ) -> SnapshotHandle:
-        t0 = time.perf_counter()
         # Parent copies PGD/PUD (tree metadata) and write-protects PMDs
-        # (flag init) — this is ALL the parent does inside fork(); an
-        # incremental fork additionally runs the device-side dirty scan.
-        snap = self._begin(t0, incremental, base)
+        # (flag init) in fork_prepare — that is ALL the parent does inside
+        # fork(); an incremental fork additionally ran the dirty scan there.
         table = snap.table
-        self._finish_fork(snap)
-        snap.metrics.fork_s = time.perf_counter() - t0
+        snap.metrics.fork_s = time.perf_counter() - snap.fork_start
 
         # cond_resched() analogue at the interpreter level: don't let a
         # copier hold the GIL for the default 5 ms while the parent serves.
@@ -585,9 +561,7 @@ class AsyncForkSnapshotter(Snapshotter):
                 snap.persist_done.set()
             threading.Thread(target=_mark_persisted, daemon=True).start()
         else:
-            threading.Thread(
-                target=_persister, args=(snap, sink, snap.table.blocks), daemon=True
-            ).start()
+            self._pipeline().submit(snap, sink)
         return snap
 
 

@@ -1,5 +1,12 @@
-from repro.kvstore.store import KVStore
+from repro.kvstore.store import KVStore, ShardedKVStore
 from repro.kvstore.workload import Workload, QueryEvent
 from repro.kvstore.engine import KVEngine, EngineReport
 
-__all__ = ["KVStore", "Workload", "QueryEvent", "KVEngine", "EngineReport"]
+__all__ = [
+    "KVStore",
+    "ShardedKVStore",
+    "Workload",
+    "QueryEvent",
+    "KVEngine",
+    "EngineReport",
+]

@@ -11,14 +11,17 @@ redis-benchmark's integer key space does.
 """
 from __future__ import annotations
 
+import contextlib
 from functools import partial
-from typing import Callable, Optional
+from typing import Callable, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.provider import PyTreeProvider
+
+_NO_GATE = contextlib.nullcontext()
 
 
 @partial(jax.jit, donate_argnums=(0,))
@@ -74,22 +77,32 @@ class KVStore:
         self,
         rows: np.ndarray,
         vals: np.ndarray,
-        before_write: Optional[Callable[[int], None]] = None,
+        before_write: Optional[Callable[[int, np.ndarray], None]] = None,
+        gate=None,
     ) -> None:
-        """Donated scatter write; ``before_write(leaf_id)`` is the proactive
-        synchronization hook invoked before each touched block dies."""
+        """Donated scatter write; ``before_write(leaf_id, local_rows)`` is
+        the proactive synchronization hook invoked before each touched
+        block dies. The hook receives the leaf-local row indices so a
+        multi-block leaf syncs only the blocks the write will actually kill
+        (row→block-precise, DESIGN.md §2) instead of the whole leaf.
+
+        ``gate`` (a lock/context manager) is held across sync → donated
+        commit per block, so a concurrent snapshot fork barrier can never
+        land between a write's proactive sync and its buffer swap."""
         vals = np.asarray(vals)
         rows = np.asarray(rows)
         bids = rows // self.block_rows
         for b in np.unique(bids):
             mask = bids == b
-            if before_write is not None:
-                before_write(int(b))  # sync THIS block in all active snapshots
-            old = self.provider.leaf(int(b))
-            new = _scatter_set(old, jnp.asarray(rows[mask] - b * self.block_rows),
-                               jnp.asarray(vals[mask]))
-            new.block_until_ready()
-            self.provider.update_leaf(int(b), new)  # old was donated by XLA
+            local = rows[mask] - b * self.block_rows
+            with gate if gate is not None else _NO_GATE:
+                if before_write is not None:
+                    # sync THIS block's touched rows in all active snapshots
+                    before_write(int(b), local)
+                old = self.provider.leaf(int(b))
+                new = _scatter_set(old, jnp.asarray(local), jnp.asarray(vals[mask]))
+                new.block_until_ready()
+                self.provider.update_leaf(int(b), new)  # old was donated by XLA
 
     def get(self, rows: np.ndarray) -> np.ndarray:
         outs = []
@@ -109,3 +122,82 @@ class KVStore:
         vals = np.zeros((batch, self.row_width), np.float32)
         self.set(rows, vals)
         self.get(rows)
+
+
+class ShardedKVStore:
+    """Range-partitioned union of N independent :class:`KVStore` shards.
+
+    The cluster analogue of the paper's single instance: shard k owns rows
+    ``[k*shard_capacity, (k+1)*shard_capacity)``, each with its own blocked
+    value table and provider, so the snapshot coordinator can give every
+    shard its own block table, copiers, and persist stream. Routing is a
+    contiguous range split (redis-cluster's hash slots collapse to ranges
+    under the integer key space redis-benchmark uses).
+
+    ``before_write`` hooks gain a leading ``shard_id``:
+    ``before_write(shard_id, leaf_id, local_rows)``.
+    """
+
+    def __init__(
+        self,
+        capacity: int,
+        row_width: int = 256,
+        block_rows: int = 1024,
+        seed: int = 0,
+        shards: int = 2,
+    ):
+        self.n_shards = max(1, int(shards))
+        per = -(-int(capacity) // self.n_shards)
+        self.shards: List[KVStore] = [
+            KVStore(per, row_width=row_width, block_rows=block_rows, seed=seed + k)
+            for k in range(self.n_shards)
+        ]
+        self.shard_capacity = self.shards[0].capacity
+        self.capacity = self.shard_capacity * self.n_shards
+        self.row_width = int(row_width)
+        self.block_rows = int(block_rows)
+
+    @property
+    def block_nbytes(self) -> int:
+        return self.shards[0].block_nbytes
+
+    @property
+    def nbytes(self) -> int:
+        return sum(s.nbytes for s in self.shards)
+
+    @property
+    def providers(self):
+        return [s.provider for s in self.shards]
+
+    def _route(self, rows: np.ndarray):
+        rows = np.asarray(rows)
+        sids = rows // self.shard_capacity
+        for k in np.unique(sids):
+            yield int(k), rows[sids == k] - k * self.shard_capacity
+
+    def set(self, rows, vals, before_write=None, gate=None) -> None:
+        vals = np.asarray(vals)
+        rows = np.asarray(rows)
+        sids = rows // self.shard_capacity
+        for k in np.unique(sids):
+            mask = sids == k
+            hook = None
+            if before_write is not None:
+                hook = (lambda leaf_id, lrows, _k=int(k):
+                        before_write(_k, leaf_id, lrows))
+            self.shards[int(k)].set(
+                rows[mask] - int(k) * self.shard_capacity, vals[mask],
+                before_write=hook, gate=gate,
+            )
+
+    def get(self, rows) -> np.ndarray:
+        outs = [self.shards[k].get(local) for k, local in self._route(rows)]
+        return (np.concatenate(outs) if outs
+                else np.empty((0, self.row_width), np.float32))
+
+    def read_all(self) -> np.ndarray:
+        return np.concatenate([s.read_all() for s in self.shards])
+
+    def warmup(self, batch: int = 4) -> None:
+        for s in self.shards:
+            s.warmup(batch)

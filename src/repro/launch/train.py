@@ -34,7 +34,8 @@ def main() -> None:
     ap.add_argument("--ckpt-mode", default="asyncfork",
                     choices=["blocking", "asyncfork"])
     ap.add_argument("--ckpt-every", type=int, default=0)
-    ap.add_argument("--ckpt-dir", default="results/ckpts")
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="checkpoint dir (default: outside the repo tree, see repro.checkpoint.default_checkpoint_dir)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)

@@ -93,6 +93,62 @@ def test_every_block_copied_exactly_once(mode, block_bytes):
         assert m.copied_blocks_parent + m.copied_blocks_child == snap.table.n_blocks
 
 
+@st.composite
+def sharded_script(draw):
+    """A random cross-shard run: (shard, rows, value) updates and a fork
+    position splitting them into pre-/post-barrier halves."""
+    n_shards = draw(st.integers(2, 4))
+    n_updates = draw(st.integers(0, 10))
+    updates = []
+    for _ in range(n_updates):
+        shard = draw(st.integers(0, n_shards - 1))
+        k = draw(st.integers(1, 4))
+        rows = draw(st.lists(st.integers(0, 63), min_size=k, max_size=k,
+                             unique=True))
+        val = draw(st.floats(-100, 100, allow_nan=False, width=32))
+        updates.append((shard, rows, val))
+    fork_at = draw(st.integers(0, n_updates))
+    return n_shards, updates, fork_at
+
+
+@settings(max_examples=25, deadline=None)
+@given(script=sharded_script(), block_bytes=st.sampled_from([512, 2048]))
+def test_cross_shard_barrier_is_point_in_time(script, block_bytes):
+    """The union of shard images equals the state at the fork barrier for
+    ANY interleaving of writes across shards (DESIGN.md §6)."""
+    from repro.core import ShardedSnapshotCoordinator
+
+    n_shards, updates, fork_at = script
+    provs = [
+        PyTreeProvider({
+            "kv": jnp.arange(64 * 8, dtype=jnp.float32).reshape(64, 8)
+            + 1000.0 * k
+        })
+        for k in range(n_shards)
+    ]
+    coord = ShardedSnapshotCoordinator(
+        provs, mode="asyncfork", block_bytes=block_bytes, copier_threads=2
+    )
+
+    def apply(shard, rows, val):
+        with coord.write_gate:
+            coord.before_write(shard, 0, rows)
+            old = provs[shard].leaf(0)
+            provs[shard].update_leaf(
+                0, old.at[np.asarray(rows)].set(val), delete_old=True
+            )
+
+    for shard, rows, val in updates[:fork_at]:
+        apply(shard, rows, val)
+    expected = [np.asarray(p.leaf(0)).copy() for p in provs]
+    snap = coord.bgsave()
+    for shard, rows, val in updates[fork_at:]:
+        apply(shard, rows, val)
+    trees = snap.to_trees()
+    for k in range(n_shards):
+        np.testing.assert_array_equal(np.asarray(trees[k]["kv"]), expected[k])
+
+
 @settings(max_examples=10, deadline=None)
 @given(st.data())
 def test_metrics_out_of_service_bounded_by_wall_time(data):

@@ -23,15 +23,17 @@ def test_set_donates_only_touched_block():
     assert store.provider.leaf(3) is untouched_before  # other blocks alive
 
 
-def test_before_write_hook_called_per_block():
+def test_before_write_hook_called_per_block_with_rows():
+    """The hook gets (leaf_id, leaf-local rows) so multi-block leaves sync
+    row→block-precise instead of whole-leaf (DESIGN §2)."""
     store = KVStore(capacity=1024, block_rows=256, row_width=8)
     seen = []
     store.set(
         np.array([0, 256, 700]),
         np.zeros((3, 8), np.float32),
-        before_write=seen.append,
+        before_write=lambda leaf_id, rows: seen.append((leaf_id, rows.tolist())),
     )
-    assert seen == [0, 1, 2]
+    assert seen == [(0, [0]), (1, [0]), (2, [188])]
 
 
 def test_capacity_rounds_to_block_multiple():
