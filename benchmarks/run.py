@@ -7,9 +7,16 @@ Instance sizes are scaled to this CPU container (32–256 MiB vs the paper's
 1–64 GiB); the claims under test are the paper's *shapes*: linear fork-cost
 growth, interruption counts, out-of-service time, and the DEF > ODF >
 Async-fork latency ordering on snapshot queries.
+
+Usage: ``python -m benchmarks.run [cell ...] [--full] [--json PATH]``.
+Positional names select individual cells (e.g. ``persist_path``); with
+none, the whole suite runs. ``--json`` additionally writes the collected
+rows as a JSON trajectory artifact (CI uploads ``BENCH_3.json`` so future
+PRs have a perf baseline).
 """
 from __future__ import annotations
 
+import json
 import sys
 
 import numpy as np
@@ -20,9 +27,13 @@ SIZES_MB = [32, 64, 128, 256]
 MODES = ["blocking", "cow", "asyncfork"]
 FAST = "--full" not in sys.argv
 
+_ROWS: list = []
+
 
 def _row(name: str, us: float, derived: str) -> None:
     print(f"{name},{us:.1f},{derived}")
+    _ROWS.append({"name": name, "us_per_call": round(us, 1),
+                  "derived": derived})
 
 
 def fig3_fork_time_vs_size():
@@ -303,22 +314,136 @@ def shard_scaling():
              f"min_tput={r['min_tput_qps']:.0f}")
 
 
+def persist_path():
+    """New cell: the zero-copy persist/restore hot path.
+
+    (a) Sink write bandwidth, coalesced runs vs per-block writes: a fully
+    staged (blocking) snapshot persists through pipelines with
+    ``run_blocks=1`` (the seed's one-syscall-per-block behavior) vs
+    coalesced runs; ``sink_write_s`` isolates the IO interval, so the row
+    is pure sink bandwidth. (b) Restore wall-clock at 1/2/4 shards,
+    sequential (``workers=1``) vs the parallel RestorePool.
+    """
+    import shutil
+    import tempfile
+    import time
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import (
+        BlockingSnapshotter,
+        FileSink,
+        PersistPipeline,
+        PyTreeProvider,
+        ShardedSnapshotCoordinator,
+        read_file_snapshot,
+    )
+
+    mb = 32 if FAST else 128
+    cols = 256
+    rows = mb * (1 << 20) // (cols * 4)
+    # small blocks make per-unit overhead visible — the point of the cell
+    block_bytes = 32 << 10
+    bw = {}
+    for run_blocks, tag in ((1, "per_block"), (64, "runs")):
+        tmp = tempfile.mkdtemp(prefix="persist_path_")
+        try:
+            state = {"kv": jnp.arange(rows * cols, dtype=jnp.float32)
+                     .reshape(rows, cols)}
+            jax.block_until_ready(state["kv"])
+            prov = PyTreeProvider(state)
+            snapper = BlockingSnapshotter(prov, block_bytes=block_bytes)
+            snapper.persist_pipeline = PersistPipeline(
+                workers=2, run_blocks=run_blocks
+            )
+            snap = snapper.fork(FileSink(f"{tmp}/snap"))
+            snap.wait_persisted(600)
+            io_s = snap.metrics.sink_write_s
+            bw[tag] = mb / max(1e-9, io_s)
+            _row(f"persist_path/write/{tag}", io_s * 1e6,
+                 f"mb_per_s={bw[tag]:.0f};run_blocks={run_blocks};"
+                 f"blocks={snap.table.n_blocks}")
+        finally:
+            shutil.rmtree(tmp, ignore_errors=True)
+    _row("persist_path/write_speedup", 0.0,
+         f"runs_vs_per_block={bw['runs'] / max(1e-9, bw['per_block']):.2f}x")
+
+    leaves_per_shard = 8
+    for shards in (1, 2, 4):
+        tmp = tempfile.mkdtemp(prefix="restore_path_")
+        try:
+            leaf_rows = rows // (shards * leaves_per_shard)
+            provs = [
+                PyTreeProvider({
+                    f"l{i}": jnp.zeros((leaf_rows, cols), jnp.float32)
+                    for i in range(leaves_per_shard)
+                })
+                for _ in range(shards)
+            ]
+            coord = ShardedSnapshotCoordinator(
+                provs, mode="blocking", block_bytes=1 << 20
+            )
+            coord.bgsave_to_dir(f"{tmp}/snap").wait_persisted(600)
+
+            def timed(workers):
+                t0 = time.perf_counter()
+                read_file_snapshot(f"{tmp}/snap", workers=workers)
+                return time.perf_counter() - t0
+
+            timed(2)  # warm the page cache off-clock
+            times = {
+                tag: min(timed(workers) for _ in range(5))
+                for workers, tag in ((1, "seq"), (4, "pool"))
+            }
+            _row(f"persist_path/restore/{shards}shards",
+                 times["pool"] * 1e6,
+                 f"seq_us={times['seq']*1e6:.0f};"
+                 f"speedup={times['seq'] / max(1e-9, times['pool']):.2f}x")
+        finally:
+            shutil.rmtree(tmp, ignore_errors=True)
+
+
+CELLS = {
+    "fig3_fork_time_vs_size": fig3_fork_time_vs_size,
+    "fig22_fork_call_duration": fig22_fork_call_duration,
+    "fig4_5_default_fork_latency": fig4_5_default_fork_latency,
+    "fig9_10_odf_vs_asyncfork": fig9_10_odf_vs_asyncfork,
+    "fig11_20_interruptions": fig11_20_interruptions,
+    "fig12_read_write_patterns": fig12_read_write_patterns,
+    "fig13_clients": fig13_clients,
+    "fig14_15_copier_threads": fig14_15_copier_threads,
+    "fig17_19_throughput": fig17_19_throughput,
+    "train_checkpoint_stall": train_checkpoint_stall,
+    "kernel_snapcopy_bandwidth": kernel_snapcopy_bandwidth,
+    "staging_backend_bandwidth": staging_backend_bandwidth,
+    "incremental_snapshot_window": incremental_snapshot_window,
+    "shard_scaling": shard_scaling,
+    "persist_path": persist_path,
+}
+
+
 def main() -> None:
+    json_path = None
+    names = []
+    argv = iter(sys.argv[1:])
+    for a in argv:
+        if a == "--json":
+            json_path = next(argv, None)
+        elif a.startswith("--json="):
+            json_path = a.split("=", 1)[1]
+        elif not a.startswith("-"):
+            names.append(a)
+    unknown = [n for n in names if n not in CELLS]
+    if unknown:
+        raise SystemExit(f"unknown cells {unknown}; pick from {sorted(CELLS)}")
     print("name,us_per_call,derived")
-    fig3_fork_time_vs_size()
-    fig22_fork_call_duration()
-    fig4_5_default_fork_latency()
-    fig9_10_odf_vs_asyncfork()
-    fig11_20_interruptions()
-    fig12_read_write_patterns()
-    fig13_clients()
-    fig14_15_copier_threads()
-    fig17_19_throughput()
-    train_checkpoint_stall()
-    kernel_snapcopy_bandwidth()
-    staging_backend_bandwidth()
-    incremental_snapshot_window()
-    shard_scaling()
+    for name, fn in CELLS.items():
+        if not names or name in names:
+            fn()
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump({"rows": _ROWS}, f, indent=1)
 
 
 if __name__ == "__main__":

@@ -256,17 +256,22 @@ class _Tombstone:
 _TOMBSTONE = _Tombstone()
 
 
-def restore_checkpoint(directory: str) -> Tuple[Dict, AdamWState]:
+def restore_checkpoint(
+    directory: str, workers: Optional[int] = None
+) -> Tuple[Dict, AdamWState]:
     """Read a checkpoint back into host numpy trees.
 
     Handles flat, delta-chained, and composite (sharded) snapshot
     directories alike — ``read_file_snapshot`` resolves shard manifests
-    and per-shard parent chains transparently.
+    and per-shard parent chains transparently, restoring shards and
+    leaves in parallel on a :class:`~repro.core.sinks.RestorePool`
+    (``workers`` sizes it; default one per core, ``workers=1`` is the
+    sequential path).
 
     Elastic restart: callers re-``device_put`` these with whatever mesh
     they now have — nothing in the file format encodes the old topology.
     """
-    flat = read_file_snapshot(directory)
+    flat = read_file_snapshot(directory, workers=workers)
     params: Dict = {}
     opt_m: Dict = {}
     opt_v: Dict = {}

@@ -3,6 +3,7 @@
 from repro.core.blocks import (
     BlockGeometry,
     BlockRef,
+    BlockRun,
     BlockState,
     BlockTable,
     LeafHandle,
@@ -20,6 +21,7 @@ from repro.core.sinks import (
     FileSink,
     MemorySink,
     NullSink,
+    RestorePool,
     Sink,
     read_file_snapshot,
     write_composite_manifest,
@@ -56,6 +58,7 @@ __all__ = [
     "STAGING_BACKENDS",
     "make_staging",
     "BlockRef",
+    "BlockRun",
     "BlockState",
     "BlockTable",
     "LeafHandle",
@@ -67,6 +70,7 @@ __all__ = [
     "NullSink",
     "MemorySink",
     "FileSink",
+    "RestorePool",
     "read_file_snapshot",
     "Snapshotter",
     "SnapshotHandle",

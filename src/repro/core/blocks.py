@@ -20,7 +20,7 @@ from __future__ import annotations
 import dataclasses
 import enum
 import threading
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -51,6 +51,41 @@ class BlockRef:
     @property
     def key(self):
         return (self.leaf_id, self.block_id)
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockRun:
+    """A maximal contiguous run of same-leaf copy blocks.
+
+    Runs are the persist hot path's transfer unit: adjacent blocks of one
+    leaf occupy adjacent file offsets (``FileSink``'s prefix-sum layout)
+    and adjacent rows of the leaf's blocked image, so one run moves with
+    one gathered ``pwritev`` and (device staging) one batched D2H
+    transfer instead of ``len(refs)`` single-block operations.
+    """
+
+    leaf_id: int
+    start_block: int
+    refs: Tuple[BlockRef, ...]
+    state: Optional["BlockState"] = None  # shared state at coalesce time
+
+    @property
+    def stop_block(self) -> int:
+        return self.start_block + len(self.refs)
+
+    @property
+    def nbytes(self) -> int:
+        return sum(r.nbytes for r in self.refs)
+
+    @property
+    def start(self) -> int:
+        """First row covered (axis 0 of the leaf)."""
+        return self.refs[0].start
+
+    @property
+    def stop(self) -> int:
+        """One past the last row covered."""
+        return self.refs[-1].stop
 
 
 class TwoWayPointer:
@@ -146,7 +181,6 @@ class BlockTable:
         self.block_bytes = int(block_bytes)
         self.leaf_handles: List[LeafHandle] = []
         self.blocks: List[BlockRef] = []
-        self._flags: Dict[tuple, BlockState] = {}
         self._mu = threading.Lock()
         self._cv = threading.Condition(self._mu)
         self.total_bytes = 0
@@ -176,61 +210,154 @@ class BlockTable:
             )
             self.leaf_handles.append(handle)
             self.blocks.extend(refs)
-            for r in refs:
-                self._flags[r.key] = BlockState.UNCOPIED
+
+        # Single vectorized state vector behind the lock/CV: leaf_id's
+        # blocks occupy the contiguous index range
+        # [_leaf_base[leaf_id], _leaf_base[leaf_id + 1]), so a whole-leaf
+        # flag mirror is one array copy and run transitions are one slice
+        # assignment instead of a Python loop over a dict.
+        self._leaf_base = np.cumsum(
+            [0] + [len(h.blocks) for h in self.leaf_handles]
+        )
+        self._states = np.full(
+            (len(self.blocks),), int(BlockState.UNCOPIED), dtype=np.int32
+        )
+
+    def _idx(self, key) -> int:
+        return int(self._leaf_base[key[0]]) + key[1]
 
     # ------------------------------------------------------------------ #
     # flag machine                                                       #
     # ------------------------------------------------------------------ #
     def state(self, key) -> BlockState:
         with self._mu:
-            return self._flags[key]
+            return BlockState(int(self._states[self._idx(key)]))
 
     def try_acquire(self, key) -> bool:
         """UNCOPIED -> COPYING transition (the trylock). Returns True if won."""
+        i = self._idx(key)
         with self._mu:
-            if self._flags[key] == BlockState.UNCOPIED:
-                self._flags[key] = BlockState.COPYING
+            if self._states[i] == int(BlockState.UNCOPIED):
+                self._states[i] = int(BlockState.COPYING)
                 return True
             return False
 
     def mark(self, key, state: BlockState, *, count_done: bool = True) -> None:
         leaf_id = key[0]
+        i = self._idx(key)
         with self._cv:
-            prev = self._flags[key]
-            self._flags[key] = state
+            prev = int(self._states[i])
+            self._states[i] = int(state)
             self._cv.notify_all()
         if (
             count_done
             and state in (BlockState.COPIED, BlockState.PERSISTED)
-            and prev in (BlockState.COPYING, BlockState.UNCOPIED)
+            and prev in (int(BlockState.COPYING), int(BlockState.UNCOPIED))
         ):
             self.leaf_handles[leaf_id].twoway.block_done()
 
+    def mark_run(
+        self, run: BlockRun, state: BlockState, *, count_done: bool = True
+    ) -> None:
+        """One-slice :meth:`mark` of a whole run (single lock round)."""
+        base = int(self._leaf_base[run.leaf_id])
+        lo, hi = base + run.start_block, base + run.stop_block
+        with self._cv:
+            prev = self._states[lo:hi].copy()
+            self._states[lo:hi] = int(state)
+            self._cv.notify_all()
+        if count_done and state in (BlockState.COPIED, BlockState.PERSISTED):
+            n = int(
+                np.isin(
+                    prev, (int(BlockState.COPYING), int(BlockState.UNCOPIED))
+                ).sum()
+            )
+            twoway = self.leaf_handles[run.leaf_id].twoway
+            for _ in range(n):
+                twoway.block_done()
+
     def wait_not_copying(self, key) -> BlockState:
         """Wait out a concurrent copier holding the block lock."""
+        i = self._idx(key)
         with self._cv:
-            while self._flags[key] == BlockState.COPYING:
+            while self._states[i] == int(BlockState.COPYING):
                 self._cv.wait(timeout=1.0)
-            return self._flags[key]
+            return BlockState(int(self._states[i]))
 
     def rollback_leaf(self, leaf_id: int) -> int:
         """§4.4: make every non-final block of the leaf writable again."""
-        n = 0
+        base = int(self._leaf_base[leaf_id])
+        hi = base + len(self.leaf_handles[leaf_id].blocks)
         with self._cv:
-            for ref in self.leaf_handles[leaf_id].blocks:
-                if self._flags[ref.key] in (BlockState.UNCOPIED, BlockState.COPYING):
-                    self._flags[ref.key] = BlockState.PERSISTED  # drop protection
-                    n += 1
+            sl = self._states[base:hi]
+            live = np.isin(
+                sl, (int(BlockState.UNCOPIED), int(BlockState.COPYING))
+            )
+            sl[live] = int(BlockState.PERSISTED)  # drop protection
             self._cv.notify_all()
-        return n
+            return int(live.sum())
+
+    def leaf_states(self, leaf_id: int) -> np.ndarray:
+        """Consistent int32 copy of one leaf's block states — the kernel
+        flag mirror is this one array copy (no per-block lock rounds)."""
+        base = int(self._leaf_base[leaf_id])
+        hi = base + len(self.leaf_handles[leaf_id].blocks)
+        with self._mu:
+            return self._states[base:hi].copy()
+
+    def coalesce_runs(
+        self,
+        leaf_id: int,
+        *,
+        exclude=frozenset(),
+        max_blocks: Optional[int] = None,
+        states: Optional[np.ndarray] = None,
+    ) -> List[BlockRun]:
+        """Merge adjacent same-state blocks of a leaf into :class:`BlockRun`s.
+
+        ``exclude`` drops blocks (by key) entirely — a persist producer
+        excludes inherited blocks so runs never straddle a delta hole.
+        ``max_blocks`` caps run length (sinks gather one iovec per block).
+        ``states`` reuses a previously taken :meth:`leaf_states` mirror;
+        states move concurrently, so runs are a grouping heuristic — every
+        consumer still takes each block through its own flag transitions.
+        """
+        handle = self.leaf_handles[leaf_id]
+        if not handle.blocks:
+            return []
+        if states is None:
+            states = self.leaf_states(leaf_id)
+        runs: List[BlockRun] = []
+        cur: List[BlockRef] = []
+        cur_state = None
+
+        def flush():
+            if cur:
+                runs.append(
+                    BlockRun(leaf_id, cur[0].block_id, tuple(cur),
+                             BlockState(int(cur_state)))
+                )
+
+        for ref in handle.blocks:
+            if ref.key in exclude:
+                flush()
+                cur, cur_state = [], None
+                continue
+            st = states[ref.block_id]
+            if cur and (
+                st != cur_state or (max_blocks and len(cur) >= max_blocks)
+            ):
+                flush()
+                cur = []
+            cur.append(ref)
+            cur_state = st
+        flush()
+        return runs
 
     def counts(self) -> Dict[str, int]:
         with self._mu:
-            out: Dict[str, int] = {s.name: 0 for s in BlockState}
-            for v in self._flags.values():
-                out[v.name] += 1
-            return out
+            hist = np.bincount(self._states, minlength=len(BlockState))
+        return {s.name: int(hist[int(s)]) for s in BlockState}
 
     @property
     def n_blocks(self) -> int:

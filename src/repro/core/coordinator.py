@@ -76,6 +76,12 @@ class AggregateMetrics:
         )
 
     @property
+    def sink_write_s(self) -> float:
+        """Slowest shard's pure sink-IO interval (shards drain the shared
+        pipeline concurrently, so the max bounds the IO wall-clock)."""
+        return max((p.metrics.sink_write_s for p in self._parts), default=0.0)
+
+    @property
     def copied_blocks_child(self) -> int:
         return sum(p.metrics.copied_blocks_child for p in self._parts)
 
@@ -112,6 +118,7 @@ class AggregateMetrics:
             "fork_ms": self.fork_s * 1e3,
             "copy_window_ms": self.copy_window_s * 1e3,
             "persist_ms": self.persist_s * 1e3,
+            "sink_write_ms": self.sink_write_s * 1e3,
             "interruptions": float(self.n_interruptions),
             "out_of_service_ms": self.out_of_service_s * 1e3,
             "parent_copied_blocks": float(self.copied_blocks_parent),

@@ -22,6 +22,13 @@ class SnapshotMetrics:
     fork_s: float = 0.0               # parent time inside fork()
     copy_window_s: float = 0.0        # child's PMD/PTE copy duration (Fig 15a)
     persist_s: float = 0.0            # full snapshot window (fork -> durable)
+    sink_write_s: float = 0.0         # sink open -> last write. Pure sink IO
+                                      # when the image is fully staged at
+                                      # submit (blocking mode, the bench
+                                      # cells); in cow/asyncfork the workers'
+                                      # residual staging overlaps it, so
+                                      # bytes / sink_write_s then LOWER-bounds
+                                      # sink bandwidth
     copied_blocks_child: int = 0
     copied_blocks_parent: int = 0     # proactive syncs / CoW faults
     inherited_blocks: int = 0         # clean blocks adopted from the base epoch
@@ -66,6 +73,7 @@ class SnapshotMetrics:
             "fork_ms": self.fork_s * 1e3,
             "copy_window_ms": self.copy_window_s * 1e3,
             "persist_ms": self.persist_s * 1e3,
+            "sink_write_ms": self.sink_write_s * 1e3,
             "interruptions": float(self.n_interruptions),
             "out_of_service_ms": self.out_of_service_s * 1e3,
             "parent_copied_blocks": float(self.copied_blocks_parent),

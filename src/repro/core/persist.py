@@ -5,9 +5,18 @@ The paper's child persists the snapshot with a single sequential writer
 not reached yet, and streams it to the sink. That caps snapshot throughput
 at one disk stream per instance. This module extracts that loop into a
 :class:`PersistPipeline`: a bounded work queue feeding ``workers`` persister
-threads that write blocks **out of order** into the sink (``FileSink``'s
-pwrite-style layout makes out-of-order writes safe), with per-epoch jobs
-tracked so ``close()``/``abort()`` still fire exactly once per sink.
+threads that write **runs of contiguous blocks** out of order into the sink
+(``FileSink``'s pwrite-style layout makes out-of-order writes safe), with
+per-epoch jobs tracked so ``close()``/``abort()`` still fire exactly once
+per sink.
+
+The transfer unit is a :class:`~repro.core.blocks.BlockRun`, not a single
+block: the producer coalesces adjacent same-leaf blocks of the persist
+order (up to ``run_blocks``) so a worker stages each block through the
+normal flag machine, then moves the whole run with ONE gathered sink write
+(``write_run`` → ``pwritev``) and, for device staging, ONE batched D2H
+transfer (``staged_run``) — instead of one syscall and one transfer per
+block. ``run_blocks=1`` degenerates to the seed's per-block behavior.
 
 A pipeline with ``workers=1`` behaves exactly like the paper's single
 writer (same staging, same pacing against a slow sink); the sharded
@@ -20,39 +29,68 @@ checkpoint save) do not leak threads.
 """
 from __future__ import annotations
 
+import atexit
 import queue
 import threading
 import time
+import weakref
 from typing import List, Optional, Sequence
 
-from repro.core.blocks import BlockRef, BlockState
+from repro.core.blocks import BlockRef, BlockRun, BlockState
+from repro.core.sinks import Sink
+
+DEFAULT_RUN_BLOCKS = 16
+
+# Live pipelines, so interpreter exit can retire their idle workers.
+# A daemon worker waking from its timed queue wait DURING interpreter
+# finalization dies via pthread_exit, which unwinds C++ frames (XLA's)
+# and lands in std::terminate — an intermittent SIGABRT after a clean
+# test run. The atexit hook runs before finalization proper, wakes every
+# idle worker with a sentinel, and joins them while it is still safe.
+_PIPELINES: "weakref.WeakSet" = weakref.WeakSet()
+
+
+@atexit.register
+def _retire_workers_at_exit() -> None:
+    for pipe in list(_PIPELINES):
+        pipe.shutdown(timeout=2.0)
 
 
 class PersistJob:
     """One epoch's persist: a (snapshot, sink) pair plus completion tracking.
 
-    ``_outstanding`` counts enqueued-but-unwritten blocks; the job finishes
+    ``_outstanding`` counts enqueued-but-unwritten runs; the job finishes
     (sink close/abort + ``persist_done``) when the producer has enqueued its
     whole order and the count drains to zero — regardless of which worker
-    wrote the last block.
+    wrote the last run.
+
+    ``persist_start`` is stamped when the sink opens: the interval from
+    there to the last write is ``metrics.sink_write_s`` — pure sink IO
+    when the image was fully staged before submit (blocking mode), sink
+    IO plus residual worker-side staging otherwise — while
+    ``metrics.persist_s`` keeps its fork→durable meaning. The seed
+    stamped only the latter, which understated sink bandwidth by folding
+    the whole copy window into the denominator.
     """
 
-    def __init__(self, snap, sink, order: Sequence[BlockRef], on_finish=None):
+    def __init__(self, snap, sink, order: Optional[Sequence[BlockRef]],
+                 on_finish=None):
         self.snap = snap
         self.sink = sink
-        self.order = list(order)
+        self.order = list(order) if order is not None else None
         self.failed = False
+        self.persist_start: Optional[float] = None
         self._on_finish = on_finish
         self._mu = threading.Lock()
         self._outstanding = 0
         self._submitted_all = False
 
     # -- accounting (producer increments, workers decrement) ---------------
-    def _block_enqueued(self) -> None:
+    def _run_enqueued(self) -> None:
         with self._mu:
             self._outstanding += 1
 
-    def _block_finished(self) -> None:
+    def _run_finished(self) -> None:
         with self._mu:
             self._outstanding -= 1
             done = self._submitted_all and self._outstanding == 0
@@ -68,7 +106,7 @@ class PersistJob:
 
     def fail(self, exc: BaseException) -> None:
         """§4.4 case 3 routed through the pipeline: abort the epoch; the
-        job's remaining blocks drain as no-ops and ``_finish`` cleans up."""
+        job's remaining runs drain as no-ops and ``_finish`` cleans up."""
         with self._mu:
             self.failed = True
         self.snap.abort(exc)
@@ -80,7 +118,10 @@ class PersistJob:
                 sink.abort()
             else:
                 sink.close()
-                snap.metrics.persist_s = time.perf_counter() - snap.t0
+                now = time.perf_counter()
+                snap.metrics.persist_s = now - snap.t0
+                if self.persist_start is not None:
+                    snap.metrics.sink_write_s = now - self.persist_start
         except BaseException as exc:
             snap.abort(exc)
             sink.abort()
@@ -94,25 +135,40 @@ class PersistPipeline:
     """Bounded work queue + persister worker pool, shared across epochs."""
 
     def __init__(self, workers: int = 1, queue_depth: int = 64,
-                 idle_timeout: float = 1.0):
+                 idle_timeout: float = 1.0,
+                 run_blocks: int = DEFAULT_RUN_BLOCKS):
         self.workers = max(1, int(workers))
         self.queue_depth = max(1, int(queue_depth))
         self.idle_timeout = float(idle_timeout)
+        self.run_blocks = max(1, int(run_blocks))
         self._q: "queue.Queue" = queue.Queue(maxsize=self.queue_depth)
         self._mu = threading.Lock()
         self._threads: List[threading.Thread] = []
         self._active_jobs = 0
+        self._stopping = False
+        _PIPELINES.add(self)
+
+    def shutdown(self, timeout: float = 2.0) -> None:
+        """Retire the worker pool (interpreter-exit path): wake every idle
+        worker with a sentinel and join. In-flight runs complete; queued
+        runs of unfinished jobs are dropped (the process is exiting)."""
+        with self._mu:
+            self._stopping = True
+            threads = list(self._threads)
+        for _ in threads:
+            try:
+                self._q.put_nowait(None)
+            except queue.Full:
+                break
+        for t in threads:
+            t.join(timeout)
 
     # ------------------------------------------------------------------ #
     def submit(self, snap, sink, order: Optional[Sequence[BlockRef]] = None) -> PersistJob:
         """Start persisting one epoch. Returns immediately; completion is
         signalled through ``snap.persist_done`` (and errors via
         ``snap.wait_persisted``), same contract as the old single persister."""
-        job = PersistJob(
-            snap, sink,
-            order if order is not None else snap.table.blocks,
-            on_finish=self._job_finished,
-        )
+        job = PersistJob(snap, sink, order, on_finish=self._job_finished)
         with self._mu:
             self._active_jobs += 1
         self._ensure_workers()
@@ -134,7 +190,15 @@ class PersistPipeline:
     # ------------------------------------------------------------------ #
     def _produce(self, job: PersistJob) -> None:
         """Open the sink, then feed the bounded queue (backpressure: a slow
-        sink throttles staging exactly like the old sequential persister)."""
+        sink throttles staging exactly like the old sequential persister).
+
+        The default (whole-table) order is coalesced leaf by leaf with
+        :meth:`BlockTable.coalesce_runs` — adjacent blocks merge into runs
+        capped at ``run_blocks``, breaking at inherited blocks and leaf
+        boundaries, so a run always maps to one contiguous sink byte
+        range. A caller-supplied custom order persists per-block (runs of
+        one), since arbitrary orders need not be contiguous.
+        """
         snap, sink = job.snap, job.sink
         try:
             sink.set_delta(snap.inherited)
@@ -143,23 +207,37 @@ class PersistPipeline:
             job.fail(exc)
             job._all_enqueued()
             return
-        for ref in job.order:
+        job.persist_start = time.perf_counter()
+
+        def _runs():
+            if job.order is not None:
+                for ref in job.order:
+                    if ref.key not in snap.inherited:
+                        yield BlockRun(ref.leaf_id, ref.block_id, (ref,))
+                return
+            for h in snap.table.leaf_handles:
+                yield from snap.table.coalesce_runs(
+                    h.leaf_id, exclude=snap.inherited,
+                    max_blocks=self.run_blocks,
+                )
+
+        for brun in _runs():
             if job.failed or snap.aborted:
                 break
-            if ref.key in snap.inherited:
-                continue
-            job._block_enqueued()
-            self._q.put((job, ref))
+            job._run_enqueued()
+            self._q.put((job, brun))
         job._all_enqueued()
 
     def _worker(self) -> None:
         me = threading.current_thread()
         while True:
             try:
-                job, ref = self._q.get(timeout=self.idle_timeout)
+                item = self._q.get(timeout=self.idle_timeout)
             except queue.Empty:
+                item = None
+            if item is None:  # idle timeout or shutdown sentinel
                 with self._mu:
-                    if self._active_jobs == 0:
+                    if self._active_jobs == 0 or self._stopping:
                         # Deregister BEFORE returning, atomically with the
                         # idle check: submit() increments _active_jobs under
                         # this same mutex, so it either sees us gone (and
@@ -170,15 +248,21 @@ class PersistPipeline:
                             self._threads.remove(me)
                         return
                 continue
-            self._persist_block(job, ref)
+            job, brun = item
+            self._persist_run(job, brun)
 
-    def _persist_block(self, job: PersistJob, ref: BlockRef) -> None:
-        """The old persister's per-block body: ensure the block is staged
-        (the child's shared-table read in CoW mode), then write it out."""
+    def _persist_run(self, job: PersistJob, brun: BlockRun) -> None:
+        """The old persister's per-block body lifted to a run: take every
+        block of the run through the normal staging flag machine (the
+        child's shared-table read in CoW mode), then move the whole run
+        with one gathered write — blocks stay individually locked during
+        staging, only the data movement is batched (DESIGN.md §7)."""
         snap, sink = job.snap, job.sink
+        table = snap.table
         try:
-            if not (job.failed or snap.aborted):
-                table = snap.table
+            for ref in brun.refs:
+                if job.failed or snap.aborted:
+                    break
                 st = table.state(ref.key)
                 while st in (BlockState.UNCOPIED, BlockState.COPYING):
                     if st == BlockState.UNCOPIED and table.try_acquire(ref.key):
@@ -188,10 +272,17 @@ class PersistPipeline:
                         st = BlockState.COPIED
                         break
                     st = table.wait_not_copying(ref.key)
-                if not (job.failed or snap.aborted):
-                    sink.write_block(ref, snap.staged_block(ref))
-                    table.mark(ref.key, BlockState.PERSISTED)
+            if not (job.failed or snap.aborted):
+                arrays = snap.staged_run(brun.refs)
+                if type(sink).write_run is Sink.write_run:
+                    # write_block-only sink: per-block writes with the
+                    # REAL refs (row geometry intact)
+                    for ref, arr in zip(brun.refs, arrays):
+                        sink.write_block(ref, arr)
+                else:
+                    sink.write_run(brun.leaf_id, brun.start_block, arrays)
+                table.mark_run(brun, BlockState.PERSISTED)
         except BaseException as exc:
             job.fail(exc)
         finally:
-            job._block_finished()
+            job._run_finished()

@@ -3,6 +3,18 @@
 The paper's child writes an RDB file; persisting 8 GB takes ~40 s (~200 MB/s
 disk). Benchmarks use ``NullSink`` with a configurable bandwidth to model
 that window without real IO; the checkpoint manager uses ``FileSink``.
+
+Hot-path contract (DESIGN.md §7): the persist pipeline hands sinks
+**runs** — ``write_run(leaf_id, start_block, arrays)`` with one array per
+block of a contiguous same-leaf run. ``FileSink`` turns a run into one
+gathered ``os.pwritev`` of zero-copy memoryviews (the seed made a full
+``tobytes()`` copy of every block and issued one ``pwrite`` per block).
+``write_block`` remains as the one-block run for compatibility.
+
+Restore mirrors persist: :class:`RestorePool` fans ``read_file_snapshot``
+out across shards and leaves (memory-mapped leaf files, delta-chain holes
+resolved per contiguous run), cutting cold-restart wall-clock for sharded
+checkpoints.
 """
 from __future__ import annotations
 
@@ -11,17 +23,34 @@ import os
 import shutil
 import threading
 import time
-from typing import Dict, List, Optional
+from concurrent.futures import ThreadPoolExecutor
+from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
 from repro.core.blocks import BlockRef, LeafHandle
 
+# pwritev gathers at most IOV_MAX (1024 on Linux) buffers per call.
+_IOV_MAX = 1024
+
+
+def _as_block_view(data) -> memoryview:
+    """Zero-copy byte view of one staged block.
+
+    ``np.asarray`` pulls a device block to host in one transfer and is a
+    no-op on host numpy views; ``ascontiguousarray`` is a no-op for the
+    contiguous axis-0 slices staging hands out. The uint8 reinterpret is
+    a view too, and it keeps extension dtypes (bfloat16 & friends, which
+    reject the buffer protocol) on the zero-copy path — no ``tobytes()``.
+    """
+    arr = np.ascontiguousarray(np.asarray(data))
+    return memoryview(arr.reshape(-1).view(np.uint8))
+
 
 class Sink:
-    """``write_block`` accepts host numpy blocks or device (jax) blocks —
-    device-staged snapshots hand sinks device arrays and the sink decides
-    when (if ever) to pull the bytes to the host."""
+    """``write_block``/``write_run`` accept host numpy blocks or device
+    (jax) blocks — device-staged snapshots hand sinks device arrays and the
+    sink decides when (if ever) to pull the bytes to the host."""
 
     inherited: frozenset = frozenset()
 
@@ -38,6 +67,17 @@ class Sink:
 
     def write_block(self, ref: BlockRef, data) -> None:  # pragma: no cover
         raise NotImplementedError
+
+    def write_run(self, leaf_id: int, start_block: int, arrays: Sequence) -> None:
+        """Write a contiguous run of blocks (``arrays[i]`` is block
+        ``start_block + i`` of ``leaf_id``). Row geometry (``ref.start``/
+        ``stop``) is unknown at this level, so there is no generic
+        fallback: the persist pipeline detects write_block-only sinks and
+        feeds them per-block with the real refs instead."""
+        raise NotImplementedError(
+            f"{type(self).__name__} implements only write_block; runs are "
+            "split into per-block writes by the persist pipeline"
+        )
 
     def close(self) -> None:
         pass
@@ -58,10 +98,14 @@ class NullSink(Sink):
         pass
 
     def write_block(self, ref, data):
+        self.write_run(ref.leaf_id, ref.block_id, [data])
+
+    def write_run(self, leaf_id, start_block, arrays):
+        nbytes = sum(int(a.nbytes) for a in arrays)
         with self._lock:
-            self.bytes_written += data.nbytes
+            self.bytes_written += nbytes
         if self.bandwidth:
-            time.sleep(data.nbytes / self.bandwidth)
+            time.sleep(nbytes / self.bandwidth)
 
 
 class MemorySink(Sink):
@@ -79,6 +123,10 @@ class MemorySink(Sink):
     def write_block(self, ref, data):
         self.blocks[ref.key] = np.array(data, copy=True)
 
+    def write_run(self, leaf_id, start_block, arrays):
+        for i, data in enumerate(arrays):
+            self.blocks[(leaf_id, start_block + i)] = np.array(data, copy=True)
+
     def close(self):
         self.closed = True
 
@@ -91,15 +139,17 @@ class FileSink(Sink):
     """One binary file per leaf + a JSON manifest (the "RDB file").
 
     Layout: ``<dir>/leaf_<id>.bin`` written at block offsets with
-    ``os.pwrite``, plus ``manifest.json`` describing paths/shapes/dtypes —
-    enough to restore without pickles. Writes carry their own offset and
-    never seek, so any number of persister workers can write blocks
-    **out of order and in parallel** into the same file (the pipeline in
-    :mod:`repro.core.persist` relies on this).
+    positioned writes, plus ``manifest.json`` describing paths/shapes/
+    dtypes — enough to restore without pickles. Writes carry their own
+    offset and never seek, so any number of persister workers can write
+    runs **out of order and in parallel** into the same file (the pipeline
+    in :mod:`repro.core.persist` relies on this).
 
-    Block offsets are precomputed once in :meth:`open` as a per-leaf
-    prefix-sum table — the seed recomputed ``sum(nbytes)`` per call, which
-    made a leaf's persist O(blocks²).
+    A run lands as ONE ``os.pwritev`` gathering one zero-copy memoryview
+    per block: adjacent blocks occupy adjacent offsets (the per-leaf
+    prefix-sum table computed once in :meth:`open`), so the syscall count
+    per leaf drops from ``n_blocks`` to ``n_blocks / run_blocks`` and no
+    intermediate ``tobytes()`` buffers are materialized.
 
     Incremental epochs: the manifest's per-leaf ``carried`` list records
     which block ids this snapshot actually wrote; everything else is
@@ -156,22 +206,49 @@ class FileSink(Sink):
             self._open = True
 
     def write_block(self, ref, data):
-        # Serialize (and, for device blocks, pull to host) OUTSIDE any lock;
-        # pwrite itself is positioned + thread-safe, so concurrent workers
-        # writing different blocks of one leaf never contend.
-        payload = np.ascontiguousarray(data).tobytes()
-        offset = int(self._offsets[ref.leaf_id][ref.block_id])
+        self.write_run(ref.leaf_id, ref.block_id, [data])
+
+    def write_run(self, leaf_id, start_block, arrays):
+        # Export views (and, for device blocks, pull to host) OUTSIDE any
+        # lock; positioned writes are thread-safe, so concurrent workers
+        # writing different runs of one leaf never contend.
+        views = [_as_block_view(a) for a in arrays]
+        offset = int(self._offsets[leaf_id][start_block])
         with self._lock:
             if not self._open:
                 raise RuntimeError("FileSink closed or aborted")
-            fd = self._files[ref.leaf_id].fileno()
+            fd = self._files[leaf_id].fileno()
             self._inflight += 1
         try:
-            os.pwrite(fd, payload, offset)
+            self._pwritev(fd, views, offset)
         finally:
             with self._cv:
                 self._inflight -= 1
                 self._cv.notify_all()
+
+    @staticmethod
+    def _pwritev(fd, views: List[memoryview], offset: int) -> None:
+        """One gathered positioned write, handling short writes and the
+        IOV_MAX cap; falls back to per-view pwrite where pwritev is
+        missing (non-Linux) — still zero-copy."""
+        if not hasattr(os, "pwritev"):  # pragma: no cover - Linux CI
+            for v in views:
+                off = offset
+                while len(v):
+                    n = os.pwrite(fd, v, off)
+                    off += n
+                    offset += n
+                    v = v[n:]
+            return
+        remaining = list(views)
+        while remaining:
+            written = os.pwritev(fd, remaining[:_IOV_MAX], offset)
+            offset += written
+            while remaining and written >= remaining[0].nbytes:
+                written -= remaining[0].nbytes
+                remaining.pop(0)
+            if remaining and written:
+                remaining[0] = remaining[0][written:]
 
     def _drain(self):
         """Quiesce in-flight writes and bar new ones (close/abort barrier)."""
@@ -211,66 +288,183 @@ def write_composite_manifest(directory: str, shards: List[Dict]) -> None:
     os.replace(tmp, os.path.join(directory, "manifest.json"))
 
 
-def read_file_snapshot(directory: str):
+# --------------------------------------------------------------------- #
+# restore                                                               #
+# --------------------------------------------------------------------- #
+class RestorePool:
+    """Restore-side mirror of the persist pipeline's worker pool.
+
+    ``map`` runs ``fn`` over ``items`` on up to ``workers`` threads and
+    returns results in item order, surfacing the first error. Each call
+    spawns its own short-lived thread group, so nested maps (shards →
+    leaves) can never deadlock on a shared executor; numpy/mmap reads
+    release the GIL, so leaf restores genuinely overlap their IO.
+    ``workers<=1`` (or a single item) runs inline — the sequential path.
+    """
+
+    def __init__(self, workers: Optional[int] = None):
+        if workers is None:
+            workers = min(8, os.cpu_count() or 1)
+        self.workers = max(1, int(workers))
+
+    def map(self, fn: Callable, items: Sequence) -> List:
+        items = list(items)
+        if self.workers <= 1 or len(items) <= 1:
+            return [fn(it) for it in items]
+        with ThreadPoolExecutor(
+            max_workers=min(self.workers, len(items))
+        ) as ex:
+            return list(ex.map(fn, items))
+
+
+def _coalesce_ids(ids: Sequence[int]) -> List[tuple]:
+    """Sorted block ids -> [(start_id, stop_id), ...] contiguous runs."""
+    runs: List[tuple] = []
+    for b in ids:
+        if runs and b == runs[-1][1]:
+            runs[-1] = (runs[-1][0], b + 1)
+        else:
+            runs.append((b, b + 1))
+    return runs
+
+
+def read_file_snapshot(
+    directory: str,
+    *,
+    pool: Optional[RestorePool] = None,
+    workers: Optional[int] = None,
+):
     """Restore {path: np.ndarray} from a FileSink directory.
 
     Incremental snapshots resolve transparently: blocks a manifest does
     not carry are filled from the ``parent`` snapshot (itself possibly a
-    delta — the chain bottoms out at a full-snapshot anchor). Sharded
-    snapshots (a composite manifest naming per-shard FileSink dirs) merge
-    into one flat dict, each shard's leaf paths under its ``prefix``.
+    delta — the chain bottoms out at a full-snapshot anchor), with
+    adjacent holes coalesced into one slice copy per contiguous run.
+    Sharded snapshots (a composite manifest naming per-shard FileSink
+    dirs) merge into one flat dict, each shard's leaf paths under its
+    ``prefix``.
+
+    Shards and leaves restore in parallel on a :class:`RestorePool`
+    (default: one worker per core, capped at 8); pass ``workers=1`` for
+    the sequential seed behavior, or a shared ``pool``. Returned leaves
+    are materialized with GIL-releasing bulk reads (they overlap across
+    pool workers); *parent* snapshots along a delta chain are
+    memory-mapped instead, so a hole-free ancestor leaf contributes only
+    the hole ranges a descendant copies out of it (an ancestor leaf that
+    itself carries holes must still be materialized in full to resolve
+    its own chain).
     """
+    if pool is None:
+        pool = RestorePool(workers)
+    return _read_snapshot_dir(directory, pool)
+
+
+def _read_snapshot_dir(directory: str, pool: RestorePool, lazy: bool = False):
     with open(os.path.join(directory, "manifest.json")) as f:
         manifest = json.load(f)
 
     if manifest.get("composite"):
-        out = {}
-        for entry in manifest["shards"]:
+        entries = manifest["shards"]
+
+        def _one_shard(entry):
             sdir = entry["dir"]
             if not os.path.isabs(sdir):
                 sdir = os.path.join(directory, sdir)
-            prefix = entry.get("prefix", "")
-            for path, arr in read_file_snapshot(sdir).items():
+            return entry.get("prefix", ""), _read_snapshot_dir(sdir, pool, lazy)
+
+        out = {}
+        for prefix, shard_out in pool.map(_one_shard, entries):
+            for path, arr in shard_out.items():
                 out[prefix + path] = arr
         return out
 
-    parent_cache = {}
+    parent_cache: Dict[str, Dict] = {}
+    parent_mu = threading.Lock()
 
     def _parent():
         # resolved lazily: a manifest may name a parent yet carry every
         # block (e.g. nothing was clean), and the parent directory need
-        # not exist in that case
-        if "out" not in parent_cache:
-            parent = manifest["parent"]
-            pdir = parent if os.path.isabs(parent) else os.path.join(
-                os.path.dirname(os.path.abspath(directory)), parent
-            )
-            parent_cache["out"] = read_file_snapshot(pdir)
-        return parent_cache["out"]
+        # not exist in that case. The lock makes concurrent leaf workers
+        # share ONE recursive parent restore. Parents restore lazy
+        # (memory-mapped): only the hole ranges the child actually copies
+        # out are ever read from the ancestor files.
+        with parent_mu:
+            if "out" not in parent_cache:
+                parent = manifest["parent"]
+                pdir = parent if os.path.isabs(parent) else os.path.join(
+                    os.path.dirname(os.path.abspath(directory)), parent
+                )
+                parent_cache["out"] = _read_snapshot_dir(pdir, pool, lazy=True)
+            return parent_cache["out"]
 
     has_parent = manifest.get("parent") is not None
-    out = {}
-    for leaf in manifest["leaves"]:
-        arr = np.fromfile(
-            os.path.join(directory, leaf["file"]), dtype=np.dtype(leaf["dtype"])
+    leaves = manifest["leaves"]
+    restored = pool.map(
+        lambda leaf: _read_leaf(directory, leaf, has_parent, _parent, lazy),
+        leaves,
+    )
+    return {leaf["path"]: arr for leaf, arr in zip(leaves, restored)}
+
+
+def _read_leaf(directory: str, leaf: Dict, has_parent: bool, parent_fn,
+               lazy: bool):
+    """Restore one leaf; resolve delta holes per contiguous run.
+
+    ``lazy`` (parent-chain position) memory-maps the blob so only the
+    ranges a descendant copies out are read; the top level materializes
+    with one bulk ``fromfile`` read, which releases the GIL and so
+    overlaps across restore-pool workers.
+    """
+    path = os.path.join(directory, leaf["file"])
+    dtype = np.dtype(leaf["dtype"])
+    shape = tuple(leaf["shape"])
+    n_elems = int(np.prod(shape)) if shape else 1
+    if n_elems == 0:
+        return np.empty(shape, dtype=dtype)
+    if not shape and os.path.getsize(path) == 0:
+        raise ValueError(
+            f"corrupt snapshot {directory!r}: scalar leaf {leaf['path']!r} "
+            f"has an empty data file {leaf['file']!r}"
         )
-        arr = arr.reshape(leaf["shape"]) if leaf["shape"] else (arr[0] if arr.size else arr)
-        blocks = leaf.get("blocks")
-        carried = leaf.get("carried")
-        if has_parent and blocks is not None and carried is not None:
-            carried_set = set(carried)
-            missing = [b for b in range(len(blocks)) if b not in carried_set]
-            if missing:
-                parr = _parent()[leaf["path"]]
-                if leaf["shape"]:
-                    for b in missing:
-                        start, stop, _ = blocks[b]
-                        arr[start:stop] = parr[start:stop]
-                else:
-                    # scalar leaf inherited wholesale — copy, never alias:
-                    # callers mutate restored arrays in place when resolving
-                    # further deltas, and an alias would corrupt the parent's
-                    # cached restore
-                    arr = np.array(parr, copy=True)
-        out[leaf["path"]] = arr
-    return out
+    n_stored = os.path.getsize(path) // dtype.itemsize
+    if n_stored != n_elems:
+        raise ValueError(
+            f"corrupt snapshot {directory!r}: leaf {leaf['path']!r} file "
+            f"{leaf['file']!r} holds {n_stored} {dtype} elements, "
+            f"manifest shape {shape or '()'} needs {n_elems}"
+        )
+
+    blocks = leaf.get("blocks")
+    carried = leaf.get("carried")
+    missing: List[int] = []
+    if has_parent:
+        if blocks is None or carried is None:
+            raise ValueError(
+                f"corrupt snapshot {directory!r}: leaf {leaf['path']!r} "
+                "manifest names a parent but lacks the 'blocks'/'carried' "
+                "lists needed to resolve the delta chain"
+            )
+        carried_set = set(carried)
+        missing = [b for b in range(len(blocks)) if b not in carried_set]
+
+    if lazy and not missing:
+        mm = np.memmap(path, dtype=dtype, mode="r")
+        return mm.reshape(shape) if shape else mm[0]
+
+    arr = np.fromfile(path, dtype=dtype)
+    arr = arr.reshape(shape) if shape else arr
+    if missing:
+        parr = parent_fn()[leaf["path"]]
+        if shape:
+            # fill each contiguous run of holes with one slice copy —
+            # against a memmapped parent this reads exactly the hole
+            # ranges of the ancestor file
+            for b0, b1 in _coalesce_ids(missing):
+                start, stop = blocks[b0][0], blocks[b1 - 1][1]
+                arr[start:stop] = parr[start:stop]
+            return arr
+        # scalar leaf inherited wholesale — copy, never alias: callers
+        # mutate restored arrays in place when resolving further deltas,
+        # and an alias would corrupt the parent's cached restore
+        return np.array(parr, copy=True)
+    return arr if shape else arr[0]

@@ -82,6 +82,13 @@ class SnapshotHandle:
         device array (DeviceStaging); sinks accept either."""
         return self.backend.staged_block(ref)
 
+    def staged_run(self, refs):
+        """Staged content of a contiguous same-leaf run, one array per
+        block. Device staging services the whole run with one batched D2H
+        transfer (``DeviceStaging.drain``); every block must already be
+        staged (COPIED or later)."""
+        return self.backend.staged_run(refs)
+
     # ------------------------------------------------------------------ #
     # parent-side proactive synchronization (§4.2)                        #
     # ------------------------------------------------------------------ #

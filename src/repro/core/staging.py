@@ -35,14 +35,15 @@ def mirror_flags(table: BlockTable, leaf_id: int,
                  force_uncopied: Optional[int] = None) -> np.ndarray:
     """Mirror one leaf's BlockTable states into a kernel flag vector.
 
+    One vectorized array copy under the table lock
+    (:meth:`BlockTable.leaf_states`) — the seed looped ``table.state`` per
+    block, paying O(n_blocks) lock round-trips per kernel launch.
+
     ``force_uncopied`` re-opens one block (the caller holds it in COPYING —
     the trylock — so its table state would otherwise make the kernel skip
     the very block being staged).
     """
-    handle = table.leaf_handles[leaf_id]
-    flags = np.empty((len(handle.blocks),), np.int32)
-    for i, ref in enumerate(handle.blocks):
-        flags[i] = int(table.state(ref.key))
+    flags = table.leaf_states(leaf_id)
     if force_uncopied is not None:
         flags[force_uncopied] = int(BlockState.UNCOPIED)
     return flags
@@ -62,6 +63,13 @@ class StagingBackend:
 
     def staged_block(self, ref: BlockRef):  # pragma: no cover
         raise NotImplementedError
+
+    def staged_run(self, refs: Sequence[BlockRef]) -> list:
+        """Staged content for a contiguous same-leaf run, one array per
+        block. Default: per-block reads. ``DeviceStaging`` overrides with
+        ONE batched D2H transfer for the whole run; the caller must have
+        staged every block of the run first."""
+        return [self.staged_block(r) for r in refs]
 
     def leaf_array(self, leaf_id: int) -> np.ndarray:  # pragma: no cover
         raise NotImplementedError
@@ -220,6 +228,42 @@ class DeviceStaging(StagingBackend):
             return blk[0]
         rows = ref.stop - ref.start
         return blk[: rows * g.row_elems].reshape((rows,) + h.shape[1:])
+
+    def drain(self, leaf_id: int, start_block: int = 0,
+              stop_block: Optional[int] = None) -> np.ndarray:
+        """One batched D2H transfer of ``[start_block, stop_block)`` of the
+        leaf's blocked image (the ROADMAP's device-staging persist path).
+
+        Returns a host ``(stop - start, block_elems)`` array in the blocked
+        layout. Only blocks the caller has staged hold T0 content — the
+        persister drains exactly the runs it staged, so it never reads the
+        zero-initialized remainder.
+        """
+        dst = self._dst.get(leaf_id)
+        if dst is None:
+            raise KeyError(f"leaf {leaf_id} has no staged device image")
+        if stop_block is None:
+            stop_block = dst.shape[0]
+        return np.asarray(dst[start_block:stop_block])
+
+    def staged_run(self, refs: Sequence[BlockRef]) -> list:
+        """Run read = ONE D2H transfer via :meth:`drain`, then host-side
+        views per block — instead of ``len(refs)`` single-block transfers
+        issued by however many persist workers touch the leaf."""
+        first = refs[0]
+        h = self.table.leaf_handles[first.leaf_id]
+        g = h.geometry()
+        host = self.drain(first.leaf_id, first.block_id,
+                          refs[-1].block_id + 1)
+        out = []
+        for i, ref in enumerate(refs):
+            blk = host[i]
+            if not h.shape:
+                out.append(blk[0])
+                continue
+            rows = ref.stop - ref.start
+            out.append(blk[: rows * g.row_elems].reshape((rows,) + h.shape[1:]))
+        return out
 
     def leaf_array(self, leaf_id: int) -> np.ndarray:
         h = self.table.leaf_handles[leaf_id]

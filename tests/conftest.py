@@ -9,6 +9,18 @@ import pytest
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 
+def pytest_configure(config):
+    # CI installs pytest-timeout so hung concurrency tests fail fast; keep
+    # the @pytest.mark.timeout marks warning-free where the plugin is absent
+    # (the marks are then inert).
+    if not config.pluginmanager.hasplugin("timeout"):
+        config.addinivalue_line(
+            "markers",
+            "timeout(seconds): fail the test if it runs longer than "
+            "`seconds` (enforced by pytest-timeout when installed)",
+        )
+
+
 @pytest.fixture(autouse=True)
 def _seed():
     np.random.seed(0)

@@ -1,0 +1,486 @@
+"""The zero-copy persist hot path: coalesced run-writes, batched D2H
+drain, vectorized flag mirrors, and the parallel restore pool.
+
+Covers the PR's acceptance criteria: ``write_run`` output is
+byte-identical to per-block ``write_block`` writes under out-of-order
+concurrent workers; an abort mid-run fires ``sink.abort()`` exactly once
+and leaks no ``manifest.json.tmp``; the restore pool resolves shards and
+delta chains to the same bytes as the sequential path; and corrupt
+manifests/blobs raise clear errors instead of silently skipping.
+"""
+import os
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    AsyncForkSnapshotter,
+    BlockState,
+    FailingProvider,
+    FileSink,
+    MemorySink,
+    NullSink,
+    PersistPipeline,
+    PyTreeProvider,
+    RestorePool,
+    ShardedSnapshotCoordinator,
+    Sink,
+    SnapshotError,
+    read_file_snapshot,
+)
+from repro.core.blocks import BlockRun, BlockTable
+from repro.core.staging import mirror_flags
+
+
+def _table(rows=100, cols=16, block_rows=8):
+    """A leaf with a short tail block (100 rows / 8-row blocks -> 13)."""
+    state = {"kv": jnp.arange(rows * cols, dtype=jnp.float32).reshape(rows, cols)}
+    return state, BlockTable(state, block_bytes=block_rows * cols * 4)
+
+
+def _random_run_partition(refs, rng, max_blocks=5):
+    """Split a leaf's block list into contiguous runs of random length."""
+    runs, i = [], 0
+    while i < len(refs):
+        n = int(rng.integers(1, max_blocks + 1))
+        chunk = refs[i : i + n]
+        runs.append(BlockRun(chunk[0].leaf_id, chunk[0].block_id, tuple(chunk)))
+        i += n
+    return runs
+
+
+def _leaf_bytes(directory, leaf_id=0):
+    with open(os.path.join(directory, f"leaf_{leaf_id}.bin"), "rb") as f:
+        return f.read()
+
+
+# --------------------------------------------------------------------- #
+# write_run == write_block, out of order, concurrently                  #
+# --------------------------------------------------------------------- #
+@pytest.mark.timeout(120)
+def test_write_run_byte_identical_to_per_block_concurrent(tmp_path):
+    state, table = _table()
+    host = np.asarray(state["kv"])
+    rng = np.random.default_rng(7)
+
+    a = FileSink(str(tmp_path / "per_block"))
+    a.open(table.leaf_handles)
+    refs = list(table.blocks)
+    rng.shuffle(refs)
+    threads = [
+        threading.Thread(
+            target=lambda r=r: a.write_block(r, host[r.start : r.stop])
+        )
+        for r in refs
+    ]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    a.close()
+
+    b = FileSink(str(tmp_path / "runs"))
+    b.open(table.leaf_handles)
+    runs = _random_run_partition(table.blocks, rng)
+    rng.shuffle(runs)
+
+    def write_run(run):
+        arrays = [host[r.start : r.stop] for r in run.refs]
+        b.write_run(run.leaf_id, run.start_block, arrays)
+
+    threads = [threading.Thread(target=write_run, args=(run,)) for run in runs]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    b.close()
+
+    assert _leaf_bytes(str(tmp_path / "per_block")) == \
+        _leaf_bytes(str(tmp_path / "runs"))
+    np.testing.assert_array_equal(
+        read_file_snapshot(str(tmp_path / "runs"))["kv"], host
+    )
+
+
+def test_write_run_handles_bfloat16_and_scalars(tmp_path):
+    """Extension dtypes reject the buffer protocol; the uint8 reinterpret
+    must keep them (and 0-d scalar blocks) on the zero-copy path."""
+    state = {
+        "w": jnp.arange(64 * 8, dtype=jnp.bfloat16).reshape(64, 8),
+        "step": jnp.float32(7.0),
+    }
+    table = BlockTable(state, block_bytes=16 * 8 * 2)
+    sink = FileSink(str(tmp_path / "bf16"))
+    sink.open(table.leaf_handles)
+    for h in table.leaf_handles:
+        leaf = np.asarray(state[h.path.split("/")[-1]])
+        arrays = [
+            leaf[r.start : r.stop] if h.shape else leaf.reshape(())
+            for r in h.blocks
+        ]
+        sink.write_run(h.leaf_id, 0, arrays)
+    sink.close()
+    out = read_file_snapshot(str(tmp_path / "bf16"))
+    np.testing.assert_array_equal(out["w"], np.asarray(state["w"]))
+    assert float(out["step"]) == 7.0
+
+
+def test_null_and_memory_sink_run_paths_match_per_block():
+    state, table = _table(rows=40)
+    host = np.asarray(state["kv"])
+    refs = table.blocks
+    arrays = [host[r.start : r.stop] for r in refs]
+
+    null = NullSink()
+    null.write_run(0, 0, arrays)
+    assert null.bytes_written == sum(r.nbytes for r in refs)
+
+    mem_run, mem_blk = MemorySink(), MemorySink()
+    mem_run.write_run(0, 0, arrays)
+    for r, a in zip(refs, arrays):
+        mem_blk.write_block(r, a)
+    assert set(mem_run.blocks) == set(mem_blk.blocks)
+    for k in mem_blk.blocks:
+        np.testing.assert_array_equal(mem_run.blocks[k], mem_blk.blocks[k])
+
+
+@pytest.mark.timeout(120)
+def test_write_block_only_sink_gets_real_refs_from_pipeline(tmp_path):
+    """A legacy sink implementing only write_block must receive per-block
+    writes with REAL refs (row geometry intact), not batched runs."""
+
+    class Recording(Sink):
+        def __init__(self):
+            self.calls = []
+
+        def open(self, leaf_handles):
+            pass
+
+        def write_block(self, ref, data):
+            self.calls.append((ref.key, ref.start, ref.stop, data.nbytes))
+
+    with pytest.raises(NotImplementedError):
+        Recording().write_run(0, 0, [np.zeros(4, np.float32)])
+
+    prov = PyTreeProvider(
+        {"kv": jnp.arange(64 * 16, dtype=jnp.float32).reshape(64, 16)}
+    )
+    snapper = AsyncForkSnapshotter(prov, block_bytes=8 * 16 * 4,
+                                   copier_threads=1)
+    snapper.persist_pipeline = PersistPipeline(workers=2, run_blocks=4)
+    sink = Recording()
+    snap = snapper.fork(sink)
+    assert snap.wait_persisted(60)
+    table = snap.table
+    expect = sorted(
+        (r.key, r.start, r.stop, r.nbytes) for r in table.blocks
+    )
+    assert sorted(sink.calls) == expect
+
+
+@pytest.mark.timeout(120)
+@pytest.mark.parametrize("run_blocks", [1, 4, 64])
+def test_pipeline_run_blocks_restore_byte_identical(tmp_path, run_blocks):
+    """The whole pipeline at different coalescing granularities persists
+    the same bytes, with donated writes racing the workers."""
+    prov = PyTreeProvider(
+        {"kv": jnp.arange(128 * 16, dtype=jnp.float32).reshape(128, 16)}
+    )
+    t0 = np.asarray(prov.leaf(0)).copy()
+    snapper = AsyncForkSnapshotter(prov, block_bytes=512, copier_threads=2)
+    snapper.persist_pipeline = PersistPipeline(workers=3, run_blocks=run_blocks)
+    snap = snapper.fork(FileSink(str(tmp_path / f"rb{run_blocks}")))
+    for i in range(8):
+        snapper.before_write(0, [i * 4])
+        old = prov.leaf(0)
+        prov.update_leaf(0, old.at[i * 4].set(-1.0), delete_old=True)
+    assert snap.wait_persisted(60)
+    restored = read_file_snapshot(str(tmp_path / f"rb{run_blocks}"))
+    np.testing.assert_array_equal(restored["kv"], t0)
+
+
+# --------------------------------------------------------------------- #
+# abort mid-run                                                         #
+# --------------------------------------------------------------------- #
+class CountingFileSink(FileSink):
+    def __init__(self, directory):
+        super().__init__(directory)
+        self.abort_calls = 0
+        self.close_calls = 0
+
+    def abort(self):
+        # count AFTER the base abort: observing abort_calls == 1 then
+        # implies the directory removal has completed
+        super().abort()
+        self.abort_calls += 1
+
+    def close(self):
+        self.close_calls += 1
+        super().close()
+
+
+@pytest.mark.timeout(120)
+def test_abort_mid_run_exactly_once_no_tmp_leak(tmp_path):
+    """A copy failure inside a multi-block run aborts the epoch: exactly
+    one ``sink.abort()``, zero ``close()``, no ``manifest.json.tmp`` (or
+    any other file) left behind."""
+    state = {"kv": jnp.ones((256, 16), jnp.float32)}
+    prov = FailingProvider(state, fail_on=lambda ref: ref.block_id == 10)
+    snapper = AsyncForkSnapshotter(prov, block_bytes=1024, copier_threads=1)
+    snapper.persist_pipeline = PersistPipeline(workers=4, run_blocks=8)
+    sink = CountingFileSink(str(tmp_path / "abort"))
+    snap = snapper.fork(sink)
+    snap.persist_done.wait(30)
+    with pytest.raises(SnapshotError):
+        snap.wait_persisted(30)
+    assert snap.aborted
+    # abort() sets persist_done directly; the pipeline's job cleanup (the
+    # actual sink.abort) drains moments later
+    deadline = time.monotonic() + 10.0
+    while sink.abort_calls == 0 and time.monotonic() < deadline:
+        time.sleep(0.01)
+    assert sink.abort_calls == 1
+    assert sink.close_calls == 0
+    leftovers = [
+        os.path.join(root, f)
+        for root, _, files in os.walk(tmp_path)
+        for f in files
+    ]
+    assert leftovers == []
+
+
+# --------------------------------------------------------------------- #
+# BlockTable: vectorized states + run coalescing                        #
+# --------------------------------------------------------------------- #
+def test_leaf_states_matches_per_block_state():
+    _, table = _table()
+    h = table.leaf_handles[0]
+    table.try_acquire(h.blocks[1].key)                      # COPYING
+    table.mark(h.blocks[1].key, BlockState.COPIED)
+    table.try_acquire(h.blocks[4].key)                      # COPYING
+    table.mark(h.blocks[7].key, BlockState.PERSISTED)
+    states = table.leaf_states(0)
+    assert states.dtype == np.int32
+    for ref in h.blocks:
+        assert states[ref.block_id] == int(table.state(ref.key))
+    flags = mirror_flags(table, 0, force_uncopied=7)
+    assert flags[7] == int(BlockState.UNCOPIED)
+    assert flags[1] == int(BlockState.COPIED)
+
+
+def test_coalesce_runs_merges_same_state_and_breaks_on_exclude():
+    _, table = _table(rows=96, block_rows=8)                # 12 blocks
+    h = table.leaf_handles[0]
+    for b in (3, 4, 5):
+        table.try_acquire(h.blocks[b].key)
+        table.mark(h.blocks[b].key, BlockState.COPIED)
+    runs = table.coalesce_runs(0)
+    spans = [(r.start_block, r.stop_block, r.state) for r in runs]
+    assert spans == [
+        (0, 3, BlockState.UNCOPIED),
+        (3, 6, BlockState.COPIED),
+        (6, 12, BlockState.UNCOPIED),
+    ]
+    # refs cover every block exactly once, in order
+    covered = [ref.block_id for r in runs for ref in r.refs]
+    assert covered == list(range(12))
+
+    capped = table.coalesce_runs(0, max_blocks=2)
+    assert all(len(r.refs) <= 2 for r in capped)
+    assert [ref.block_id for r in capped for ref in r.refs] == list(range(12))
+
+    holes = table.coalesce_runs(0, exclude={(0, 4), (0, 9)})
+    assert all((0, 4) not in [ref.key for ref in r.refs] for r in holes)
+    assert [ref.block_id for r in holes for ref in r.refs] == \
+        [0, 1, 2, 3, 5, 6, 7, 8, 10, 11]
+
+
+def test_mark_run_counts_twoway_once():
+    _, table = _table(rows=64, block_rows=8)                # 8 blocks
+    h = table.leaf_handles[0]
+    run = BlockRun(0, 0, tuple(h.blocks[:4]))
+    table.mark_run(run, BlockState.PERSISTED)
+    assert h.twoway.remaining == 4
+    # re-marking already-final blocks must not double-count
+    table.mark_run(run, BlockState.PERSISTED)
+    assert h.twoway.remaining == 4
+    rest = BlockRun(0, 4, tuple(h.blocks[4:]))
+    table.mark_run(rest, BlockState.PERSISTED)
+    assert h.twoway.closed and table.leaf_done(0)
+
+
+# --------------------------------------------------------------------- #
+# device staging: batched D2H drain                                     #
+# --------------------------------------------------------------------- #
+@pytest.mark.timeout(120)
+def test_device_staged_run_matches_per_block_reads():
+    prov = PyTreeProvider(
+        {"kv": jnp.arange(64 * 32, dtype=jnp.float32).reshape(64, 32)}
+    )
+    snapper = AsyncForkSnapshotter(
+        prov, block_bytes=8 * 32 * 4, copier_threads=1, backend="device"
+    )
+    snap = snapper.fork()
+    assert snap.wait(60)
+    refs = snap.table.leaf_handles[0].blocks[2:6]
+    run_arrays = snap.staged_run(refs)
+    for ref, arr in zip(refs, run_arrays):
+        np.testing.assert_array_equal(
+            np.asarray(arr), np.asarray(snap.staged_block(ref))
+        )
+    host = snap.backend.drain(0)
+    assert host.shape[0] == len(snap.table.leaf_handles[0].blocks)
+    assert isinstance(host, np.ndarray)
+
+
+@pytest.mark.timeout(120)
+def test_device_backend_run_persist_restores_t0(tmp_path):
+    """End to end: device staging -> batched drain -> pwritev runs ->
+    restore equals the fork-time image, under donated writes."""
+    prov = PyTreeProvider(
+        {"kv": jnp.arange(96 * 16, dtype=jnp.float32).reshape(96, 16)}
+    )
+    t0 = np.asarray(prov.leaf(0)).copy()
+    snapper = AsyncForkSnapshotter(
+        prov, block_bytes=8 * 16 * 4, copier_threads=2, backend="device"
+    )
+    snapper.persist_pipeline = PersistPipeline(workers=2, run_blocks=4)
+    snap = snapper.fork(FileSink(str(tmp_path / "dev")))
+    for i in range(6):
+        snapper.before_write(0, [i * 8])
+        old = prov.leaf(0)
+        prov.update_leaf(0, old.at[i * 8].set(-2.0), delete_old=True)
+    assert snap.wait_persisted(60)
+    restored = read_file_snapshot(str(tmp_path / "dev"))
+    np.testing.assert_array_equal(restored["kv"], t0)
+
+
+# --------------------------------------------------------------------- #
+# restore pool                                                          #
+# --------------------------------------------------------------------- #
+@pytest.mark.timeout(120)
+def test_restore_pool_matches_sequential_for_sharded_delta_chain(tmp_path):
+    provs = [
+        PyTreeProvider({
+            "kv": jnp.arange(64 * 8, dtype=jnp.float32).reshape(64, 8)
+            + 100.0 * k
+        })
+        for k in range(4)
+    ]
+    coord = ShardedSnapshotCoordinator(
+        provs, mode="asyncfork", block_bytes=512, copier_threads=1,
+        retain_images=True,
+    )
+    coord.bgsave_to_dir(str(tmp_path / "base")).wait_persisted(60)
+    for k in range(4):
+        coord.before_write(k, 0, [5])
+        old = provs[k].leaf(0)
+        provs[k].update_leaf(0, old.at[5].set(-3.0), delete_old=True)
+    coord.bgsave_to_dir(
+        str(tmp_path / "delta"), parent="base", incremental=True
+    ).wait_persisted(60)
+    coord.wait_all(60)
+
+    seq = read_file_snapshot(str(tmp_path / "delta"), workers=1)
+    par = read_file_snapshot(str(tmp_path / "delta"), workers=4)
+    pooled = read_file_snapshot(
+        str(tmp_path / "delta"), pool=RestorePool(workers=3)
+    )
+    assert set(seq) == set(par) == set(pooled)
+    for path in seq:
+        np.testing.assert_array_equal(seq[path], par[path])
+        np.testing.assert_array_equal(seq[path], pooled[path])
+    for k in range(4):
+        expect = np.asarray(provs[k].leaf(0))
+        np.testing.assert_array_equal(par[f"shard{k}/kv"], expect)
+
+
+def test_restore_pool_surfaces_worker_errors(tmp_path):
+    pool = RestorePool(workers=4)
+    with pytest.raises(FileNotFoundError):
+        pool.map(lambda p: open(p).read(), ["/nonexistent/a", "/nonexistent/b"])
+
+
+def test_restore_pool_map_preserves_order():
+    pool = RestorePool(workers=4)
+    assert pool.map(lambda x: x * x, range(37)) == [i * i for i in range(37)]
+
+
+# --------------------------------------------------------------------- #
+# corrupt-snapshot validation                                           #
+# --------------------------------------------------------------------- #
+def _write_snapshot(tmp_path, name, parent=None):
+    prov = PyTreeProvider({"kv": jnp.ones((16, 4), jnp.float32),
+                           "step": jnp.float32(3.0)})
+    table = BlockTable(prov.tree(), block_bytes=4 * 4 * 4)
+    sink = FileSink(str(tmp_path / name), parent=parent)
+    sink.open(table.leaf_handles)
+    for h in table.leaf_handles:
+        leaf = np.asarray(prov.leaf(h.leaf_id))
+        for r in h.blocks:
+            sink.write_block(
+                r, leaf[r.start : r.stop] if h.shape else leaf
+            )
+    sink.close()
+    return str(tmp_path / name)
+
+
+def test_truncated_scalar_leaf_raises_clear_error(tmp_path):
+    import json
+
+    d = _write_snapshot(tmp_path, "snap")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    scalar = next(l for l in manifest["leaves"] if not l["shape"])
+    open(os.path.join(d, scalar["file"]), "w").close()  # truncate to 0
+    with pytest.raises(ValueError, match="scalar leaf.*empty"):
+        read_file_snapshot(d)
+
+
+def test_truncated_shaped_leaf_raises_clear_error(tmp_path):
+    import json
+
+    d = _write_snapshot(tmp_path, "snap")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    shaped = next(l for l in manifest["leaves"] if l["shape"])
+    p = os.path.join(d, shaped["file"])
+    with open(p, "r+b") as f:
+        f.truncate(os.path.getsize(p) // 2)
+    with pytest.raises(ValueError, match="holds.*needs"):
+        read_file_snapshot(d)
+
+
+def test_delta_manifest_missing_blocks_carried_raises(tmp_path):
+    import json
+
+    _write_snapshot(tmp_path, "base")
+    d = _write_snapshot(tmp_path, "delta", parent="base")
+    mp = os.path.join(d, "manifest.json")
+    with open(mp) as f:
+        manifest = json.load(f)
+    for leaf in manifest["leaves"]:
+        leaf.pop("carried", None)
+    with open(mp, "w") as f:
+        json.dump(manifest, f)
+    with pytest.raises(ValueError, match="blocks.*carried|carried"):
+        read_file_snapshot(d)
+
+
+# --------------------------------------------------------------------- #
+# metrics: persist_s vs sink_write_s                                    #
+# --------------------------------------------------------------------- #
+@pytest.mark.timeout(120)
+def test_sink_write_s_excludes_copy_window():
+    prov = PyTreeProvider({"kv": jnp.ones((256, 64), jnp.float32)})
+    snapper = AsyncForkSnapshotter(prov, block_bytes=4096, copier_threads=2)
+    snap = snapper.fork(NullSink(bandwidth=400e6))
+    assert snap.wait_persisted(60)
+    m = snap.metrics
+    assert m.sink_write_s > 0.0
+    # the IO interval is a sub-span of the full fork->durable window
+    assert m.sink_write_s <= m.persist_s + 1e-9
+    assert "sink_write_ms" in m.summary()
