@@ -42,14 +42,37 @@ def run(spec):
         clients=spec.get("clients", 50),
         seed=spec.get("seed", 1),
     )
+    # optional online reshard fired inline on the serving thread at a run
+    # fraction ("reshard_at"): "split" halves shard `reshard_shard`,
+    # "merge" folds it into its right neighbor. The measured stall is the
+    # split call itself (gate + layout swap), reported separately.
+    actions = None
+    reshard_stall = {}
+    if spec.get("reshard_at") is not None:
+        op = spec.get("reshard_op", "split")
+        k = int(spec.get("reshard_shard", 0))
+
+        def _reshard():
+            import time as _t
+            t0 = _t.perf_counter()
+            if op == "split":
+                eng.split(k)
+            else:
+                eng.merge(k, k + 1)
+            reshard_stall["ms"] = (_t.perf_counter() - t0) * 1e3
+
+        actions = [(float(spec["reshard_at"]), _reshard)]
     rep = eng.run(
         wl,
         duration_s=spec.get("duration", 6.0),
         bgsave_at=tuple(spec.get("bgsave_at", [0.15])),
+        actions=actions,
     )
     out = rep.summary()
     out["instance_mb"] = spec["size_mb"]
     out["mode"] = spec["mode"]
+    out["reshard_stall_ms"] = reshard_stall.get("ms", 0.0)
+    out["final_shards"] = eng.n_shards
     # per-snapshot detail for Fig 11 histograms
     snaps = eng._snaps
     out["histograms"] = [s.metrics.histogram_us() for s in snaps]

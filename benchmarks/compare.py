@@ -1,0 +1,107 @@
+"""Diff a fresh benchmark --json trajectory against committed baselines.
+
+Usage::
+
+    python -m benchmarks.compare --new NEW.json [--cell persist_path]
+        [--max-regress 0.25] BASELINE.json [BASELINE2.json ...]
+
+Absolute microsecond numbers do not transfer between machines (the
+committed baselines come from the dev container, CI runs on shared
+runners), so the gate compares the **machine-portable ratio metrics** the
+cells derive on-box — any ``key=<value>x`` field in a row's ``derived``
+string (``runs_vs_per_block=8.78x``, ``speedup=2.05x``, ...). A ratio is
+a within-run comparison of two configurations on the same hardware; a
+>25% drop in one is an algorithmic regression, not runner noise.
+
+Convention: the trailing ``x`` suffix is the opt-in, and it asserts
+BIGGER IS BETTER. A cell deriving a ratio where bigger is worse (e.g.
+``reshard_epoch``'s p99 ratio) must emit it WITHOUT the suffix so the
+gate ignores it.
+
+For each (row, ratio-key) present in both the new trajectory and at least
+one baseline, the reference is the MINIMUM across baselines (the most
+lenient committed run); the gate fails when
+``new < reference * (1 - max_regress)``.
+"""
+from __future__ import annotations
+
+import json
+import re
+import sys
+from typing import Dict, List, Tuple
+
+_RATIO_RE = re.compile(r"([A-Za-z0-9_/]+)=([0-9.]+)x(?:;|$)")
+
+
+def ratio_metrics(rows: List[Dict]) -> Dict[Tuple[str, str], float]:
+    """{(row name, ratio key): value} for every ``key=<float>x`` field."""
+    out: Dict[Tuple[str, str], float] = {}
+    for row in rows:
+        for key, val in _RATIO_RE.findall(row.get("derived", "")):
+            out[(row["name"], key)] = float(val)
+    return out
+
+
+def load_rows(path: str) -> List[Dict]:
+    with open(path) as f:
+        return json.load(f)["rows"]
+
+
+def main(argv: List[str]) -> int:
+    baselines: List[str] = []
+    new_path = None
+    cell = None
+    max_regress = 0.25
+    it = iter(argv)
+    for a in it:
+        if a == "--new":
+            new_path = next(it)
+        elif a.startswith("--new="):
+            new_path = a.split("=", 1)[1]
+        elif a == "--cell":
+            cell = next(it)
+        elif a.startswith("--cell="):
+            cell = a.split("=", 1)[1]
+        elif a == "--max-regress":
+            max_regress = float(next(it))
+        elif a.startswith("--max-regress="):
+            max_regress = float(a.split("=", 1)[1])
+        else:
+            baselines.append(a)
+    if new_path is None or not baselines:
+        print(__doc__)
+        return 2
+
+    new = ratio_metrics(load_rows(new_path))
+    ref: Dict[Tuple[str, str], float] = {}
+    for b in baselines:
+        for key, val in ratio_metrics(load_rows(b)).items():
+            ref[key] = min(val, ref[key]) if key in ref else val
+
+    failures, compared = [], 0
+    for key, baseline_val in sorted(ref.items()):
+        name, metric = key
+        if cell is not None and not name.startswith(cell):
+            continue
+        if key not in new:
+            print(f"MISSING  {name} [{metric}] (baseline {baseline_val:.2f}x)")
+            failures.append(key)
+            continue
+        got = new[key]
+        floor = baseline_val * (1.0 - max_regress)
+        verdict = "OK" if got >= floor else "REGRESSED"
+        compared += 1
+        print(f"{verdict:9s}{name} [{metric}]: {got:.2f}x "
+              f"(baseline {baseline_val:.2f}x, floor {floor:.2f}x)")
+        if got < floor:
+            failures.append(key)
+    if compared == 0 and not failures:
+        print(f"no comparable ratio metrics for cell {cell!r}; nothing to gate")
+    if failures:
+        print(f"{len(failures)} regression(s) beyond {max_regress:.0%}")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -314,6 +314,35 @@ def shard_scaling():
              f"min_tput={r['min_tput_qps']:.0f}")
 
 
+def reshard_epoch():
+    """New cell: a split landing while a coordinated BGSAVE is in flight
+    under load. The layout swap is O(metadata) under the write gate, so
+    the copy window and the snapshot-query tail should track the no-reshard
+    baseline; ``reshard_stall_ms`` is the split call itself."""
+    base = {"mode": "asyncfork", "size_mb": 64, "duration": 6.0, "qps": 100,
+            "shards": 2, "threads": 1, "duty": None, "persist_workers": 2,
+            "bgsave_at": [0.25]}
+    r0 = run_cell(base)
+    r1 = run_cell({**base, "reshard_at": 0.3, "reshard_op": "split",
+                   "reshard_shard": 0})
+    _row("reshard_epoch/baseline", r0["copy_window_ms"] * 1e3,
+         f"snap_p99_us={r0['snap_p99_ms']*1e3:.0f};"
+         f"oos_us={r0['out_of_service_ms']*1e3:.0f};"
+         f"min_tput={r0['min_tput_qps']:.0f}")
+    _row("reshard_epoch/split_mid_snapshot", r1["copy_window_ms"] * 1e3,
+         f"snap_p99_us={r1['snap_p99_ms']*1e3:.0f};"
+         f"oos_us={r1['out_of_service_ms']*1e3:.0f};"
+         f"min_tput={r1['min_tput_qps']:.0f};"
+         f"reshard_stall_us={r1['reshard_stall_ms']*1e3:.0f};"
+         f"final_shards={r1['final_shards']}")
+    # NOT the `=<v>x` format: that suffix opts a metric into the
+    # compare.py regression gate, which assumes bigger-is-better — this
+    # is a p99 ratio where bigger is WORSE
+    _row("reshard_epoch/p99_ratio", 0.0,
+         f"split_over_baseline_p99="
+         f"{r1['snap_p99_ms'] / max(1e-9, r0['snap_p99_ms']):.2f}")
+
+
 def persist_path():
     """New cell: the zero-copy persist/restore hot path.
 
@@ -419,6 +448,7 @@ CELLS = {
     "staging_backend_bandwidth": staging_backend_bandwidth,
     "incremental_snapshot_window": incremental_snapshot_window,
     "shard_scaling": shard_scaling,
+    "reshard_epoch": reshard_epoch,
     "persist_path": persist_path,
 }
 

@@ -127,9 +127,27 @@ class TrainSnapshotManager:
             else max(1, self.shards)
         )
         self._snaps: List[Tuple[SnapshotHandle, PyTreeProvider]] = []
-        self._chain_base: Optional[Tuple[List[SnapshotHandle], str]] = None
+        # chain base: (parts, dirname, per-shard leaf-path partition) —
+        # the partition is the manager's "layout"; a save whose partition
+        # differs from the base's degrades the changed shards to full
+        self._chain_base: Optional[
+            Tuple[List[SnapshotHandle], str, List[List[str]]]
+        ] = None
         self._chain_len = 0
+        self._layout_epoch = 0
         self.stall_log: List[Tuple[str, float]] = []  # (what, seconds)
+
+    def reshard(self, shards: int) -> None:
+        """Change the shard count for subsequent saves. Resets the delta
+        chain: the next save is a full anchor under the new partition
+        (per-shard delta chains require a stable leaf assignment, and a
+        reshard changes every shard's assignment at once)."""
+        shards = max(1, int(shards))
+        if shards == self.shards:
+            return
+        self.shards = shards
+        self._chain_base, self._chain_len = None, 0
+        self._layout_epoch += 1
 
     # ------------------------------------------------------------------ #
     def snapshot_active(self) -> bool:
@@ -178,16 +196,37 @@ class TrainSnapshotManager:
         dirname = f"step_{step:08d}"
         path = os.path.join(self.directory, dirname)
 
+        # the leaf partition (and its path lists, the manager's "layout")
+        # only exist on the sharded path — a single-shard save must not
+        # pay a tree flatten + greedy partition + path sort per call
+        shard_paths: Optional[List[List[str]]] = None
+        if self.shards > 1:
+            flat, _ = flatten_with_paths(state)
+            shard_flat = _shard_leaves(flat, self.shards)
+            shard_paths = [sorted(p for p, _ in pairs) for pairs in shard_flat]
+
         bases: List[Optional[SnapshotHandle]] = [None] * self.shards
         parent: Optional[str] = None
         if self.incremental and self._chain_base is not None:
-            prev_parts, prev_dir = self._chain_base
-            if any(p.aborted for p in prev_parts):
-                # a base sink directory is gone (FileSink.abort);
-                # restart the chain with a fresh full anchor
+            prev_parts, prev_dir, prev_paths = self._chain_base
+            if any(p.aborted for p in prev_parts) or \
+                    len(prev_parts) != self.shards:
+                # a base sink directory is gone (FileSink.abort), or the
+                # shard count changed under us; restart the chain with a
+                # fresh full anchor
                 self._chain_base, self._chain_len = None, 0
             elif self._chain_len % self.full_every != 0:
                 bases, parent = list(prev_parts), prev_dir
+                # re-partitioning across the chain: any shard whose leaf
+                # assignment changed (the state structure moved leaves
+                # between shards) cannot diff against its old image —
+                # degrade THAT shard to a full epoch, keep the rest delta.
+                # (Single-shard chains need no comparison: a reshaped leaf
+                # degrades per leaf inside _mark_clean_blocks.)
+                if shard_paths is not None:
+                    for k in range(self.shards):
+                        if shard_paths[k] != prev_paths[k]:
+                            bases[k] = None
 
         if self.shards == 1:
             provider = PyTreeProvider(state)  # pins T0 refs (CoW data pages)
@@ -198,8 +237,8 @@ class TrainSnapshotManager:
             parts, providers = [snap], [provider]
             result: Union[SnapshotHandle, CoordinatedSnapshot] = snap
         else:
-            flat, _ = flatten_with_paths(state)
-            shard_flat = _shard_leaves(flat, self.shards)
+            layout_record = {"kind": "leaves", "epoch": self._layout_epoch,
+                             "shards": shard_paths}
             providers = [PyTreeProvider(_nest_tree(pairs))
                          for pairs in shard_flat]
             # a per-save coordinator over the per-save providers: its fork
@@ -214,13 +253,13 @@ class TrainSnapshotManager:
                 copier_duty=self.copier_duty, backend=self.backend,
             )
             result = coord.bgsave_to_dir(path, parent=parent, bases=bases,
-                                         prefix="")
+                                         prefix="", layout_record=layout_record)
             parts = result.parts
 
         for snap, prov in zip(parts, providers):
             self._snaps.append((snap, prov))
         if self.incremental:
-            self._chain_base = (parts, dirname)
+            self._chain_base = (parts, dirname, shard_paths)
             self._chain_len += 1
         self.stall_log.append(("save", time.perf_counter() - t0))
         return result

@@ -8,14 +8,17 @@ from repro.core.blocks import (
     BlockTable,
     LeafHandle,
     TwoWayPointer,
+    coalesce_refs,
 )
 from repro.core.coordinator import (
     AggregateMetrics,
     CoordinatedSnapshot,
     ShardedSnapshotCoordinator,
 )
+from repro.core.layout import ShardLayout
 from repro.core.metrics import SnapshotMetrics
 from repro.core.persist import PersistJob, PersistPipeline
+from repro.core.policy import BgsavePolicy, ShardEpochView, ShardPolicyState
 from repro.core.provider import FailingProvider, PyTreeProvider
 from repro.core.sinks import (
     FileSink,
@@ -24,6 +27,7 @@ from repro.core.sinks import (
     RestorePool,
     Sink,
     read_file_snapshot,
+    read_snapshot_layout,
     write_composite_manifest,
 )
 from repro.core.staging import (
@@ -48,8 +52,14 @@ __all__ = [
     "AggregateMetrics",
     "CoordinatedSnapshot",
     "ShardedSnapshotCoordinator",
+    "ShardLayout",
+    "BgsavePolicy",
+    "ShardEpochView",
+    "ShardPolicyState",
     "PersistJob",
     "PersistPipeline",
+    "coalesce_refs",
+    "read_snapshot_layout",
     "write_composite_manifest",
     "BlockGeometry",
     "StagingBackend",

@@ -88,6 +88,28 @@ class BlockRun:
         return self.refs[-1].stop
 
 
+def coalesce_refs(refs: List[BlockRef]) -> List["BlockRun"]:
+    """Group a sorted (leaf-major) list of :class:`BlockRef`s into maximal
+    contiguous :class:`BlockRun`s — gaps in ``block_id`` and leaf
+    boundaries both break a run (a run is a same-leaf unit).
+
+    Unlike :meth:`BlockTable.coalesce_runs` this takes an explicit ref
+    list — the run-aware proactive sync coalesces exactly the blocks whose
+    trylocks it just won, which need not be every block of the leaf.
+    """
+    runs: List[BlockRun] = []
+    cur: List[BlockRef] = []
+    for ref in refs:
+        if cur and (ref.leaf_id != cur[-1].leaf_id
+                    or ref.block_id != cur[-1].block_id + 1):
+            runs.append(BlockRun(cur[0].leaf_id, cur[0].block_id, tuple(cur)))
+            cur = []
+        cur.append(ref)
+    if cur:
+        runs.append(BlockRun(cur[0].leaf_id, cur[0].block_id, tuple(cur)))
+    return runs
+
+
 class TwoWayPointer:
     """Paper §4.3: per-VMA connection between parent and child.
 

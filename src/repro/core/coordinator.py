@@ -1,4 +1,5 @@
-"""Sharded snapshot coordinator — cross-shard BGSAVE with a fork barrier.
+"""Sharded snapshot coordinator — cross-shard BGSAVE with a fork barrier,
+dynamic shard layouts, and a per-shard full-vs-delta BGSAVE policy.
 
 Production Redis clusters shard the keyspace and BGSAVE shards
 independently; the paper's design (one child per VMA, one RDB writer)
@@ -12,25 +13,39 @@ our substrate: the state is partitioned into N shards, each owning its own
       copiers — so the union of shard images is a single point-in-time cut
       (consistency argument in DESIGN.md §6);
   (b) persists all shard epochs through one shared
-      :class:`~repro.core.persist.PersistPipeline` — a bounded work queue
-      feeding a pool of persister workers that write blocks out of order
-      into each shard's ``FileSink`` (pwrite layout), so N shards drain at
-      pool parallelism instead of one disk stream per instance.
+      :class:`~repro.core.persist.PersistPipeline`;
+  (c) supports **online resharding** (:meth:`set_layout`): a split/merge
+      swaps in the successor :class:`~repro.core.layout.ShardLayout` under
+      the same write gate the barrier holds, so no layout swap can land
+      between two shards' T0 stamps — every epoch is stamped against one
+      frozen layout. Epochs stamped under a *retired* layout keep
+      receiving proactive synchronization: the write hook translates the
+      (shard, leaf) it was called with into the retired layout's indexing
+      through the global block id (DESIGN.md §8);
+  (d) optionally delegates the full-vs-delta decision to a per-shard
+      :class:`~repro.core.policy.BgsavePolicy` instead of one global
+      ``incremental=`` flag; shards with zero writes since their last
+      epoch take zero-copy "skip" epochs.
 
 Writers cooperate through :attr:`write_gate`: the engine holds the gate
 across ``before_write`` → donated-update-commit for each touched block
-(``KVStore.set(gate=...)`` does this), and ``bgsave`` holds it across the
-barrier. A single-threaded engine (the paper's Redis model) never contends.
+(``KVStore.set(gate=...)`` does this), ``bgsave`` holds it across the
+barrier, and ``set_layout`` holds it across the swap. A single-threaded
+engine (the paper's Redis model) never contends.
 """
 from __future__ import annotations
 
+import math
 import os
 import threading
-from typing import Dict, List, Optional, Sequence
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
 
+from repro.core.layout import ShardLayout
 from repro.core.persist import PersistPipeline
+from repro.core.policy import BgsavePolicy, ShardEpochView
 from repro.core.provider import PyTreeProvider
-from repro.core.sinks import FileSink, Sink, write_composite_manifest
+from repro.core.sinks import FileSink, NullSink, Sink, write_composite_manifest
 from repro.core.snapshot import SnapshotHandle, Snapshotter, make_snapshotter
 
 
@@ -40,10 +55,25 @@ class AggregateMetrics:
     The parent-visible quantities sum (fork stalls and interruptions all
     land on the serving thread); the window quantities take the max (the
     barrier's window closes when the slowest shard's does).
+
+    Under a :class:`BgsavePolicy` some shards may have *skipped* the epoch
+    (zero-copy): they contribute no handle, so every roll-up here iterates
+    only the shards that actually forked, and :meth:`summary` merges with
+    defaults rather than assuming all shards report the same keys.
     """
 
-    def __init__(self, parts: Sequence[SnapshotHandle]):
-        self._parts = list(parts)
+    def __init__(
+        self,
+        parts: Sequence[Optional[SnapshotHandle]],
+        modes: Optional[Sequence[str]] = None,
+    ):
+        # ``parts`` may be shard-ordered with None holes (skipped shards)
+        self._by_shard = list(parts)
+        self._parts = [p for p in self._by_shard if p is not None]
+        self._modes = (
+            list(modes) if modes is not None
+            else ["full" if p is not None else "skip" for p in self._by_shard]
+        )
 
     @property
     def fork_s(self) -> float:
@@ -51,6 +81,8 @@ class AggregateMetrics:
         to last commit exit. Per-part fork_s intervals overlap (prepares
         and commits run sequentially on one thread), so summing them would
         overstate the stall roughly in proportion to shard count."""
+        if not self._parts:
+            return 0.0
         starts = [p.fork_start for p in self._parts]
         ends = [p.fork_start + p.metrics.fork_s for p in self._parts]
         return max(ends) - min(starts)
@@ -62,6 +94,8 @@ class AggregateMetrics:
     @property
     def copy_window_s(self) -> float:
         """Barrier start to the slowest shard's copy-window close."""
+        if not self._parts:
+            return 0.0
         return max(
             ((p.t0 - self._t0) + p.metrics.copy_window_s for p in self._parts),
             default=0.0,
@@ -70,6 +104,8 @@ class AggregateMetrics:
     @property
     def persist_s(self) -> float:
         """Barrier start to the slowest shard's durability."""
+        if not self._parts:
+            return 0.0
         return max(
             ((p.t0 - self._t0) + p.metrics.persist_s for p in self._parts),
             default=0.0,
@@ -98,6 +134,10 @@ class AggregateMetrics:
         return sum(p.metrics.n_interruptions for p in self._parts)
 
     @property
+    def skipped_shards(self) -> int:
+        return sum(1 for p in self._by_shard if p is None)
+
+    @property
     def out_of_service_s(self) -> float:
         """Fig 20 analogue: one barrier stall + every parent-side copy
         stall (per-part out_of_service_s would re-count overlapping fork
@@ -114,6 +154,29 @@ class AggregateMetrics:
         return out
 
     def summary(self) -> Dict[str, float]:
+        per_shard: List[Dict] = []
+        for k, p in enumerate(self._by_shard):
+            mode = self._modes[k] if k < len(self._modes) else "full"
+            if p is None:
+                # zero-copy epoch: the shard's previous image stands in;
+                # deliberately a MINIMAL dict — downstream merges must not
+                # assume every shard reports every key
+                per_shard.append({"mode": "skip", "zero_copy_epoch": 1.0})
+            else:
+                s = p.metrics.summary()
+                s["mode"] = mode
+                per_shard.append(s)
+        # skips are a CERTIFIED dirty fraction of 0.0 (that is what made
+        # them skippable) — excluding them would overstate cluster
+        # dirtiness exactly when the zero-copy optimization works best
+        dirty: List[float] = []
+        for s in per_shard:
+            if s.get("mode") == "skip":
+                dirty.append(0.0)
+            else:
+                df = s.get("dirty_frac")
+                if isinstance(df, float) and not math.isnan(df):
+                    dirty.append(df)
         return {
             "fork_ms": self.fork_s * 1e3,
             "copy_window_ms": self.copy_window_s * 1e3,
@@ -124,23 +187,51 @@ class AggregateMetrics:
             "parent_copied_blocks": float(self.copied_blocks_parent),
             "child_copied_blocks": float(self.copied_blocks_child),
             "inherited_blocks": float(self.inherited_blocks),
-            "shards": float(len(self._parts)),
-            "per_shard": [p.metrics.summary() for p in self._parts],
+            "shards": float(len(self._by_shard)),
+            "full_shards": float(sum(1 for m in self._modes if m == "full")),
+            "delta_shards": float(sum(1 for m in self._modes if m == "delta")),
+            "skipped_shards": float(self.skipped_shards),
+            "dirty_frac_mean": (sum(dirty) / len(dirty)) if dirty else float("nan"),
+            "per_shard": per_shard,
         }
 
 
 class CoordinatedSnapshot:
-    """The union of per-shard epochs taken at one fork barrier."""
+    """The union of per-shard epochs taken at one fork barrier.
 
-    def __init__(self, parts: List[SnapshotHandle], directory: Optional[str] = None):
-        self.parts = parts
+    ``parts_by_shard`` is shard-ordered with ``None`` holes for shards the
+    policy skipped (zero-copy epochs); ``parts`` is the dense list of
+    handles that actually forked. ``layout`` is the frozen layout the
+    barrier was stamped under (``None`` for leaf-partitioned shards).
+    """
+
+    def __init__(
+        self,
+        parts: Sequence[Optional[SnapshotHandle]],
+        directory: Optional[str] = None,
+        *,
+        layout: Optional[ShardLayout] = None,
+        modes: Optional[Sequence[str]] = None,
+        skipped_bases: Optional[Dict[int, SnapshotHandle]] = None,
+    ):
+        self.parts_by_shard: List[Optional[SnapshotHandle]] = list(parts)
+        self.parts: List[SnapshotHandle] = [
+            p for p in self.parts_by_shard if p is not None
+        ]
         self.directory = directory
-        self.t0 = min(p.t0 for p in parts)
-        self.fork_start = min(p.fork_start for p in parts)
+        self.layout = layout
+        self.modes = (
+            list(modes) if modes is not None
+            else ["full" if p is not None else "skip" for p in self.parts_by_shard]
+        )
+        self._skipped_bases = dict(skipped_bases or {})
+        now = time.perf_counter()
+        self.t0 = min((p.t0 for p in self.parts), default=now)
+        self.fork_start = min((p.fork_start for p in self.parts), default=now)
 
     @property
     def metrics(self) -> AggregateMetrics:
-        return AggregateMetrics(self.parts)
+        return AggregateMetrics(self.parts_by_shard, self.modes)
 
     @property
     def aborted(self) -> bool:
@@ -163,8 +254,15 @@ class CoordinatedSnapshot:
         return ok
 
     def to_trees(self) -> List:
-        """Per-shard T0 pytrees, in shard order."""
-        return [p.to_tree() for p in self.parts]
+        """Per-shard T0 pytrees, in shard order. A skipped shard's tree
+        comes from the base epoch its zero-copy decision certified."""
+        out = []
+        for k, p in enumerate(self.parts_by_shard):
+            if p is not None:
+                out.append(p.to_tree())
+            else:
+                out.append(self._skipped_bases[k].to_tree())
+        return out
 
 
 class ShardedSnapshotCoordinator:
@@ -174,6 +272,13 @@ class ShardedSnapshotCoordinator:
     per shard); every shard gets its own snapshotter built from the same
     ``mode``/``**snapshotter_kw``. ``persist_workers`` sizes the shared
     pipeline (default: one worker per shard, min 2).
+
+    ``layout`` (a :class:`ShardLayout` whose per-shard block counts match
+    the providers' leaf counts, one leaf per block) enables online
+    resharding via :meth:`set_layout`; without it the partition is static,
+    as in PR 2. ``policy`` (a :class:`BgsavePolicy`) makes every
+    :meth:`bgsave` decide full-vs-delta-vs-skip per shard; it forces
+    ``retain_images=True`` on the shard snapshotters so delta bases exist.
     """
 
     def __init__(
@@ -183,11 +288,22 @@ class ShardedSnapshotCoordinator:
         persist_workers: Optional[int] = None,
         persist_queue_depth: int = 64,
         pipeline: Optional[PersistPipeline] = None,
+        layout: Optional[ShardLayout] = None,
+        policy: Optional[BgsavePolicy] = None,
         **snapshotter_kw,
     ):
         if not providers:
             raise ValueError("need at least one shard provider")
+        if layout is not None and layout.n_shards != len(providers):
+            raise ValueError(
+                f"layout names {layout.n_shards} shards, got "
+                f"{len(providers)} providers"
+            )
         self.mode = mode
+        self.policy = policy
+        if policy is not None:
+            snapshotter_kw["retain_images"] = True
+        self._snapshotter_kw = dict(snapshotter_kw)
         self.snapshotters: List[Snapshotter] = [
             make_snapshotter(mode, p, **snapshotter_kw) for p in providers
         ]
@@ -200,6 +316,30 @@ class ShardedSnapshotCoordinator:
         for sn in self.snapshotters:
             sn.persist_pipeline = self.pipeline
         self.write_gate = threading.RLock()
+        self.layout = layout
+        # epochs stamped under layouts that have since been replaced:
+        # [(frozen layout, {old_shard_index: snapshotter})] — only the
+        # shards whose interval changed; unchanged shards carry their
+        # snapshotter (and its active epochs) into the new indexing
+        self._retired: List[Tuple[ShardLayout, Dict[int, Snapshotter]]] = []
+        # writes since each shard's last T0 stamp (gate-serialized with
+        # the barrier, so ==0 at a barrier proves byte-identity — the
+        # policy's "skip" precondition), plus the DISTINCT blocks those
+        # writes touched (global ids under a range layout): the policy's
+        # dirty estimate for full epochs must not count a hot block once
+        # per write, or a write-skewed shard would pin its EMA at 1.0.
+        # Only maintained under a policy — the no-policy hot path pays
+        # nothing, and bgsave degrades explicit "skip" modes accordingly.
+        self._writes: List[int] = [0] * len(self.snapshotters)
+        self._touched: List[set] = [set() for _ in self.snapshotters]
+        # last persisted (directory, epoch handle) per shard: the dir a
+        # policy delta/skip may reference from a composite manifest, PLUS
+        # the handle it holds — a sink-less bgsave advances the retained
+        # base past the directory, and chaining against the stale dir
+        # would restore stale bytes, so consumers require the recorded
+        # handle to still BE the shard's retained base
+        self._last_dirs: List[Optional[Tuple[str, SnapshotHandle]]] = \
+            [None] * len(self.snapshotters)
         self._snaps: List[CoordinatedSnapshot] = []
 
     @property
@@ -211,8 +351,201 @@ class ShardedSnapshotCoordinator:
         """Proactive synchronization for one shard's leaf. The caller must
         hold :attr:`write_gate` across this call AND the donated update it
         guards (``KVStore.set(gate=...)`` does); the gate is reentrant so
-        ``bgsave`` can run under it too."""
-        return self.snapshotters[shard_id].before_write(leaf_id, rows)
+        ``bgsave`` can run under it too.
+
+        ``shard_id``/``leaf_id`` are indices under the CURRENT layout;
+        epochs stamped under a retired layout are synchronized through the
+        global block id (one leaf == one layout block)."""
+        if self.policy is not None:
+            self._writes[shard_id] += 1
+            self._touched[shard_id].add(
+                leaf_id if self.layout is None
+                else self.layout.block_start(shard_id) + leaf_id
+            )
+        total = self.snapshotters[shard_id].before_write(leaf_id, rows)
+        if self._retired:
+            total += self._sync_retired(shard_id, leaf_id, rows)
+        return total
+
+    def _sync_retired(self, shard_id: int, leaf_id: int, rows) -> float:
+        g = self.layout.block_start(shard_id) + leaf_id
+        total = 0.0
+        live: List[Tuple[ShardLayout, Dict[int, Snapshotter]]] = []
+        for old_layout, snappers in self._retired:
+            if not any(sn.active() for sn in snappers.values()):
+                continue  # every epoch of this group finished — drop it
+            live.append((old_layout, snappers))
+            k_old = old_layout.shard_of_block(g)
+            sn = snappers.get(k_old)
+            if sn is not None:
+                total += sn.before_write(g - old_layout.block_start(k_old), rows)
+        self._retired = live
+        return total
+
+    # -- online resharding ------------------------------------------------
+    def set_layout(
+        self, providers: Sequence[PyTreeProvider], layout: ShardLayout
+    ) -> None:
+        """Swap in a resharded provider set under the write gate.
+
+        Shards whose block interval is unchanged keep their snapshotter
+        (active epochs, retained delta base, policy state move with it);
+        changed shards get fresh snapshotters, and their old ones — if they
+        still carry in-flight epochs — retire with the frozen old layout so
+        :meth:`before_write` keeps synchronizing them until they drain.
+        The gate serializes this swap against the fork barrier: no layout
+        change can land between two shards' T0 stamps (DESIGN.md §8).
+        """
+        if self.layout is None:
+            raise ValueError(
+                "coordinator was built without a ShardLayout; online "
+                "resharding needs the block-range layout"
+            )
+        if layout.n_shards != len(providers):
+            raise ValueError(
+                f"layout names {layout.n_shards} shards, got "
+                f"{len(providers)} providers"
+            )
+        with self.write_gate:
+            old_layout, old_sn = self.layout, self.snapshotters
+            unchanged = layout.unchanged_shards(old_layout)
+            # provider identity must match for a snapshotter to carry over
+            unchanged = {
+                k: p for k, p in unchanged.items()
+                if old_sn[p].provider is providers[k]
+            }
+            moved = set(unchanged.values())
+            new_sn: List[Snapshotter] = []
+            for k in range(layout.n_shards):
+                if k in unchanged:
+                    new_sn.append(old_sn[unchanged[k]])
+                else:
+                    sn = make_snapshotter(
+                        self.mode, providers[k], **self._snapshotter_kw
+                    )
+                    sn.persist_pipeline = self.pipeline
+                    new_sn.append(sn)
+            retired = {
+                p: old_sn[p] for p in range(len(old_sn))
+                if p not in moved and old_sn[p].active()
+            }
+            if retired:
+                self._retired.append((old_layout, retired))
+            self._retired = [
+                (L, d) for (L, d) in self._retired
+                if any(sn.active() for sn in d.values())
+            ]
+            parents = layout.parents(old_layout)
+            self._writes = [
+                sum(self._writes[p] for p in parents[k])
+                for k in range(layout.n_shards)
+            ]
+            # touched sets hold GLOBAL block ids — re-bucket by new shard
+            all_touched = set().union(*self._touched) if self._touched else set()
+            self._touched = [
+                {g for g in all_touched
+                 if layout.bounds[k] <= g < layout.bounds[k + 1]}
+                for k in range(layout.n_shards)
+            ]
+            self._last_dirs = [
+                self._last_dirs[unchanged[k]] if k in unchanged else None
+                for k in range(layout.n_shards)
+            ]
+            if self.policy is not None:
+                self.policy.remap(parents, unchanged)
+            self.snapshotters = new_sn
+            self.layout = layout
+
+    # -- policy ------------------------------------------------------------
+    def _usable_base(self, sn: Snapshotter) -> Optional[SnapshotHandle]:
+        base = sn.retained_base()
+        if base is None or base.aborted:
+            return None
+        return base
+
+    def set_copier_duty(self, duty: float) -> None:
+        """Re-tune the per-shard copier duty cycle for FUTURE epochs on
+        every current snapshotter (and for snapshotters future reshards
+        create). The engine's 1/sqrt(N) aggregate-steal budget depends on
+        the live shard count, which online splits/merges change."""
+        with self.write_gate:
+            self._snapshotter_kw["copier_duty"] = float(duty)
+            for sn in self.snapshotters:
+                sn.copier_duty = float(duty)
+
+    def has_active_epochs(self) -> bool:
+        """Any in-flight epoch on any shard, current layout or retired."""
+        if any(sn.active() for sn in self.snapshotters):
+            return True
+        return any(
+            sn.active() for _, d in self._retired for sn in d.values()
+        )
+
+    def _recorded_dir(self, k: int) -> Optional[str]:
+        """The shard's last persisted directory, ONLY while it still holds
+        the shard's retained base — a sink-less epoch in between advances
+        the base past the directory, and a delta/skip referencing the
+        stale dir would restore stale bytes."""
+        rec = self._last_dirs[k]
+        if rec is None:
+            return None
+        path, handle = rec
+        return path if handle is self._usable_base(self.snapshotters[k]) else None
+
+    def _decide_modes(self, need_dirs: bool) -> List[str]:
+        """One policy decision per shard (caller holds the write gate).
+
+        ``need_dirs``: deltas/skips will be referenced from a composite
+        manifest, so they additionally need a recorded parent directory
+        that still matches the retained base epoch.
+        """
+        modes: List[str] = []
+        for k, sn in enumerate(self.snapshotters):
+            base = self._usable_base(sn)
+            has_dir = self._recorded_dir(k) is not None
+            view = ShardEpochView(
+                writes_since_epoch=self._writes[k],
+                has_base=base is not None and not (need_dirs and not has_dir),
+                base_persisted=base is not None and base.persist_done.is_set(),
+                can_skip=not need_dirs or has_dir,
+            )
+            modes.append(self.policy.decide(k, view))
+        return modes
+
+    def invalidate_bases(self) -> None:
+        """Drop every retained delta base and recorded directory. Call
+        after replacing shard state OUT-OF-BAND (``ShardedKVStore.load``
+        does not route through ``before_write``, so the zero-write skip
+        proof and any dirty diff against the old images would be wrong):
+        each shard's next epoch is a full snapshot. ``KVEngine.load``
+        packages the restore + this call under the write gate."""
+        with self.write_gate:
+            for k, sn in enumerate(self.snapshotters):
+                sn.drop_retained()
+                self._last_dirs[k] = None
+                self._writes[k] = 0
+                self._touched[k] = set()
+
+    def _observe(self, modes: Sequence[str],
+                 parts: Sequence[Optional[SnapshotHandle]],
+                 touched_at_barrier: Sequence[int]) -> None:
+        if self.policy is None:
+            return
+        for k, (mode, part) in enumerate(zip(modes, parts)):
+            dirty = None
+            if part is not None and part.metrics.total_blocks:
+                m = part.metrics
+                if mode == "delta":
+                    # the real scan count (PR-1 dirty kernel, via BlockTable)
+                    dirty = (m.total_blocks - m.inherited_blocks) / m.total_blocks
+                else:
+                    # full epochs run no scan; the gate-serialized count of
+                    # DISTINCT touched blocks upper-bounds the dirty set
+                    # (a raw write counter would pin a write-skewed shard's
+                    # EMA at 1.0), so the EMA still converges and deltas
+                    # become reachable
+                    dirty = min(1.0, touched_at_barrier[k] / m.total_blocks)
+            self.policy.observe(k, mode, dirty)
 
     # -- the barrier -----------------------------------------------------
     def bgsave(
@@ -221,6 +554,7 @@ class ShardedSnapshotCoordinator:
         sink_factory=None,
         incremental: bool = False,
         bases: Optional[Sequence[Optional[SnapshotHandle]]] = None,
+        modes: Optional[Sequence[str]] = None,
     ) -> CoordinatedSnapshot:
         """Consistent cross-shard BGSAVE.
 
@@ -230,25 +564,78 @@ class ShardedSnapshotCoordinator:
         No write can commit between two shards' T0 stamps, so the union of
         shard images is the state at one instant.
 
-        ``bases`` overrides the incremental diff base per shard (used by
-        checkpoint delta chains): shard k is incremental iff ``bases[k]``
-        is not None. Without ``bases``, ``incremental`` applies globally
-        against each snapshotter's retained image.
+        Mode precedence: explicit ``modes`` (one of "full"/"delta"/"skip"
+        per shard) > ``bases`` (shard k is delta iff ``bases[k]``, used by
+        checkpoint delta chains) > the coordinator's ``policy`` > the
+        global ``incremental`` flag. A skipped shard does not fork at all:
+        its previous epoch's image is certified byte-identical by the
+        zero-writes counter, so the epoch is zero-copy.
         """
         if sinks is not None and len(sinks) != self.n_shards:
             raise ValueError(f"need {self.n_shards} sinks, got {len(sinks)}")
         if bases is not None and len(bases) != self.n_shards:
             raise ValueError(f"need {self.n_shards} bases, got {len(bases)}")
-        parts: List[SnapshotHandle] = []
+        if modes is not None and len(modes) != self.n_shards:
+            raise ValueError(f"need {self.n_shards} modes, got {len(modes)}")
+        parts: List[Optional[SnapshotHandle]] = []
+        skipped_bases: Dict[int, SnapshotHandle] = {}
         with self.write_gate:
+            # the frozen layout this barrier stamps against — read under
+            # the gate: a reshard racing the gate release must not attach
+            # its successor layout to an epoch taken under the predecessor
+            layout_at_barrier = self.layout
+            touched_at_barrier = [len(s) for s in self._touched]
+            decided_by_policy = False
+            if modes is None:
+                if bases is not None:
+                    modes = ["delta" if b is not None else "full" for b in bases]
+                elif self.policy is not None:
+                    modes = self._decide_modes(need_dirs=False)
+                    decided_by_policy = True
+                else:
+                    modes = ["delta" if incremental else "full"] * self.n_shards
+            modes = list(modes)
             try:
                 for k, sn in enumerate(self.snapshotters):
+                    # A DURABLE caller sink (anything but a pacing
+                    # NullSink) must receive a restorable record: a skip
+                    # would write nothing at all, and a policy delta would
+                    # write a delta manifest with NO parent reference —
+                    # both restore wrong. Degrade to full. (bgsave_to_dir
+                    # passes modes explicitly with parent-chained
+                    # FileSinks, so it is exempt; explicit bases likewise
+                    # leave the parent naming to the caller.)
+                    durable_sink = sink_factory is not None or (
+                        sinks is not None and sinks[k] is not None
+                        and not isinstance(sinks[k], NullSink)
+                    )
+                    if decided_by_policy and durable_sink and \
+                            modes[k] == "delta":
+                        modes[k] = "full"
+                    if modes[k] == "skip":
+                        base = self._usable_base(sn)
+                        # Degrade rather than certify what we can't honor:
+                        # no policy means no write counters backing the
+                        # zero-copy proof (bgsave_to_dir skips carry a
+                        # manifest entry pointing at the previous epoch
+                        # instead of a sink).
+                        if base is None or self.policy is None or \
+                                self._writes[k] != 0 or durable_sink:
+                            modes[k] = ("full" if durable_sink or base is None
+                                        else "delta")
+                        else:
+                            skipped_bases[k] = base
+                            parts.append(None)
+                            continue
                     parts.append(sn.fork_prepare(
-                        incremental=incremental if bases is None
-                        else bases[k] is not None,
+                        incremental=modes[k] == "delta",
                         base=None if bases is None else bases[k],
                     ))
+                    self._writes[k] = 0
+                    self._touched[k] = set()
                 for k, sn in enumerate(self.snapshotters):
+                    if parts[k] is None:
+                        continue
                     sink = sinks[k] if sinks is not None else (
                         sink_factory(k) if sink_factory is not None else None
                     )
@@ -259,10 +646,16 @@ class ShardedSnapshotCoordinator:
                 # (wait_all stalls to timeout) and they would pin T0 refs
                 # in their snapshotter's active list forever
                 for p in parts:
-                    if not p.persist_done.is_set():
+                    if p is not None and not p.persist_done.is_set():
                         p.abort(exc)
                 raise
-        snap = CoordinatedSnapshot(parts)
+            # still under the gate: a concurrent reshard's policy.remap
+            # must not swap shard indexing mid-observation
+            self._observe(modes, parts, touched_at_barrier)
+        snap = CoordinatedSnapshot(
+            parts, layout=layout_at_barrier, modes=modes,
+            skipped_bases=skipped_bases,
+        )
         self._snaps.append(snap)
         return snap
 
@@ -273,25 +666,84 @@ class ShardedSnapshotCoordinator:
         incremental: bool = False,
         bases: Optional[Sequence[Optional[SnapshotHandle]]] = None,
         prefix: str = "shard{k}/",
+        layout_record: Optional[Dict] = None,
     ) -> CoordinatedSnapshot:
         """BGSAVE into ``<directory>/shard_<k>/`` FileSinks plus a top-level
-        composite manifest that ``read_file_snapshot`` resolves. ``parent``
-        (a sibling snapshot directory name) chains incremental epochs:
-        shard k inherits from ``../<parent>/shard_<k>``."""
-        sinks = [
-            FileSink(
-                os.path.join(directory, f"shard_{k}"),
-                parent=None if parent is None
-                else os.path.join("..", parent, f"shard_{k}"),
-            )
-            for k in range(self.n_shards)
-        ]
-        snap = self.bgsave(sinks=sinks, incremental=incremental, bases=bases)
-        write_composite_manifest(
-            directory,
-            [{"dir": f"shard_{k}", "prefix": prefix.format(k=k)}
-             for k in range(self.n_shards)],
-        )
+        composite manifest (with the layout record and per-shard modes)
+        that ``read_file_snapshot`` resolves. ``parent`` (a sibling
+        snapshot directory name) chains incremental epochs globally:
+        shard k inherits from ``../<parent>/shard_<k>``. With a policy,
+        each shard chains against its OWN last persisted directory
+        instead, and skipped shards' manifest entries point straight at
+        that directory (a zero-copy epoch)."""
+        directory = os.path.abspath(directory)
+        with self.write_gate:
+            if bases is not None:
+                modes: Optional[List[str]] = [
+                    "delta" if b is not None else "full" for b in bases
+                ]
+            elif self.policy is not None:
+                # every delta/skip here gets referenced from the composite
+                # manifest, so each needs a RECORDED previous directory —
+                # even when a legacy ``parent`` name is passed (a prior
+                # sink-less bgsave may have advanced the retained base
+                # past whatever ``parent`` points at). Shards without one
+                # degrade to full inside _decide_modes.
+                modes = self._decide_modes(need_dirs=True)
+            else:
+                modes = ["delta" if incremental else "full"] * self.n_shards
+            sinks: List[Optional[Sink]] = []
+            entries: List[Dict] = []
+            for k in range(self.n_shards):
+                entry = {"dir": f"shard_{k}", "prefix": prefix.format(k=k),
+                         "mode": modes[k]}
+                if modes[k] == "skip":
+                    # re-checked inside bgsave; if it degrades there we
+                    # patch the entry afterwards
+                    sinks.append(None)
+                elif modes[k] == "delta":
+                    if self.policy is not None and bases is None:
+                        # policy deltas diff against the RETAINED base; the
+                        # recorded dir is usable only while it still holds
+                        # that base (a caller-passed ``parent`` name, or a
+                        # dir a sink-less epoch has advanced past, is stale)
+                        rec = self._recorded_dir(k)
+                        parent_k = (os.path.relpath(rec, directory)
+                                    if rec is not None else None)
+                    elif parent is not None:
+                        parent_k = os.path.join("..", parent, f"shard_{k}")
+                    else:
+                        parent_k = None
+                    if parent_k is None:  # no recorded base dir: go full
+                        modes[k] = "full"
+                        entry["mode"] = "full"
+                    sinks.append(FileSink(os.path.join(directory, f"shard_{k}"),
+                                          parent=parent_k))
+                else:
+                    sinks.append(FileSink(os.path.join(directory, f"shard_{k}")))
+                entries.append(entry)
+            snap = self.bgsave(sinks=sinks, bases=bases, modes=modes)
+            for k, mode in enumerate(snap.modes):
+                if mode == "skip":
+                    entries[k]["mode"] = "skip"
+                    entries[k]["dir"] = os.path.relpath(
+                        self._recorded_dir(k), directory
+                    )
+                else:
+                    if entries[k]["mode"] == "skip":  # degraded inside bgsave
+                        raise RuntimeError(
+                            "shard mode degraded after sink creation"
+                        )  # pragma: no cover - guarded by gate serialization
+                    self._last_dirs[k] = (
+                        os.path.join(directory, f"shard_{k}"),
+                        snap.parts_by_shard[k],
+                    )
+            if layout_record is None and self.layout is not None:
+                layout_record = self.layout.to_record()
+        # manifest I/O OUTSIDE the gate: writers need not stall on a
+        # json.dump; entries/layout_record are fully resolved above and
+        # nothing below reads gate-protected state
+        write_composite_manifest(directory, entries, layout=layout_record)
         snap.directory = directory
         return snap
 

@@ -1,0 +1,149 @@
+"""Versioned shard layouts — the cluster's "slot map" as an epoch chain.
+
+A :class:`ShardLayout` is an immutable range partition of a global block
+space: shard ``k`` owns global copy blocks ``[bounds[k], bounds[k+1])``.
+Each :meth:`split`/:meth:`merge` returns a NEW layout with ``epoch + 1``;
+nothing is mutated in place, so an in-flight snapshot epoch can hold the
+layout it was stamped against ("the frozen layout snapshot", DESIGN.md §8)
+while the serving path swaps to the successor under the write gate.
+
+The unit is a *block* — the same copy unit the ``BlockTable`` tracks — and
+reshard points are always block-aligned, so a global block id translates
+between any two layouts of the same block space by pure index arithmetic:
+``shard = searchsorted(bounds, g, "right") - 1``, ``local = g - bounds
+[shard]``. That translation is what lets the coordinator keep proactively
+synchronizing epochs stamped under a *retired* layout after the serving
+path has moved on (no byte ever has two owners; only the naming changes).
+
+Row routing is the same search over ``bounds * rows_per_block`` — the
+``ShardedKVStore`` caches that row-bounds vector and routes whole query
+batches with one vectorized ``np.searchsorted``.
+"""
+from __future__ import annotations
+
+import bisect
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardLayout:
+    """Ordered block boundaries + layout epoch (immutable)."""
+
+    bounds: Tuple[int, ...]  # len n_shards + 1, strictly increasing, [0] == 0
+    epoch: int = 0
+
+    def __post_init__(self):
+        b = tuple(int(x) for x in self.bounds)
+        object.__setattr__(self, "bounds", b)
+        if len(b) < 2 or b[0] != 0:
+            raise ValueError(f"bounds must start at 0 and name >=1 shard: {b}")
+        if any(b[i] >= b[i + 1] for i in range(len(b) - 1)):
+            raise ValueError(f"bounds must be strictly increasing: {b}")
+
+    # -- construction ----------------------------------------------------
+    @classmethod
+    def uniform(cls, shard_blocks: Sequence[int], epoch: int = 0) -> "ShardLayout":
+        """Layout from per-shard block counts (in shard order)."""
+        return cls(tuple(np.cumsum([0] + [int(n) for n in shard_blocks])), epoch)
+
+    @classmethod
+    def from_record(cls, record: Dict) -> "ShardLayout":
+        if record.get("kind", "range") != "range":
+            raise ValueError(f"not a range layout record: {record!r}")
+        return cls(tuple(record["bounds"]), int(record.get("epoch", 0)))
+
+    def to_record(self) -> Dict:
+        """JSON-safe manifest record (``write_composite_manifest``)."""
+        return {"kind": "range", "epoch": self.epoch, "bounds": list(self.bounds)}
+
+    # -- geometry --------------------------------------------------------
+    @property
+    def n_shards(self) -> int:
+        return len(self.bounds) - 1
+
+    @property
+    def n_blocks(self) -> int:
+        return self.bounds[-1]
+
+    def block_start(self, shard_id: int) -> int:
+        return self.bounds[shard_id]
+
+    def shard_blocks(self, shard_id: int) -> int:
+        return self.bounds[shard_id + 1] - self.bounds[shard_id]
+
+    def interval(self, shard_id: int) -> Tuple[int, int]:
+        return (self.bounds[shard_id], self.bounds[shard_id + 1])
+
+    def shard_of_block(self, g: int) -> int:
+        if not 0 <= g < self.n_blocks:
+            raise IndexError(f"global block {g} outside [0, {self.n_blocks})")
+        # bisect on the tuple: this sits on the gate-held write hot path
+        # (retired-layout sync), where a per-call tuple→ndarray conversion
+        # would reintroduce the per-write overhead the vectorized router
+        # removed
+        return bisect.bisect_right(self.bounds, g) - 1
+
+    def shard_of_blocks(self, g: np.ndarray) -> np.ndarray:
+        """Vectorized :meth:`shard_of_block` (no bounds check)."""
+        return np.searchsorted(self.bounds, np.asarray(g), side="right") - 1
+
+    def row_bounds(self, rows_per_block: int) -> np.ndarray:
+        """Shard boundaries in row space (for vectorized query routing)."""
+        return np.asarray(self.bounds, dtype=np.int64) * int(rows_per_block)
+
+    # -- reshard operations ----------------------------------------------
+    def split(self, shard_id: int, at_block: Optional[int] = None) -> "ShardLayout":
+        """Split shard ``shard_id`` at local block ``at_block`` (default:
+        midpoint). Returns the successor layout (``epoch + 1``)."""
+        lo, hi = self.interval(shard_id)
+        n = hi - lo
+        if n < 2:
+            raise ValueError(f"shard {shard_id} has {n} block(s); cannot split")
+        at = n // 2 if at_block is None else int(at_block)
+        if not 0 < at < n:
+            raise ValueError(f"split point {at} outside (0, {n})")
+        bounds = self.bounds[: shard_id + 1] + (lo + at,) + self.bounds[shard_id + 1:]
+        return ShardLayout(bounds, self.epoch + 1)
+
+    def merge(self, shard_id: int, other: int) -> "ShardLayout":
+        """Merge two ADJACENT shards (``other == shard_id + 1``)."""
+        if other != shard_id + 1:
+            raise ValueError(
+                f"can only merge adjacent shards, got ({shard_id}, {other})"
+            )
+        if not 0 <= shard_id < self.n_shards - 1:
+            raise IndexError(f"shard pair ({shard_id}, {other}) out of range")
+        bounds = self.bounds[: shard_id + 1] + self.bounds[shard_id + 2:]
+        return ShardLayout(bounds, self.epoch + 1)
+
+    # -- cross-layout mapping --------------------------------------------
+    def parents(self, old: "ShardLayout") -> List[List[int]]:
+        """For each shard of THIS layout, the ``old``-layout shard indices
+        whose block ranges overlap it (policy state / write counters follow
+        this mapping across a reshard)."""
+        if old.n_blocks != self.n_blocks:
+            raise ValueError(
+                f"layouts cover different block spaces: "
+                f"{old.n_blocks} vs {self.n_blocks}"
+            )
+        out: List[List[int]] = []
+        for k in range(self.n_shards):
+            lo, hi = self.interval(k)
+            first = int(np.searchsorted(old.bounds, lo, side="right")) - 1
+            last = int(np.searchsorted(old.bounds, hi - 1, side="right")) - 1
+            out.append(list(range(first, last + 1)))
+        return out
+
+    def unchanged_shards(self, old: "ShardLayout") -> Dict[int, int]:
+        """``{new_shard: old_shard}`` for shards whose block interval is
+        identical in both layouts (their snapshotters/state carry over)."""
+        old_by_interval = {old.interval(p): p for p in range(old.n_shards)}
+        out: Dict[int, int] = {}
+        for k in range(self.n_shards):
+            p = old_by_interval.get(self.interval(k))
+            if p is not None:
+                out[k] = p
+        return out

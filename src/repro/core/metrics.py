@@ -32,6 +32,8 @@ class SnapshotMetrics:
     copied_blocks_child: int = 0
     copied_blocks_parent: int = 0     # proactive syncs / CoW faults
     inherited_blocks: int = 0         # clean blocks adopted from the base epoch
+    total_blocks: int = 0             # block-table size at fork (dirty_frac denom)
+    policy_mode: str = "full"         # "full" | "delta" (BgsavePolicy decision)
     aborted: bool = False
 
     def __post_init__(self):
@@ -68,8 +70,19 @@ class SnapshotMetrics:
                 out["[>64s]"] = out.get("[>64s]", 0) + 1
         return out
 
+    @property
+    def dirty_frac(self) -> float:
+        """Dirty fraction observed by this epoch's scan: blocks actually
+        copied over blocks total. 1.0 for a full epoch by definition; NaN
+        when the table size was never stamped."""
+        if not self.total_blocks:
+            return float("nan")
+        return (self.total_blocks - self.inherited_blocks) / self.total_blocks
+
     def summary(self) -> Dict[str, float]:
         return {
+            "mode": self.policy_mode,
+            "dirty_frac": self.dirty_frac,
             "fork_ms": self.fork_s * 1e3,
             "copy_window_ms": self.copy_window_s * 1e3,
             "persist_ms": self.persist_s * 1e3,

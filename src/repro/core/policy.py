@@ -1,0 +1,146 @@
+"""Per-shard BGSAVE policy — full vs delta vs skip, per shard per epoch.
+
+The paper takes one global decision per BGSAVE; PR 1 added one global
+``incremental=`` flag. But shards dirty at different rates (the MVCC
+virtual-snapshotting line of work makes the same observation for
+partitions), so a single global mode either wastes sink bandwidth on cold
+shards or pays the dirty-scan on shards that rewrite everything anyway.
+
+:class:`BgsavePolicy` tracks a dirty-rate EMA per shard — fed by the
+PR-1 dirty-block scan counts the ``BlockTable``/``_mark_clean_blocks``
+path already produces (``inherited_blocks`` / ``total_blocks``) — and
+decides, at every fork barrier, one of three modes per shard:
+
+  * ``"full"``  — no usable base, the anchor interval expired
+    (``full_every`` delta epochs since the last full), or the dirty EMA
+    exceeds ``delta_threshold`` (a delta would carry most blocks anyway
+    while still paying the O(state) dirty scan inside fork).
+  * ``"delta"`` — dirty-scan against the shard's retained T0 image and
+    persist only changed blocks.
+  * ``"skip"``  — ZERO writes hit the shard since its last epoch's T0
+    stamp (the coordinator's write counters prove it under the gate), so
+    its previous image *is* its state at the new barrier: the epoch is
+    zero-copy — no fork, no scan, no sink traffic; the composite manifest
+    points at the previous epoch's shard directory. Skips do not advance
+    the anchor clock (the restore chain does not grow).
+
+The skip-soundness argument lives in DESIGN.md §8: every write routes
+through ``before_write`` under the write gate, the counters reset under
+the same gate at each T0 stamp, and the gate is held across the whole
+barrier — so "counter == 0 at the barrier" implies byte-identity with the
+previous image.
+
+Across a reshard the per-shard state follows :meth:`ShardLayout.parents`:
+an unchanged shard keeps its state; split children inherit the parent's
+dirty EMA (their true rates will re-converge); a merged shard takes the
+max of its parents' EMAs (conservative: prefer a full epoch after
+uncertainty). Changed shards lose their retained base with their
+snapshotter, so the decision degrades to "full" regardless.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+
+@dataclasses.dataclass
+class ShardPolicyState:
+    """Mutable per-shard decision inputs the policy accumulates."""
+
+    dirty_ema: float = 1.0       # start pessimistic: first epoch is full
+    epochs_since_full: int = 0   # delta epochs since the last full anchor
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardEpochView:
+    """What the coordinator knows about a shard at decision time."""
+
+    writes_since_epoch: int = 0
+    has_base: bool = False        # retained, non-aborted T0 image to diff
+    base_persisted: bool = False  # base epoch durable (skip may reference it)
+    can_skip: bool = True         # caller veto (e.g. no recorded parent dir)
+
+
+class BgsavePolicy:
+    """Full-vs-delta-vs-skip decisions, one per shard per fork barrier."""
+
+    def __init__(
+        self,
+        delta_threshold: float = 0.5,
+        full_every: int = 8,
+        ema_alpha: float = 0.5,
+        allow_skip: bool = True,
+    ):
+        self.delta_threshold = float(delta_threshold)
+        self.full_every = max(1, int(full_every))
+        self.ema_alpha = float(ema_alpha)
+        self.allow_skip = bool(allow_skip)
+        self._state: List[ShardPolicyState] = []
+
+    # -- state access ----------------------------------------------------
+    def _ensure(self, n: int) -> None:
+        while len(self._state) < n:
+            self._state.append(ShardPolicyState())
+
+    def state(self, shard_id: int) -> ShardPolicyState:
+        self._ensure(shard_id + 1)
+        return self._state[shard_id]
+
+    # -- the decision rule (DESIGN.md §8) --------------------------------
+    def decide(self, shard_id: int, view: ShardEpochView) -> str:
+        st = self.state(shard_id)
+        if not view.has_base:
+            return "full"
+        if (
+            self.allow_skip
+            and view.can_skip
+            and view.base_persisted
+            and view.writes_since_epoch == 0
+        ):
+            return "skip"
+        if st.epochs_since_full >= self.full_every - 1:
+            return "full"
+        if st.dirty_ema > self.delta_threshold:
+            return "full"
+        return "delta"
+
+    def observe(
+        self, shard_id: int, mode: str, dirty_frac: Optional[float] = None
+    ) -> None:
+        """Fold one epoch's outcome back into the shard's state.
+
+        ``dirty_frac`` is ``(total - inherited) / total`` from the delta
+        epoch's dirty scan; full epochs may pass an estimate or ``None``
+        (EMA untouched), skips are a certified dirty fraction of 0.
+        """
+        st = self.state(shard_id)
+        if mode == "full":
+            st.epochs_since_full = 0
+        elif mode == "delta":
+            st.epochs_since_full += 1
+        if mode == "skip":
+            dirty_frac = 0.0
+        if dirty_frac is not None:
+            a = self.ema_alpha
+            st.dirty_ema = a * float(dirty_frac) + (1.0 - a) * st.dirty_ema
+
+    # -- reshard ---------------------------------------------------------
+    def remap(
+        self, parents: Sequence[Sequence[int]], unchanged: Dict[int, int]
+    ) -> None:
+        """Re-key the per-shard state after a layout change.
+
+        ``parents[k]`` lists the old shard indices overlapping new shard
+        ``k`` (:meth:`ShardLayout.parents`); ``unchanged`` maps new→old for
+        shards whose interval (and thus snapshotter + base) carried over.
+        """
+        n_old = max((max(ps) for ps in parents if ps), default=-1) + 1
+        self._ensure(n_old)
+        new_state: List[ShardPolicyState] = []
+        for k, ps in enumerate(parents):
+            if k in unchanged:
+                new_state.append(self._state[unchanged[k]])
+            else:
+                ema = max((self._state[p].dirty_ema for p in ps), default=1.0)
+                new_state.append(ShardPolicyState(dirty_ema=ema))
+        self._state = new_state

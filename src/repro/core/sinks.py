@@ -276,16 +276,36 @@ class FileSink(Sink):
         shutil.rmtree(self.dir, ignore_errors=True)
 
 
-def write_composite_manifest(directory: str, shards: List[Dict]) -> None:
+def write_composite_manifest(
+    directory: str, shards: List[Dict], layout: Optional[Dict] = None
+) -> None:
     """Top-level manifest for a sharded snapshot: ``shards`` is a list of
-    ``{"dir": <relative shard dir>, "prefix": <leaf-path prefix>}`` entries.
-    ``read_file_snapshot`` merges the shard restores (each shard dir is a
-    normal FileSink directory, possibly the head of its own delta chain)."""
+    ``{"dir": <relative shard dir>, "prefix": <leaf-path prefix>}`` entries
+    (entries may also carry a per-shard ``"mode"``: full/delta/skip — a
+    skip entry's dir points at a PREVIOUS epoch's shard directory, the
+    zero-copy epoch). ``layout`` is the JSON layout record of the shard
+    layout the snapshot was stamped under (``ShardLayout.to_record()`` for
+    range partitions), letting a restore re-split/re-merge the image into
+    whatever layout is current. ``read_file_snapshot`` merges the shard
+    restores (each shard dir is a normal FileSink directory, possibly the
+    head of its own delta chain)."""
     os.makedirs(directory, exist_ok=True)
+    manifest: Dict = {"composite": True, "shards": shards}
+    if layout is not None:
+        manifest["layout"] = layout
     tmp = os.path.join(directory, "manifest.json.tmp")
     with open(tmp, "w") as f:
-        json.dump({"composite": True, "shards": shards}, f)
+        json.dump(manifest, f)
     os.replace(tmp, os.path.join(directory, "manifest.json"))
+
+
+def read_snapshot_layout(directory: str) -> Optional[Dict]:
+    """The layout record a composite snapshot was written under, or None
+    (flat/legacy snapshots). Raw JSON — callers holding a range layout
+    rebuild it with ``ShardLayout.from_record``."""
+    with open(os.path.join(directory, "manifest.json")) as f:
+        manifest = json.load(f)
+    return manifest.get("layout")
 
 
 # --------------------------------------------------------------------- #
@@ -446,6 +466,18 @@ def _read_leaf(directory: str, leaf: Dict, has_parent: bool, parent_fn,
             )
         carried_set = set(carried)
         missing = [b for b in range(len(blocks)) if b not in carried_set]
+    elif blocks is not None and carried is not None and \
+            len(carried) < len(blocks):
+        # a delta manifest with NO parent cannot be resolved — the
+        # uncarried offsets hold zeros, and silently returning them would
+        # corrupt the restore (e.g. a policy delta written into a bare
+        # caller sink; the coordinator degrades those to full, this guard
+        # is the restore-side backstop)
+        raise ValueError(
+            f"corrupt snapshot {directory!r}: leaf {leaf['path']!r} "
+            f"carries only {len(carried)}/{len(blocks)} blocks but names "
+            "no parent snapshot to inherit the rest from"
+        )
 
     if lazy and not missing:
         mm = np.memmap(path, dtype=dtype, mode="r")

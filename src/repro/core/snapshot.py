@@ -26,7 +26,7 @@ import threading
 import time
 from typing import List, Optional, Tuple
 
-from repro.core.blocks import BlockRef, BlockState, BlockTable
+from repro.core.blocks import BlockRef, BlockState, BlockTable, coalesce_refs
 from repro.core.metrics import SnapshotMetrics
 from repro.core.persist import PersistPipeline
 from repro.core.provider import PyTreeProvider
@@ -89,6 +89,15 @@ class SnapshotHandle:
         staged (COPIED or later)."""
         return self.backend.staged_run(refs)
 
+    def stage_run(self, refs) -> None:
+        """Stage a contiguous same-leaf run in one data movement (one
+        kernel launch on device staging, one memcpy on host staging).
+
+        Caller must hold EVERY block of the run in COPYING state — the
+        run-granular proactive sync acquires all its trylocks first, then
+        moves the data once (DESIGN.md §8, run-aware proactive sync)."""
+        self.backend.stage_run(refs)
+
     # ------------------------------------------------------------------ #
     # parent-side proactive synchronization (§4.2)                        #
     # ------------------------------------------------------------------ #
@@ -123,21 +132,36 @@ class SnapshotHandle:
         t_start = time.perf_counter()
         copied = 0
         waited = False
+        # Run-aware sync: win every trylock first, then coalesce the won
+        # blocks into contiguous runs and move each run with ONE staging
+        # operation (one kernel launch / one memcpy) instead of per-block
+        # round trips. Protection-state transitions stay per-block (each
+        # trylock is individual; a concurrent copier that beat us to a
+        # block simply keeps it), so the §5 invariant is untouched — only
+        # the data movement is batched.
+        acquired: List[BlockRef] = []
+        busy: List[BlockRef] = []
         for ref in self.blocks_for_rows(leaf_id, rows):
             st = self.table.state(ref.key)
             if st in (BlockState.COPIED, BlockState.PERSISTED):
                 continue
             if self.table.try_acquire(ref.key):
-                try:
-                    self.stage_block(ref)
-                except BaseException as exc:  # §4.4 case 3
-                    self.abort(exc, rollback_leaf=ref.leaf_id)
-                    break
-                self.table.mark(ref.key, BlockState.COPIED)
-                copied += 1
+                acquired.append(ref)
             else:
-                self.table.wait_not_copying(ref.key)
-                waited = True
+                busy.append(ref)
+        for run in coalesce_refs(acquired):
+            try:
+                self.stage_run(run.refs)
+            except BaseException as exc:  # §4.4 case 3
+                self.abort(exc, rollback_leaf=leaf_id)
+                dur = time.perf_counter() - t_start
+                self.metrics.record_interruption(t_start - self.t0, dur, copied)
+                return copied, dur
+            self.table.mark_run(run, BlockState.COPIED)
+            copied += len(run.refs)
+        for ref in busy:
+            self.table.wait_not_copying(ref.key)
+            waited = True
         dur = time.perf_counter() - t_start
         if copied or waited:
             self.metrics.record_interruption(t_start - self.t0, dur, copied)
@@ -283,6 +307,19 @@ class Snapshotter:
             )
         return self.persist_pipeline
 
+    # -- retained-base lifecycle (incremental diffs / policy skips) -------
+    def retained_base(self) -> Optional[SnapshotHandle]:
+        """The epoch retained as the next incremental diff base, or None.
+        Owned here so policy layers need not reach into ``_last_snap``."""
+        return self._last_snap if self.retain_images else None
+
+    def drop_retained(self) -> None:
+        """Forget the retained base: the next ``fork(incremental=True)``
+        degrades to a full epoch. Call when the provider's state was
+        replaced out-of-band (a restore) and the image no longer describes
+        anything reachable."""
+        self._last_snap = None
+
     # -- engine-facing ---------------------------------------------------
     def before_write(self, leaf_id: int, rows=None) -> float:
         """Proactive synchronization hook. Returns stall seconds."""
@@ -334,6 +371,8 @@ class Snapshotter:
             backend=make_staging(self.backend, table, self.provider),
         )
         snap.fork_start = fork_start
+        snap.metrics.total_blocks = table.n_blocks
+        snap.metrics.policy_mode = "delta" if incremental else "full"
         if incremental:
             self._mark_clean_blocks(snap, base or self._last_snap)
         return snap

@@ -39,9 +39,10 @@ def mirror_flags(table: BlockTable, leaf_id: int,
     (:meth:`BlockTable.leaf_states`) — the seed looped ``table.state`` per
     block, paying O(n_blocks) lock round-trips per kernel launch.
 
-    ``force_uncopied`` re-opens one block (the caller holds it in COPYING —
-    the trylock — so its table state would otherwise make the kernel skip
-    the very block being staged).
+    ``force_uncopied`` re-opens one block a caller holds in COPYING (the
+    trylock) so the kernel won't skip it. ``DeviceStaging._stage_ids``
+    forces its own (possibly multi-block) set instead; the parameter
+    remains for single-block callers taking ad-hoc mirrors.
     """
     flags = table.leaf_states(leaf_id)
     if force_uncopied is not None:
@@ -60,6 +61,14 @@ class StagingBackend:
 
     def stage_block(self, ref: BlockRef) -> None:  # pragma: no cover
         raise NotImplementedError
+
+    def stage_run(self, refs: Sequence[BlockRef]) -> None:
+        """Stage a contiguous same-leaf run. Caller holds every block of
+        the run in COPYING state. Default: per-block stages; both concrete
+        backends override with one data movement per run (the run-aware
+        proactive sync path, DESIGN.md §8)."""
+        for r in refs:
+            self.stage_block(r)
 
     def staged_block(self, ref: BlockRef):  # pragma: no cover
         raise NotImplementedError
@@ -110,6 +119,22 @@ class HostStaging(StagingBackend):
             self.provider.read_block_into(
                 ref, buf[0:1].reshape(()) if buf.ndim else buf
             )
+
+    def stage_run(self, refs: Sequence[BlockRef]) -> None:
+        """One memcpy for the whole contiguous row range of the run —
+        adjacent blocks occupy adjacent rows of the leaf and of the
+        staging buffer, so a synthetic ref spanning the run reads it all
+        in a single ``read_block_into``."""
+        h = self.table.leaf_handles[refs[0].leaf_id]
+        if len(refs) == 1 or not h.shape:
+            for r in refs:
+                self.stage_block(r)
+            return
+        buf = self._leaf_staging(refs[0].leaf_id)
+        start, stop = refs[0].start, refs[-1].stop
+        span = BlockRef(refs[0].leaf_id, refs[0].block_id, start, stop,
+                        sum(r.nbytes for r in refs))
+        self.provider.read_block_into(span, buf[start:stop])
 
     def staged_block(self, ref: BlockRef) -> np.ndarray:
         buf = self._staging[ref.leaf_id]
@@ -183,17 +208,28 @@ class DeviceStaging(StagingBackend):
         return dst
 
     def stage_block(self, ref: BlockRef) -> None:
-        h = self.table.leaf_handles[ref.leaf_id]
+        self._stage_ids(ref.leaf_id, [ref.block_id])
+
+    def stage_run(self, refs: Sequence[BlockRef]) -> None:
+        """ONE snapcopy launch staging every block of the run — the
+        run-aware proactive sync path: a large batched write's touched
+        set costs one kernel round-trip instead of ``len(refs)``."""
+        self._stage_ids(refs[0].leaf_id, [r.block_id for r in refs])
+
+    def _stage_ids(self, leaf_id: int, block_ids: Sequence[int]) -> None:
+        h = self.table.leaf_handles[leaf_id]
         g = h.geometry()
-        self._ensure(ref.leaf_id)
+        self._ensure(leaf_id)
+        ids = np.asarray(block_ids, dtype=np.int64)
 
         def _stage(leaf):
-            # A block copied opportunistically by an earlier launch already
-            # holds final T0 content (it was UNCOPIED under this same lock
-            # when copied) — the official stage is then a no-op, which
-            # makes total staging work O(leaf) instead of one full-leaf
-            # kernel round-trip per block.
-            if self._staged[ref.leaf_id][ref.block_id]:
+            # Blocks copied opportunistically by an earlier launch already
+            # hold final T0 content (they were UNCOPIED under this same
+            # lock when copied) — their official stage is then a no-op,
+            # which makes total staging work O(leaf) instead of one
+            # full-leaf kernel round-trip per block.
+            want = ids[~self._staged[leaf_id][ids]]
+            if want.size == 0:
                 return
             # The flag mirror MUST be taken under the leaf lock: only there
             # does UNCOPIED provably imply live-content == T0 (a parent
@@ -201,24 +237,23 @@ class DeviceStaging(StagingBackend):
             # block before the donated update commits). A mirror taken
             # earlier could see a block as UNCOPIED that a peer has since
             # staged and the parent has since overwritten.
-            host_flags = mirror_flags(
-                self.table, ref.leaf_id, force_uncopied=ref.block_id
-            )
+            host_flags = mirror_flags(self.table, leaf_id)
             # Blocks already sitting in dst (staged or opportunistically
             # copied on an earlier launch) are skipped: their content is
             # final T0, and recopying them every launch would make staging
-            # O(n_blocks^2) in kernel copy work.
-            already = self._staged[ref.leaf_id]
+            # O(n_blocks^2) in kernel copy work. The caller holds every
+            # ``want`` block in COPYING — force those open for the kernel.
+            already = self._staged[leaf_id]
             host_flags[already] = int(BlockState.COPIED)
-            host_flags[ref.block_id] = int(BlockState.UNCOPIED)
+            host_flags[want] = int(BlockState.UNCOPIED)
             src = to_blocked(leaf, g.n_blocks, g.block_elems)
-            new_dst, _ = snapcopy_op(src, self._dst[ref.leaf_id],
+            new_dst, _ = snapcopy_op(src, self._dst[leaf_id],
                                      flags_to_device(host_flags))
             new_dst.block_until_ready()  # copy must finish before unlock
-            self._dst[ref.leaf_id] = new_dst
-            self._staged[ref.leaf_id] |= host_flags == int(BlockState.UNCOPIED)
+            self._dst[leaf_id] = new_dst
+            self._staged[leaf_id] |= host_flags == int(BlockState.UNCOPIED)
 
-        self.provider.with_leaf(ref.leaf_id, _stage)
+        self.provider.with_leaf(leaf_id, _stage)
 
     def staged_block(self, ref: BlockRef):
         h = self.table.leaf_handles[ref.leaf_id]

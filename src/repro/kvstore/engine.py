@@ -12,11 +12,12 @@ from __future__ import annotations
 import dataclasses
 import math
 import time
-from typing import Dict, List, Optional, Tuple, Union
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 from repro.core.coordinator import CoordinatedSnapshot, ShardedSnapshotCoordinator
+from repro.core.policy import BgsavePolicy
 from repro.core.sinks import NullSink, Sink
 from repro.core.snapshot import SnapshotHandle, make_snapshotter
 from repro.kvstore.store import KVStore, ShardedKVStore
@@ -50,16 +51,22 @@ class EngineReport:
 
     def summary(self) -> Dict[str, float]:
         tput = self._full_buckets()
+        # Per-snapshot summaries may report heterogeneous keys: under a
+        # BgsavePolicy, shards that skipped an epoch contribute minimal
+        # zero-copy records, so every roll-up merges with defaults instead
+        # of assuming a uniform schema (a skip must never KeyError here).
+        mets = self.snapshot_metrics
         return {
             "normal_p99_ms": self._pct(self.normal_lat, 99) * 1e3,
             "normal_max_ms": float(self.normal_lat.max() * 1e3) if self.normal_lat.size else float("nan"),
             "snap_p99_ms": self._pct(self.snapshot_lat, 99) * 1e3,
             "snap_max_ms": float(self.snapshot_lat.max() * 1e3) if self.snapshot_lat.size else float("nan"),
             "min_tput_qps": float(tput.min() / 0.05) if tput.size else float("nan"),
-            "interruptions": float(sum(m["interruptions"] for m in self.snapshot_metrics)),
-            "out_of_service_ms": float(sum(m["out_of_service_ms"] for m in self.snapshot_metrics)),
-            "fork_ms": float(np.mean([m["fork_ms"] for m in self.snapshot_metrics])) if self.snapshot_metrics else float("nan"),
-            "copy_window_ms": float(np.mean([m["copy_window_ms"] for m in self.snapshot_metrics])) if self.snapshot_metrics else float("nan"),
+            "interruptions": float(sum(m.get("interruptions", 0.0) for m in mets)),
+            "out_of_service_ms": float(sum(m.get("out_of_service_ms", 0.0) for m in mets)),
+            "fork_ms": float(np.mean([m.get("fork_ms", 0.0) for m in mets])) if mets else float("nan"),
+            "copy_window_ms": float(np.mean([m.get("copy_window_ms", 0.0) for m in mets])) if mets else float("nan"),
+            "skipped_shards": float(sum(m.get("skipped_shards", 0.0) for m in mets)),
             "shards": float(self.n_shards),
         }
 
@@ -77,6 +84,7 @@ class KVEngine:
         backend: str = "host",
         incremental: bool = False,
         persist_workers: Optional[int] = None,
+        policy: Optional[BgsavePolicy] = None,
     ):
         """``backend`` selects the staging substrate ("host" numpy or
         "device" Pallas-kernel staging); ``incremental=True`` makes every
@@ -85,10 +93,13 @@ class KVEngine:
 
         A :class:`ShardedKVStore` routes everything through a
         :class:`ShardedSnapshotCoordinator`; ``persist_workers`` sizes its
-        shared persist pool (default: one per shard)."""
+        shared persist pool (default: one per shard). ``policy`` (a
+        :class:`BgsavePolicy`, sharded stores only) replaces the global
+        ``incremental`` flag with per-shard full/delta/skip decisions."""
         self.store = store
         self.mode = mode
-        self.n_shards = getattr(store, "n_shards", 1)
+        self._copier_threads = max(1, copier_threads)
+        self._auto_duty = copier_duty is None
         if copier_duty is None:
             # single-core host: cap child-side core steal at ~30% for one
             # shard, split across that shard's threads (each added thread
@@ -112,13 +123,15 @@ class KVEngine:
             copier_threads=copier_threads,
             copier_duty=copier_duty,
             backend=backend,
-            retain_images=self.incremental,
+            retain_images=self.incremental or policy is not None,
         )
         if self.n_shards > 1:
             self.snapshotter = None
             self.coordinator = ShardedSnapshotCoordinator(
                 store.providers, mode=mode,
-                persist_workers=persist_workers, **snapshotter_kw,
+                persist_workers=persist_workers,
+                layout=getattr(store, "layout", None),
+                policy=policy, **snapshotter_kw,
             )
             self._gate = self.coordinator.write_gate
             self._write_hook = (
@@ -126,6 +139,8 @@ class KVEngine:
                 self.coordinator.before_write(shard_id, leaf_id, rows)
             )
         else:
+            if policy is not None:
+                raise ValueError("BgsavePolicy needs a ShardedKVStore")
             self.coordinator = None
             self.snapshotter = make_snapshotter(
                 mode, store.provider,
@@ -137,6 +152,73 @@ class KVEngine:
                 lambda leaf_id, rows=None:
                 self.snapshotter.before_write(leaf_id, rows)
             )
+
+    @property
+    def n_shards(self) -> int:
+        """Shard count under the store's CURRENT layout (resharding moves
+        it mid-run, so nothing caches it)."""
+        return getattr(self.store, "n_shards", 1)
+
+    # -- online resharding ------------------------------------------------
+    def split(self, shard_id: int, at_block: Optional[int] = None):
+        """Split a shard online: store split + coordinator layout swap as
+        one atomic step under the write gate, so a concurrent BGSAVE
+        barrier either completes first or sees the new layout whole —
+        never a half-swapped one (DESIGN.md §8). Queries stall for at most
+        one gate interval. Must run on the serving thread (the paper's
+        single-threaded parent; ``run(actions=...)`` fires it there) — the
+        gate serializes against barriers, not against a query batch whose
+        routing was already resolved. Returns the successor layout."""
+        if self.coordinator is None:
+            raise ValueError("resharding needs a ShardedKVStore engine")
+        with self.coordinator.write_gate:
+            layout = self.store.split(shard_id, at_block)
+            self.coordinator.set_layout(self.store.providers, layout)
+            self._retune_duty()
+        return layout
+
+    def merge(self, shard_id: int, other: int):
+        """Merge adjacent shards online (same gate discipline as split)."""
+        if self.coordinator is None:
+            raise ValueError("resharding needs a ShardedKVStore engine")
+        with self.coordinator.write_gate:
+            layout = self.store.merge(shard_id, other)
+            self.coordinator.set_layout(self.store.providers, layout)
+            self._retune_duty()
+        return layout
+
+    def _retune_duty(self) -> None:
+        """After a reshard, re-derive the default 1/sqrt(N) per-shard
+        copier budget for the NEW shard count — snapshotters created by
+        the layout swap would otherwise inherit the construction-time
+        duty and overshoot the aggregate core-steal budget. A caller who
+        pinned ``copier_duty`` explicitly keeps their value."""
+        if self._auto_duty:
+            self.coordinator.set_copier_duty(
+                0.3 / self._copier_threads / math.sqrt(max(1, self.n_shards))
+            )
+
+    def load(self, directory: str) -> None:
+        """Restore a snapshot into the store's current layout, safely.
+
+        The raw ``ShardedKVStore.load`` rebinds blocks WITHOUT routing
+        through ``before_write``, which would silently break the policy's
+        zero-write skip proof, any retained dirty-diff base, AND any
+        in-flight epoch's point-in-time cut — so this wrapper refuses to
+        run while epochs are active (``wait_all()`` first), then holds
+        the write gate and invalidates every retained base: the next
+        epoch per shard is a full snapshot."""
+        if self.coordinator is None:
+            raise ValueError("load() needs a ShardedKVStore engine")
+        with self.coordinator.write_gate:
+            if self.coordinator.has_active_epochs():
+                raise RuntimeError(
+                    "cannot load() with snapshot epochs in flight — their "
+                    "point-in-time cut would mix pre- and post-load bytes; "
+                    "call coordinator.wait_all() first"
+                )
+            self.store.load(directory)
+            self.coordinator.invalidate_bases()
 
     def _default_sinks(self):
         """One paced NullSink per shard — the cluster model gives each
@@ -173,16 +255,25 @@ class KVEngine:
         duration_s: float,
         bgsave_at: Tuple[float, ...] = (0.25,),
         sink_factory=None,
+        actions: Optional[Sequence[Tuple[float, Callable[[], None]]]] = None,
     ) -> EngineReport:
         """Drive the open-loop stream; BGSAVE at given fractions of the run.
 
         For a sharded engine ``sink_factory`` takes the shard id and is
-        called once per shard per BGSAVE."""
+        called once per shard per BGSAVE. ``actions`` are extra inline
+        ``(fraction, callable)`` triggers on the serving thread — e.g. a
+        reshard (``lambda: self.split(0)``) landing mid-snapshot; like the
+        paper's fork they stall the parent for exactly their own duration.
+        """
         store = self.store
         store.warmup(batch=workload.batch)
         events = workload.events(store.capacity, duration_s)
         vals_pool = np.random.rand(64, workload.batch, store.row_width).astype(np.float32)
         bgsave_times = sorted(f * duration_s for f in bgsave_at)
+        pending_actions = sorted(
+            [(f * duration_s, fn) for f, fn in (actions or [])],
+            key=lambda t: t[0],  # callables don't order
+        )
         windows: List[Union[SnapshotHandle, CoordinatedSnapshot]] = []
 
         lat: List[Tuple[float, float]] = []  # (arrival, latency)
@@ -195,6 +286,10 @@ class KVEngine:
                 windows.append(self._bgsave_from_factory(sink_factory))
                 bg_i += 1
                 now = time.perf_counter() - t0
+            while pending_actions and now >= pending_actions[0][0]:
+                _, fn = pending_actions.pop(0)
+                fn()
+                now = time.perf_counter() - t0
             if ev.t > now:
                 time.sleep(ev.t - now)
             if ev.op == "set":
@@ -203,6 +298,13 @@ class KVEngine:
             else:
                 store.get(ev.rows)
             lat.append((ev.t, (time.perf_counter() - t0) - ev.t))
+        # actions scheduled at/after the last event arrival must still
+        # fire (a silent no-op would fake e.g. a reshard measurement)
+        for t_act, fn in pending_actions:
+            now = time.perf_counter() - t0
+            if t_act > now:
+                time.sleep(t_act - now)
+            fn()
         run_end = time.perf_counter() - t0
 
         # classify: snapshot queries arrive in [fork_start, persist_done].

@@ -12,14 +12,17 @@ redis-benchmark's integer key space does.
 from __future__ import annotations
 
 import contextlib
+import re
 from functools import partial
-from typing import Callable, List, Optional
+from typing import Callable, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.layout import ShardLayout
 from repro.core.provider import PyTreeProvider
+from repro.core.sinks import read_file_snapshot, read_snapshot_layout
 
 _NO_GATE = contextlib.nullcontext()
 
@@ -58,6 +61,30 @@ class KVStore:
             )
         # list pytree: leaf b <-> block b (one "PMD + PTE table" per leaf)
         self.provider = PyTreeProvider({"blocks": blocks})
+
+    @classmethod
+    def from_blocks(
+        cls, blocks: Sequence, row_width: int, block_rows: int
+    ) -> "KVStore":
+        """Wrap EXISTING device blocks in a new store (zero data movement).
+
+        The reshard primitive: a split hands each child the same
+        ``jax.Array`` objects the parent shard held, under a fresh
+        provider — in-flight snapshot epochs keep reading the buffers
+        through the old provider while new writes route (and donate)
+        through this one, protected by the same proactive-sync contract.
+        """
+        self = cls.__new__(cls)
+        self.block_rows = int(block_rows)
+        self.n_blocks = len(blocks)
+        self.capacity = self.n_blocks * self.block_rows
+        self.row_width = int(row_width)
+        self.provider = PyTreeProvider({"blocks": list(blocks)})
+        return self
+
+    def blocks_list(self) -> List:
+        """The live device blocks, in block order."""
+        return [self.provider.leaf(b) for b in range(self.n_blocks)]
 
     @property
     def block_nbytes(self) -> int:
@@ -124,18 +151,37 @@ class KVStore:
         self.get(rows)
 
 
-class ShardedKVStore:
-    """Range-partitioned union of N independent :class:`KVStore` shards.
+_SHARD_LEAF_RE = re.compile(r"^shard(\d+)/blocks/(\d+)$")
 
-    The cluster analogue of the paper's single instance: shard k owns rows
-    ``[k*shard_capacity, (k+1)*shard_capacity)``, each with its own blocked
-    value table and provider, so the snapshot coordinator can give every
-    shard its own block table, copiers, and persist stream. Routing is a
-    contiguous range split (redis-cluster's hash slots collapse to ranges
-    under the integer key space redis-benchmark uses).
+
+class ShardedKVStore:
+    """Range-partitioned union of N independent :class:`KVStore` shards
+    under a versioned :class:`~repro.core.layout.ShardLayout`.
+
+    The cluster analogue of the paper's single instance: shard k owns the
+    global row range ``[layout.bounds[k], layout.bounds[k+1]) *
+    block_rows``, each with its own blocked value table and provider, so
+    the snapshot coordinator can give every shard its own block table,
+    copiers, and persist stream. Routing is one vectorized
+    ``np.searchsorted`` over the layout's row boundaries (redis-cluster's
+    hash slots collapse to ranges under the integer key space
+    redis-benchmark uses), grouping a whole query batch per shard in one
+    pass.
+
+    :meth:`split` / :meth:`merge` reshard ONLINE with zero data movement:
+    child shards wrap the parent's device blocks under fresh providers and
+    the layout advances one epoch. Concurrency contract: the write gate
+    serializes a reshard against snapshot BARRIERS only — ``set``/``get``
+    route and resolve shard objects outside the gate (they take it per
+    block), so a reshard must additionally be serialized against writers:
+    issue it from the serving thread itself (the paper's single-threaded
+    parent model; ``KVEngine.run(actions=...)`` does exactly this) or
+    quiesce writers first. A reshard landing mid-batch on another thread
+    would let the batch's tail write through the retired parent store.
 
     ``before_write`` hooks gain a leading ``shard_id``:
-    ``before_write(shard_id, leaf_id, local_rows)``.
+    ``before_write(shard_id, leaf_id, local_rows)``; indices are under the
+    CURRENT layout (the coordinator translates for retired layouts).
     """
 
     def __init__(
@@ -146,16 +192,24 @@ class ShardedKVStore:
         seed: int = 0,
         shards: int = 2,
     ):
-        self.n_shards = max(1, int(shards))
-        per = -(-int(capacity) // self.n_shards)
+        n_shards = max(1, int(shards))
+        per = -(-int(capacity) // n_shards)
         self.shards: List[KVStore] = [
             KVStore(per, row_width=row_width, block_rows=block_rows, seed=seed + k)
-            for k in range(self.n_shards)
+            for k in range(n_shards)
         ]
-        self.shard_capacity = self.shards[0].capacity
-        self.capacity = self.shard_capacity * self.n_shards
         self.row_width = int(row_width)
         self.block_rows = int(block_rows)
+        self.layout = ShardLayout.uniform([s.n_blocks for s in self.shards])
+        self._refresh_bounds()
+
+    def _refresh_bounds(self) -> None:
+        self._row_bounds = self.layout.row_bounds(self.block_rows)
+        self.capacity = int(self._row_bounds[-1])
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.shards)
 
     @property
     def block_nbytes(self) -> int:
@@ -169,29 +223,35 @@ class ShardedKVStore:
     def providers(self):
         return [s.provider for s in self.shards]
 
+    # -- routing (vectorized over the layout boundaries) -----------------
     def _route(self, rows: np.ndarray):
+        """Yield ``(shard_id, local_rows, positions)`` per touched shard —
+        one ``searchsorted`` + one stable argsort for the whole batch
+        instead of a Python-level scan per row."""
         rows = np.asarray(rows)
-        sids = rows // self.shard_capacity
-        for k in np.unique(sids):
-            yield int(k), rows[sids == k] - k * self.shard_capacity
+        if rows.size == 0:
+            return
+        sids = np.searchsorted(self._row_bounds, rows, side="right") - 1
+        order = np.argsort(sids, kind="stable")
+        sorted_sids = sids[order]
+        uniq, starts = np.unique(sorted_sids, return_index=True)
+        bounds = np.append(starts[1:], rows.shape[0])
+        for u, s, e in zip(uniq, starts, bounds):
+            pos = order[s:e]
+            yield int(u), rows[pos] - int(self._row_bounds[u]), pos
 
     def set(self, rows, vals, before_write=None, gate=None) -> None:
         vals = np.asarray(vals)
         rows = np.asarray(rows)
-        sids = rows // self.shard_capacity
-        for k in np.unique(sids):
-            mask = sids == k
+        for k, local, pos in self._route(rows):
             hook = None
             if before_write is not None:
-                hook = (lambda leaf_id, lrows, _k=int(k):
+                hook = (lambda leaf_id, lrows, _k=k:
                         before_write(_k, leaf_id, lrows))
-            self.shards[int(k)].set(
-                rows[mask] - int(k) * self.shard_capacity, vals[mask],
-                before_write=hook, gate=gate,
-            )
+            self.shards[k].set(local, vals[pos], before_write=hook, gate=gate)
 
     def get(self, rows) -> np.ndarray:
-        outs = [self.shards[k].get(local) for k, local in self._route(rows)]
+        outs = [self.shards[k].get(local) for k, local, _ in self._route(rows)]
         return (np.concatenate(outs) if outs
                 else np.empty((0, self.row_width), np.float32))
 
@@ -201,3 +261,88 @@ class ShardedKVStore:
     def warmup(self, batch: int = 4) -> None:
         for s in self.shards:
             s.warmup(batch)
+
+    # -- online resharding ------------------------------------------------
+    def split(self, shard_id: int, at_block: Optional[int] = None) -> ShardLayout:
+        """Split shard ``shard_id`` at a block boundary (default midpoint).
+
+        Zero-copy: both children wrap the parent's device blocks. Returns
+        the successor layout (``epoch + 1``). Callers running snapshots
+        must swap the coordinator too (``coordinator.set_layout``) under
+        the write gate — ``KVEngine.split`` packages both."""
+        src = self.shards[shard_id]
+        new_layout = self.layout.split(shard_id, at_block)  # validates
+        at = new_layout.bounds[shard_id + 1] - new_layout.bounds[shard_id]
+        blocks = src.blocks_list()
+        left = KVStore.from_blocks(blocks[:at], self.row_width, self.block_rows)
+        right = KVStore.from_blocks(blocks[at:], self.row_width, self.block_rows)
+        self.shards[shard_id: shard_id + 1] = [left, right]
+        self.layout = new_layout
+        self._refresh_bounds()
+        return self.layout
+
+    def merge(self, shard_id: int, other: int) -> ShardLayout:
+        """Merge ADJACENT shards ``shard_id`` and ``other == shard_id+1``
+        into one (zero-copy). Returns the successor layout."""
+        new_layout = self.layout.merge(shard_id, other)  # validates
+        blocks = self.shards[shard_id].blocks_list() + \
+            self.shards[other].blocks_list()
+        merged = KVStore.from_blocks(blocks, self.row_width, self.block_rows)
+        self.shards[shard_id: other + 1] = [merged]
+        self.layout = new_layout
+        self._refresh_bounds()
+        return self.layout
+
+    # -- cross-layout restore ---------------------------------------------
+    def load(self, directory: str) -> None:
+        """Restore a composite snapshot written under ANY historical
+        layout into the CURRENT one (re-split/re-merge on restore).
+
+        The snapshot's shard ranges are contiguous and ordered, so its
+        ``shard{k}/blocks/{b}`` leaves concatenate to the global block
+        sequence; the manifest's layout record (when present) validates
+        the geometry. Blocks are rebound into the current shards' live
+        providers (plain rebinds, no donation) — do not call while a
+        snapshot epoch is in flight over this store, and note the rebinds
+        do NOT route through ``before_write``: a coordinator's write
+        counters and retained dirty-diff bases become stale, so policy
+        users must go through ``KVEngine.load`` (gate + base
+        invalidation) instead of calling this directly.
+        """
+        flat = read_file_snapshot(directory)
+        keyed = {}
+        for path, arr in flat.items():
+            m = _SHARD_LEAF_RE.match(path)
+            if m:
+                keyed[(int(m.group(1)), int(m.group(2)))] = arr
+        if not keyed:
+            raise ValueError(
+                f"snapshot {directory!r} holds no shard{{k}}/blocks/{{b}} "
+                "leaves; not a sharded KV snapshot"
+            )
+        record = read_snapshot_layout(directory)
+        if record is not None and record.get("kind") == "range":
+            saved = ShardLayout.from_record(record)
+            if saved.n_blocks != self.layout.n_blocks:
+                raise ValueError(
+                    f"snapshot covers {saved.n_blocks} blocks, store has "
+                    f"{self.layout.n_blocks}"
+                )
+        # global block order = (shard, local block) lexicographic
+        global_blocks = [keyed[key] for key in sorted(keyed)]
+        if len(global_blocks) != self.layout.n_blocks:
+            raise ValueError(
+                f"snapshot holds {len(global_blocks)} blocks, store needs "
+                f"{self.layout.n_blocks}"
+            )
+        g = 0
+        for store in self.shards:
+            for b in range(store.n_blocks):
+                arr = global_blocks[g]
+                if arr.shape != (self.block_rows, self.row_width):
+                    raise ValueError(
+                        f"block {g} has shape {arr.shape}, expected "
+                        f"{(self.block_rows, self.row_width)}"
+                    )
+                store.provider.update_leaf(b, jnp.asarray(arr))
+                g += 1
