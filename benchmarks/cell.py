@@ -7,10 +7,174 @@ import json
 import sys
 
 
+def run_gate_contention(spec):
+    """Multi-writer contention harness (PR 5): K writer threads hammer an
+    N-shard store through the write gates while CONSECUTIVE BGSAVE fork
+    barriers (paper §5.2, high-frequency snapshots) land mid-run.
+
+    The workload is deliberately skewed — writer 0 is a HOT writer
+    pounding shard 0 with large batches, the rest are quiet small-batch
+    writers confined to the other shards — because that is exactly the
+    shape where the global gate hurts: every epoch re-write-protects the
+    hot shard, so its writes keep paying large proactive-sync stalls
+    (big blocks, GIL-releasing memcpys), and under one global lock the
+    QUIET shards' writers queue behind every one of them. ``striped``
+    toggles per-shard gate stripes vs the single aliased global lock
+    (identical code path, only lock granularity differs); the headline
+    metric is the quiet writers' p99 write latency inside the snapshot
+    windows vs outside them."""
+    import threading
+    import time
+
+    import numpy as np
+
+    from repro.kvstore import KVEngine, ShardedKVStore, Workload
+
+    capacity = int(spec["size_mb"] * (1 << 20) / (4 * spec.get("row_width", 256)))
+    shards = int(spec.get("shards", 2))
+    writers = max(2, int(spec.get("writers", 4)))
+    duration = float(spec.get("duration", 10.0))
+    store = ShardedKVStore(
+        capacity,
+        row_width=spec.get("row_width", 256),
+        block_rows=spec.get("block_rows", 4096),
+        seed=0,
+        shards=shards,
+    )
+    eng = KVEngine(
+        store,
+        mode=spec.get("mode", "asyncfork"),
+        copier_threads=spec.get("threads", 1),
+        persist_bandwidth=spec.get("persist_bw"),
+        copier_duty=spec.get("duty", 1.0),
+        persist_workers=spec.get("persist_workers"),
+        striped_gates=bool(spec.get("striped", True)),
+    )
+    capacity = store.capacity  # post block-rounding
+    hot_span = int(store._row_bounds[1])  # writer 0 owns all of shard 0
+    hot = Workload(rate_qps=spec.get("hot_qps", 150), set_ratio=1.0,
+                   batch=spec.get("hot_batch", 256),
+                   clients=spec.get("clients", 50), seed=spec.get("seed", 1))
+    quiet = Workload(rate_qps=spec.get("qps", 150), set_ratio=1.0,
+                     batch=spec.get("batch", 16),
+                     clients=spec.get("clients", 50),
+                     seed=spec.get("seed", 1) + 1)
+    # BLOCK-ALIGNED writer spans: batches are slot-aligned within their
+    # span, so an unaligned span boundary would let batches straddle a
+    # block and trigger mid-run jit compiles for the split shapes —
+    # hundreds of ms of stall that has nothing to do with gating
+    # quiet spans are BLOCK-granular; when there are more quiet writers
+    # than quiet blocks (e.g. 7 writers over 4 blocks at 2 shards), pairs
+    # of writers share a block — deliberate: same-stripe writer-vs-writer
+    # contention is present in BOTH arms identically, so the
+    # striped-vs-global ratio still isolates what the global gate ADDS
+    # (it only deflates the ratio, never inflates it)
+    br = store.block_rows
+    nb = (capacity - hot_span) // br  # quiet blocks
+    nq = writers - 1
+    quiet_spans = []
+    for w in range(nq):
+        b0 = min((w * nb) // nq, nb - 1)
+        b1 = min(max(b0 + 1, ((w + 1) * nb) // nq), nb)
+        quiet_spans.append((hot_span + b0 * br, hot_span + b1 * br))
+    streams = hot.writer_streams(capacity, duration, 1,
+                                 spans=[(0, hot_span)])
+    streams += quiet.writer_streams(capacity, duration, writers - 1,
+                                    spans=quiet_spans)
+    # warm the scatter jits for BOTH batch shapes off-clock (workload keys
+    # are slot-aligned, so each query hits exactly one block and each
+    # batch size is one compiled shape)
+    for b in sorted({hot.batch, quiet.batch}):
+        store.warmup(batch=b)
+    pools = [np.random.rand(8, s[0].rows.size if s else 1, store.row_width)
+             .astype(np.float32) for s in streams]
+    lat = [[] for _ in range(writers)]  # (arrival, latency) per writer
+    start_bar = threading.Barrier(writers + 1)
+    t0_box = {}
+
+    def writer(w):
+        evs = streams[w]
+        start_bar.wait()
+        t0 = t0_box["t0"]
+        for i, ev in enumerate(evs):
+            now = time.perf_counter() - t0
+            if ev.t > now:
+                time.sleep(ev.t - now)
+            store.set(ev.rows, pools[w][i % 8],
+                      before_write=eng._write_hook, gate=eng._gate,
+                      on_gate_wait=eng._gate_wait_hook)
+            lat[w].append((ev.t, (time.perf_counter() - t0) - ev.t))
+
+    threads = [threading.Thread(target=writer, args=(w,))
+               for w in range(writers)]
+    for th in threads:
+        th.start()
+    t0_box["t0"] = time.perf_counter()
+    start_bar.wait()
+    # consecutive snapshots: a fresh barrier re-write-protects everything,
+    # so the hot shard keeps generating proactive-sync stalls all run long
+    first = float(spec.get("bgsave_at", 0.15))
+    every = float(spec.get("bgsave_every", 0.08))
+    snaps = []
+    frac = first
+    while frac < 0.95:
+        t0 = t0_box["t0"]
+        dt = frac * duration - (time.perf_counter() - t0)
+        if dt > 0:
+            time.sleep(dt)
+        snaps.append(eng.bgsave())
+        frac += every
+    for th in threads:
+        th.join(duration + 120)
+    for s in snaps:
+        s.wait_persisted(120)
+    t0 = t0_box["t0"]
+    spans_t = [(s.fork_start - t0, (s.t0 - t0) + s.metrics.persist_s)
+               for s in snaps]
+
+    def split(per_writer):
+        inside, outside = [], []
+        for per in per_writer:
+            for a, l in per:
+                if any(lo <= a <= hi for lo, hi in spans_t):
+                    inside.append(l)
+                else:
+                    outside.append(l)
+        return inside, outside
+
+    def p99_ms(x):
+        return float(np.percentile(np.array(x), 99) * 1e3) if x else float("nan")
+
+    all_in, all_out = split(lat)
+    quiet_in, quiet_out = split(lat[1:])
+    summs = [s.metrics.summary() for s in snaps]
+    return {
+        "striped": bool(spec.get("striped", True)),
+        "shards": shards,
+        "writers": writers,
+        "snapshots": len(snaps),
+        "writes": sum(len(per) for per in lat),
+        "writes_in_window": len(all_in),
+        "write_p99_in_ms": p99_ms(all_in),
+        "write_p99_out_ms": p99_ms(all_out),
+        "quiet_p99_in_ms": p99_ms(quiet_in),
+        "quiet_p99_out_ms": p99_ms(quiet_out),
+        "quiet_max_in_ms": float(max(quiet_in) * 1e3) if quiet_in else float("nan"),
+        "gate_wait_us": float(sum(s.get("gate_wait_us", 0.0) for s in summs)),
+        "gate_acquires": eng.coordinator.gates.wait_summary()["gate_acquires"],
+        "fork_ms": float(np.mean([s.get("fork_ms", 0.0) for s in summs])),
+        "copy_window_ms": float(np.mean([s.get("copy_window_ms", 0.0) for s in summs])),
+        "out_of_service_ms": float(sum(s.get("out_of_service_ms", 0.0) for s in summs)),
+    }
+
+
 def run(spec):
     import numpy as np
 
     from repro.kvstore import KVEngine, KVStore, ShardedKVStore, Workload
+
+    if spec.get("cell") == "gate_contention":
+        return run_gate_contention(spec)
 
     capacity = int(spec["size_mb"] * (1 << 20) / (4 * spec.get("row_width", 256)))
     shards = int(spec.get("shards", 1))

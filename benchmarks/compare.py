@@ -3,7 +3,17 @@
 Usage::
 
     python -m benchmarks.compare --new NEW.json [--cell persist_path]
-        [--max-regress 0.25] BASELINE.json [BASELINE2.json ...]
+        [--cell gate_contention ...] [--max-regress 0.25] [--floor 1.0]
+        BASELINE.json [BASELINE2.json ...]
+
+``--cell`` is a name prefix and may repeat — the gate then covers the
+union of the named cells (no ``--cell`` gates every ratio metric).
+``--floor`` additionally sets an ABSOLUTE lower bound on every gated
+ratio: the effective floor is ``max(baseline * (1 - max_regress),
+floor)``. Use it when the ratio has a semantic break-even — e.g.
+``gate_contention``'s striped-vs-global ratios mean "striping still
+wins" only while they stay above 1.0, no matter how lenient the
+committed baseline happens to be.
 
 Absolute microsecond numbers do not transfer between machines (the
 committed baselines come from the dev container, CI runs on shared
@@ -50,8 +60,9 @@ def load_rows(path: str) -> List[Dict]:
 def main(argv: List[str]) -> int:
     baselines: List[str] = []
     new_path = None
-    cell = None
+    cells: List[str] = []
     max_regress = 0.25
+    abs_floor = None
     it = iter(argv)
     for a in it:
         if a == "--new":
@@ -59,13 +70,17 @@ def main(argv: List[str]) -> int:
         elif a.startswith("--new="):
             new_path = a.split("=", 1)[1]
         elif a == "--cell":
-            cell = next(it)
+            cells.append(next(it))
         elif a.startswith("--cell="):
-            cell = a.split("=", 1)[1]
+            cells.append(a.split("=", 1)[1])
         elif a == "--max-regress":
             max_regress = float(next(it))
         elif a.startswith("--max-regress="):
             max_regress = float(a.split("=", 1)[1])
+        elif a == "--floor":
+            abs_floor = float(next(it))
+        elif a.startswith("--floor="):
+            abs_floor = float(a.split("=", 1)[1])
         else:
             baselines.append(a)
     if new_path is None or not baselines:
@@ -81,7 +96,7 @@ def main(argv: List[str]) -> int:
     failures, compared = [], 0
     for key, baseline_val in sorted(ref.items()):
         name, metric = key
-        if cell is not None and not name.startswith(cell):
+        if cells and not any(name.startswith(c) for c in cells):
             continue
         if key not in new:
             print(f"MISSING  {name} [{metric}] (baseline {baseline_val:.2f}x)")
@@ -89,6 +104,8 @@ def main(argv: List[str]) -> int:
             continue
         got = new[key]
         floor = baseline_val * (1.0 - max_regress)
+        if abs_floor is not None:
+            floor = max(floor, abs_floor)
         verdict = "OK" if got >= floor else "REGRESSED"
         compared += 1
         print(f"{verdict:9s}{name} [{metric}]: {got:.2f}x "
@@ -96,7 +113,7 @@ def main(argv: List[str]) -> int:
         if got < floor:
             failures.append(key)
     if compared == 0 and not failures:
-        print(f"no comparable ratio metrics for cell {cell!r}; nothing to gate")
+        print(f"no comparable ratio metrics for cells {cells!r}; nothing to gate")
     if failures:
         print(f"{len(failures)} regression(s) beyond {max_regress:.0%}")
         return 1

@@ -8,11 +8,15 @@ Instance sizes are scaled to this CPU container (32–256 MiB vs the paper's
 growth, interruption counts, out-of-service time, and the DEF > ODF >
 Async-fork latency ordering on snapshot queries.
 
-Usage: ``python -m benchmarks.run [cell ...] [--full] [--json PATH]``.
+Usage: ``python -m benchmarks.run [cell ...] [--full] [--json PATH]
+[--copier-duty X]``.
 Positional names select individual cells (e.g. ``persist_path``); with
 none, the whole suite runs. ``--json`` additionally writes the collected
 rows as a JSON trajectory artifact (CI uploads ``BENCH_3.json`` so future
-PRs have a perf baseline).
+PRs have a perf baseline). ``--copier-duty`` pins the per-shard copier
+duty in the scaling cells (``shard_scaling``, ``gate_contention``) for
+multi-core reruns — the single-core container default decays it
+1/sqrt(shards).
 """
 from __future__ import annotations
 
@@ -26,6 +30,11 @@ from benchmarks.harness import run_cell
 SIZES_MB = [32, 64, 128, 256]
 MODES = ["blocking", "cow", "asyncfork"]
 FAST = "--full" not in sys.argv
+# --copier-duty=X (ROADMAP "benchmarks at scale"): pin the per-shard
+# copier duty for the scaling cells instead of the engine's single-core
+# 1/sqrt(N) default — on a real multi-core host pass 1.0 to validate the
+# near-linear window shrink the cluster model predicts.
+DUTY_OVERRIDE = None
 
 _ROWS: list = []
 
@@ -307,7 +316,8 @@ def shard_scaling():
         # swamping the per-shard window gains
         r = run_cell({"mode": "asyncfork", "size_mb": 128, "duration": 6.0,
                       "qps": 100, "shards": shards, "threads": 1,
-                      "duty": None, "persist_workers": max(2, shards)})
+                      "duty": DUTY_OVERRIDE,
+                      "persist_workers": max(2, shards)})
         _row(f"shard_scaling/{shards}shards", r["copy_window_ms"] * 1e3,
              f"snap_p99_us={r['snap_p99_ms']*1e3:.0f};"
              f"snap_max_us={r['snap_max_ms']*1e3:.0f};"
@@ -341,6 +351,49 @@ def reshard_epoch():
     _row("reshard_epoch/p99_ratio", 0.0,
          f"split_over_baseline_p99="
          f"{r1['snap_p99_ms'] / max(1e-9, r0['snap_p99_ms']):.2f}")
+
+
+def gate_contention():
+    """New cell (PR 5): K writer threads × N shards through the write
+    gates, consecutive BGSAVE barriers landing mid-run. One HOT writer
+    pounds shard 0 with whole-block batches (every epoch re-write-protects
+    its blocks, so it keeps paying large proactive-sync stalls inside its
+    gate-held commits); seven QUIET small-batch writers live on the other
+    shards. The striped arm takes one gate stripe per touched shard; the
+    global arm aliases every stripe to one lock (PR-2 behavior) — so the
+    quiet writers' p99 inside the snapshot windows isolates exactly the
+    cross-shard serialization the global gate added. The gated ratio is
+    global-over-striped quiet p99 in-window (bigger = striping wins)."""
+    for shards in ([2, 4] if FAST else [2, 4, 8]):
+        arms = {}
+        for striped in (False, True):
+            # size scales with the shard count so per-shard geometry is
+            # fixed (16 MiB, four 4 MiB blocks per shard): each added
+            # shard adds an independent stripe, not a smaller shard
+            arms[striped] = run_cell({
+                "cell": "gate_contention", "size_mb": 16 * shards,
+                "duration": 8.0,
+                "shards": shards, "writers": 8, "threads": 1,
+                "duty": DUTY_OVERRIDE if DUTY_OVERRIDE is not None else 0.05,
+                "hot_qps": 15, "hot_batch": 8192, "qps": 140, "batch": 16,
+                "persist_bw": 3e7, "bgsave_at": 0.1, "bgsave_every": 0.08,
+                "striped": striped,
+            })
+        s, g = arms[True], arms[False]
+        ratio = g["quiet_p99_in_ms"] / max(1e-9, s["quiet_p99_in_ms"])
+        all_ratio = g["write_p99_in_ms"] / max(1e-9, s["write_p99_in_ms"])
+        wait_ratio = g["gate_wait_us"] / max(1e-9, s["gate_wait_us"])
+        _row(f"gate_contention/{shards}shards", s["quiet_p99_in_ms"] * 1e3,
+             f"global_quiet_p99_in_us={g['quiet_p99_in_ms']*1e3:.0f};"
+             f"striped_quiet_p99_out_us={s['quiet_p99_out_ms']*1e3:.0f};"
+             f"global_quiet_p99_out_us={g['quiet_p99_out_ms']*1e3:.0f};"
+             f"all_p99_ratio={all_ratio:.2f};"
+             f"striped_gate_wait_us={s['gate_wait_us']:.0f};"
+             f"global_gate_wait_us={g['gate_wait_us']:.0f};"
+             f"snapshots={s['snapshots']};"
+             f"writes_in_window={s['writes_in_window']};"
+             f"gate_wait_reduction={wait_ratio:.2f}x;"
+             f"striped_vs_global_p99={ratio:.2f}x")
 
 
 def persist_path():
@@ -450,6 +503,7 @@ CELLS = {
     "shard_scaling": shard_scaling,
     "reshard_epoch": reshard_epoch,
     "persist_path": persist_path,
+    "gate_contention": gate_contention,
 }
 
 
@@ -457,11 +511,16 @@ def main() -> None:
     json_path = None
     names = []
     argv = iter(sys.argv[1:])
+    global DUTY_OVERRIDE
     for a in argv:
         if a == "--json":
             json_path = next(argv, None)
         elif a.startswith("--json="):
             json_path = a.split("=", 1)[1]
+        elif a == "--copier-duty":
+            DUTY_OVERRIDE = float(next(argv))
+        elif a.startswith("--copier-duty="):
+            DUTY_OVERRIDE = float(a.split("=", 1)[1])
         elif not a.startswith("-"):
             names.append(a)
     unknown = [n for n in names if n not in CELLS]

@@ -15,10 +15,16 @@ from repro.core.coordinator import (
     CoordinatedSnapshot,
     ShardedSnapshotCoordinator,
 )
+from repro.core.gates import GateRetired, GateSet
 from repro.core.layout import ShardLayout
 from repro.core.metrics import SnapshotMetrics
 from repro.core.persist import PersistJob, PersistPipeline
-from repro.core.policy import BgsavePolicy, ShardEpochView, ShardPolicyState
+from repro.core.policy import (
+    BgsavePolicy,
+    ShardEpochView,
+    ShardPolicyState,
+    ShardWriteCounters,
+)
 from repro.core.provider import FailingProvider, PyTreeProvider
 from repro.core.sinks import (
     FileSink,
@@ -53,9 +59,12 @@ __all__ = [
     "CoordinatedSnapshot",
     "ShardedSnapshotCoordinator",
     "ShardLayout",
+    "GateSet",
+    "GateRetired",
     "BgsavePolicy",
     "ShardEpochView",
     "ShardPolicyState",
+    "ShardWriteCounters",
     "PersistJob",
     "PersistPipeline",
     "coalesce_refs",

@@ -27,23 +27,31 @@ our substrate: the state is partitioned into N shards, each owning its own
       ``incremental=`` flag; shards with zero writes since their last
       epoch take zero-copy "skip" epochs.
 
-Writers cooperate through :attr:`write_gate`: the engine holds the gate
-across ``before_write`` → donated-update-commit for each touched block
-(``KVStore.set(gate=...)`` does this), ``bgsave`` holds it across the
-barrier, and ``set_layout`` holds it across the swap. A single-threaded
-engine (the paper's Redis model) never contends.
+Writers cooperate through the STRIPED write gates (:attr:`gates`, a
+:class:`~repro.core.gates.GateSet`, one reentrant stripe per shard): a
+write holds only the touched shard's stripe across ``before_write`` →
+donated-update-commit for its whole routed batch
+(``ShardedKVStore.set(gate=...)`` does this, one acquisition per
+(shard, batch)), while barrier-class operations — ``bgsave``'s fork
+barrier, ``set_layout``, ``set_copier_duty``, ``invalidate_bases`` — take
+ALL stripes in deterministic index order (:attr:`write_gate`). The §6
+consistency argument generalizes stripe-wise: no commit *on shard k* can
+land between shard k's T0 stamp and barrier release, because the barrier
+holds stripe k for that whole interval (DESIGN.md §9). A single-threaded
+engine (the paper's Redis model) never contends; multi-writer engines
+only contend per shard.
 """
 from __future__ import annotations
 
 import math
 import os
-import threading
 import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
+from repro.core.gates import GateSet
 from repro.core.layout import ShardLayout
 from repro.core.persist import PersistPipeline
-from repro.core.policy import BgsavePolicy, ShardEpochView
+from repro.core.policy import BgsavePolicy, ShardEpochView, ShardWriteCounters
 from repro.core.provider import PyTreeProvider
 from repro.core.sinks import FileSink, NullSink, Sink, write_composite_manifest
 from repro.core.snapshot import SnapshotHandle, Snapshotter, make_snapshotter
@@ -138,6 +146,12 @@ class AggregateMetrics:
         return sum(1 for p in self._by_shard if p is None)
 
     @property
+    def gate_wait_s(self) -> float:
+        """Summed write-gate acquisition waits across shards (each lands
+        on some writer thread, so — like interruptions — they add)."""
+        return sum(p.metrics.gate_wait_s for p in self._parts)
+
+    @property
     def out_of_service_s(self) -> float:
         """Fig 20 analogue: one barrier stall + every parent-side copy
         stall (per-part out_of_service_s would re-count overlapping fork
@@ -191,6 +205,7 @@ class AggregateMetrics:
             "full_shards": float(sum(1 for m in self._modes if m == "full")),
             "delta_shards": float(sum(1 for m in self._modes if m == "delta")),
             "skipped_shards": float(self.skipped_shards),
+            "gate_wait_us": self.gate_wait_s * 1e6,
             "dirty_frac_mean": (sum(dirty) / len(dirty)) if dirty else float("nan"),
             "per_shard": per_shard,
         }
@@ -290,6 +305,7 @@ class ShardedSnapshotCoordinator:
         pipeline: Optional[PersistPipeline] = None,
         layout: Optional[ShardLayout] = None,
         policy: Optional[BgsavePolicy] = None,
+        striped_gates: bool = True,
         **snapshotter_kw,
     ):
         if not providers:
@@ -315,23 +331,24 @@ class ShardedSnapshotCoordinator:
         self.pipeline = pipeline
         for sn in self.snapshotters:
             sn.persist_pipeline = self.pipeline
-        self.write_gate = threading.RLock()
+        # one write-gate stripe per shard; striped_gates=False aliases
+        # them all to a single lock (the PR-2 global gate, kept as the
+        # gate_contention benchmark's baseline arm)
+        self.gates = GateSet(len(self.snapshotters), striped=striped_gates)
         self.layout = layout
         # epochs stamped under layouts that have since been replaced:
         # [(frozen layout, {old_shard_index: snapshotter})] — only the
         # shards whose interval changed; unchanged shards carry their
         # snapshotter (and its active epochs) into the new indexing
         self._retired: List[Tuple[ShardLayout, Dict[int, Snapshotter]]] = []
-        # writes since each shard's last T0 stamp (gate-serialized with
-        # the barrier, so ==0 at a barrier proves byte-identity — the
-        # policy's "skip" precondition), plus the DISTINCT blocks those
-        # writes touched (global ids under a range layout): the policy's
-        # dirty estimate for full epochs must not count a hot block once
-        # per write, or a write-skewed shard would pin its EMA at 1.0.
-        # Only maintained under a policy — the no-policy hot path pays
-        # nothing, and bgsave degrades explicit "skip" modes accordingly.
-        self._writes: List[int] = [0] * len(self.snapshotters)
-        self._touched: List[set] = [set() for _ in self.snapshotters]
+        # writes since each shard's last T0 stamp (slot k mutates only
+        # under stripe k; the barrier reads/resets under all stripes, so
+        # ==0 at a barrier still proves byte-identity — the policy's
+        # "skip" precondition, DESIGN.md §9), plus the DISTINCT blocks
+        # those writes touched. Only maintained under a policy — the
+        # no-policy hot path pays nothing, and bgsave degrades explicit
+        # "skip" modes accordingly.
+        self._counters = ShardWriteCounters(len(self.snapshotters))
         # last persisted (directory, epoch handle) per shard: the dir a
         # policy delta/skip may reference from a composite manifest, PLUS
         # the handle it holds — a sink-less bgsave advances the retained
@@ -346,28 +363,55 @@ class ShardedSnapshotCoordinator:
     def n_shards(self) -> int:
         return len(self.snapshotters)
 
+    @property
+    def write_gate(self):
+        """The ALL-gate barrier as a context manager — barrier-class
+        callers (``bgsave``, layout swaps, restores, duty retunes) and
+        legacy single-gate callers use ``with coord.write_gate:`` exactly
+        as before PR 5; it now takes every stripe in index order. Writers
+        on the hot path should hold only their shard's stripe instead
+        (:attr:`gates`; ``ShardedKVStore.set`` does)."""
+        return self.gates.all()
+
     # -- engine-facing ---------------------------------------------------
     def before_write(self, shard_id: int, leaf_id: int, rows=None) -> float:
         """Proactive synchronization for one shard's leaf. The caller must
-        hold :attr:`write_gate` across this call AND the donated update it
-        guards (``KVStore.set(gate=...)`` does); the gate is reentrant so
-        ``bgsave`` can run under it too.
+        hold shard ``shard_id``'s gate stripe across this call AND the
+        donated update it guards (``ShardedKVStore.set(gate=...)`` holds
+        it across the whole routed batch); the stripes are reentrant so a
+        caller holding the full barrier qualifies too.
 
         ``shard_id``/``leaf_id`` are indices under the CURRENT layout;
         epochs stamped under a retired layout are synchronized through the
         global block id (one leaf == one layout block)."""
         if self.policy is not None:
-            self._writes[shard_id] += 1
-            self._touched[shard_id].add(
+            self._counters.note(
+                shard_id,
                 leaf_id if self.layout is None
-                else self.layout.block_start(shard_id) + leaf_id
+                else self.layout.block_start(shard_id) + leaf_id,
             )
         total = self.snapshotters[shard_id].before_write(leaf_id, rows)
         if self._retired:
             total += self._sync_retired(shard_id, leaf_id, rows)
         return total
 
+    def note_gate_wait(self, shard_id: int, wait_s: float) -> None:
+        """Attribute one write's gate-acquisition wait to the shard's
+        in-flight epochs (caller just acquired — and still holds — stripe
+        ``shard_id``). Makes the striped-gate p99 claim observable from
+        the engine report: contention shows up as ``gate_wait_us`` in the
+        same per-shard summaries the copy stalls land in."""
+        if wait_s > 0.0:
+            self.snapshotters[shard_id].note_gate_wait(wait_s)
+
     def _sync_retired(self, shard_id: int, leaf_id: int, rows) -> float:
+        # Lock-free under striped gates: writers on different stripes may
+        # run this concurrently. Appends happen only under ALL stripes
+        # (set_layout), iteration binds the list object once, and
+        # active() is monotone (an epoch never un-finishes), so the worst
+        # a racing filter can do is briefly resurrect an already-drained
+        # group — whose next check drops it again. The per-block data
+        # movement below is the block table's own thread-safe machinery.
         g = self.layout.block_start(shard_id) + leaf_id
         total = 0.0
         live: List[Tuple[ShardLayout, Dict[int, Snapshotter]]] = []
@@ -436,17 +480,7 @@ class ShardedSnapshotCoordinator:
                 if any(sn.active() for sn in d.values())
             ]
             parents = layout.parents(old_layout)
-            self._writes = [
-                sum(self._writes[p] for p in parents[k])
-                for k in range(layout.n_shards)
-            ]
-            # touched sets hold GLOBAL block ids — re-bucket by new shard
-            all_touched = set().union(*self._touched) if self._touched else set()
-            self._touched = [
-                {g for g in all_touched
-                 if layout.bounds[k] <= g < layout.bounds[k + 1]}
-                for k in range(layout.n_shards)
-            ]
+            self._counters.remap(parents, layout.bounds)
             self._last_dirs = [
                 self._last_dirs[unchanged[k]] if k in unchanged else None
                 for k in range(layout.n_shards)
@@ -455,6 +489,10 @@ class ShardedSnapshotCoordinator:
                 self.policy.remap(parents, unchanged)
             self.snapshotters = new_sn
             self.layout = layout
+            # the stripe set follows the layout: unchanged shards keep
+            # their gate object, changed shards get fresh stripes created
+            # already-held so no writer slips in before this barrier exits
+            self.gates.resize(layout.n_shards, carry=unchanged)
 
     # -- policy ------------------------------------------------------------
     def _usable_base(self, sn: Snapshotter) -> Optional[SnapshotHandle]:
@@ -504,7 +542,7 @@ class ShardedSnapshotCoordinator:
             base = self._usable_base(sn)
             has_dir = self._recorded_dir(k) is not None
             view = ShardEpochView(
-                writes_since_epoch=self._writes[k],
+                writes_since_epoch=self._counters.writes[k],
                 has_base=base is not None and not (need_dirs and not has_dir),
                 base_persisted=base is not None and base.persist_done.is_set(),
                 can_skip=not need_dirs or has_dir,
@@ -523,8 +561,7 @@ class ShardedSnapshotCoordinator:
             for k, sn in enumerate(self.snapshotters):
                 sn.drop_retained()
                 self._last_dirs[k] = None
-                self._writes[k] = 0
-                self._touched[k] = set()
+                self._counters.reset(k)
 
     def _observe(self, modes: Sequence[str],
                  parts: Sequence[Optional[SnapshotHandle]],
@@ -558,11 +595,13 @@ class ShardedSnapshotCoordinator:
     ) -> CoordinatedSnapshot:
         """Consistent cross-shard BGSAVE.
 
-        Under the write gate: phase 1 prepares every shard (stamp T0 +
-        write-protect — after this, any write anywhere proactively syncs),
-        then phase 2 commits every shard (copiers + persist jobs start).
-        No write can commit between two shards' T0 stamps, so the union of
-        shard images is the state at one instant.
+        Under the ALL-gate barrier (every stripe, taken in index order):
+        phase 1 prepares every shard (stamp T0 + write-protect — after
+        this, any write anywhere proactively syncs), then phase 2 commits
+        every shard (copiers + persist jobs start). No write can commit
+        ON ANY SHARD between that shard's T0 stamp and barrier release
+        (its stripe is held the whole time), so the union of shard images
+        is the state at one instant (DESIGN.md §9).
 
         Mode precedence: explicit ``modes`` (one of "full"/"delta"/"skip"
         per shard) > ``bases`` (shard k is delta iff ``bases[k]``, used by
@@ -584,7 +623,9 @@ class ShardedSnapshotCoordinator:
             # the gate: a reshard racing the gate release must not attach
             # its successor layout to an epoch taken under the predecessor
             layout_at_barrier = self.layout
-            touched_at_barrier = [len(s) for s in self._touched]
+            touched_at_barrier = [
+                self._counters.touched_count(k) for k in range(self.n_shards)
+            ]
             decided_by_policy = False
             if modes is None:
                 if bases is not None:
@@ -620,7 +661,7 @@ class ShardedSnapshotCoordinator:
                         # manifest entry pointing at the previous epoch
                         # instead of a sink).
                         if base is None or self.policy is None or \
-                                self._writes[k] != 0 or durable_sink:
+                                self._counters.writes[k] != 0 or durable_sink:
                             modes[k] = ("full" if durable_sink or base is None
                                         else "delta")
                         else:
@@ -631,8 +672,7 @@ class ShardedSnapshotCoordinator:
                         incremental=modes[k] == "delta",
                         base=None if bases is None else bases[k],
                     ))
-                    self._writes[k] = 0
-                    self._touched[k] = set()
+                    self._counters.reset(k)
                 for k, sn in enumerate(self.snapshotters):
                     if parts[k] is None:
                         continue

@@ -1,0 +1,212 @@
+"""Striped write gates — one reentrant gate per shard, plus an ordered
+all-gate barrier.
+
+PR 2's write gate was a single global ``threading.RLock``: every write on
+every shard serialized against every other writer AND against any shard's
+fork barrier, proactive sync, or layout swap. That re-created the paper's
+out-of-service problem in miniature — snapshot machinery on one shard
+stalled the serving path on all of them. Fine-granular per-partition
+synchronization (Sharma et al.'s high-frequency virtual snapshotting,
+CIDER's per-object pessimistic locks) is how related systems keep
+snapshot bookkeeping off the hot path; :class:`GateSet` is that idea for
+our coordinator:
+
+  * **writers** take only the stripe of the shard they commit to
+    (:meth:`acquire`/``release`` on the returned gate) — writes to
+    different shards never contend;
+  * **barrier-class operations** (the BGSAVE fork barrier, ``set_layout``,
+    ``load``, ``set_copier_duty``) take ALL stripes in deterministic index
+    order (:meth:`all`) — the generalization of DESIGN.md §6: "no commit
+    *on shard k* between shard k's T0 stamp and barrier release";
+  * **layout swaps** resize the stripe set in place (:meth:`resize`,
+    called while the swapper holds all gates): unchanged shards keep their
+    gate object, changed shards get fresh gates created *already held* by
+    the swapping thread, and dropped gates are released at barrier exit so
+    writers blocked on them wake, fail validation, and re-route.
+
+Deadlock freedom: a writer holds at most ONE stripe at a time (a
+multi-shard batch commits shard groups sequentially, releasing between
+groups), and every all-gate acquirer takes stripes in ascending index
+order — no hold-and-wait cycle exists. Acquisition is epoch-validated:
+both paths re-check that the stripe list they snapshotted is still the
+live one after locking, and retry/raise otherwise, so a writer can never
+commit under a stripe that a concurrent reshard retired.
+
+``striped=False`` aliases every stripe to one shared lock — byte-for-byte
+the PR-2 global gate, kept as the baseline arm of the ``gate_contention``
+benchmark.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Dict, List, Optional, Tuple
+
+
+class GateRetired(RuntimeError):
+    """The requested stripe index no longer exists (a concurrent layout
+    swap shrank the gate set); the caller must re-route and retry."""
+
+
+class _AllGates:
+    """Context manager over :meth:`GateSet.acquire_all` — fresh per use so
+    ``with coord.write_gate:`` composes and nests (stripes are RLocks)."""
+
+    def __init__(self, gates: "GateSet"):
+        self._gates = gates
+
+    def __enter__(self) -> "GateSet":
+        self._gates.acquire_all()
+        return self._gates
+
+    def __exit__(self, *exc) -> None:
+        self._gates.release_all()
+
+
+class GateSet:
+    """N per-shard reentrant write gates with an ordered all-gate barrier,
+    in-place resizing across layout swaps, and per-stripe wait metering."""
+
+    def __init__(self, n_gates: int, striped: bool = True):
+        if n_gates < 1:
+            raise ValueError("need at least one gate")
+        self.striped = bool(striped)
+        if self.striped:
+            self._gates: List[threading.RLock] = [
+                threading.RLock() for _ in range(n_gates)
+            ]
+        else:
+            g = threading.RLock()  # the PR-2 global gate, aliased N ways
+            self._gates = [g] * n_gates
+        self._wait_s = [0.0] * n_gates
+        self._waits = [0] * n_gates
+        self._tl = threading.local()  # all-hold depth + dropped-gate debts
+
+    @property
+    def n_gates(self) -> int:
+        return len(self._gates)
+
+    # -- single-stripe path (writers) ------------------------------------
+    def acquire(self, k: int) -> Tuple[threading.RLock, float]:
+        """Acquire stripe ``k``; returns ``(gate, wait_seconds)`` — the
+        caller releases via ``gate.release()``. ``wait_seconds`` is 0.0
+        when the stripe was uncontended (non-blocking fast path), so it
+        measures actual CONTENTION, not acquire-call overhead.
+
+        Validated against concurrent resizes: if the stripe list changed
+        while we blocked, the (possibly retired) gate is released and the
+        acquisition retries against the live list. While the returned gate
+        is held the list CANNOT change (a resize needs all stripes), so
+        the caller may read layout-swapped state race-free. Raises
+        :class:`GateRetired` when ``k`` fell off the end of the set."""
+        t0 = time.perf_counter()
+        blocked = False
+        while True:
+            gates = self._gates
+            if k >= len(gates):
+                raise GateRetired(f"stripe {k} >= {len(gates)} gates")
+            g = gates[k]
+            if not g.acquire(blocking=False):
+                blocked = True
+                g.acquire()
+            if self._gates is gates:
+                wait = (time.perf_counter() - t0) if blocked else 0.0
+                # slot k is only written while holding stripe k
+                self._wait_s[k] += wait
+                self._waits[k] += 1
+                return g, wait
+            g.release()
+
+    # -- all-gate barrier -------------------------------------------------
+    def all(self) -> _AllGates:
+        return _AllGates(self)
+
+    def acquire_all(self) -> None:
+        """Take every stripe in ascending index order (reentrant)."""
+        while True:
+            gates = self._gates
+            uniq = list(dict.fromkeys(gates))  # striped=False aliases
+            for g in uniq:
+                g.acquire()
+            if self._gates is gates:
+                break
+            for g in reversed(uniq):
+                g.release()
+        tl = self._tl
+        tl.depth = getattr(tl, "depth", 0) + 1
+        if not hasattr(tl, "dropped"):
+            tl.dropped = []
+
+    def release_all(self) -> None:
+        """Release the CURRENT stripe list (which a nested :meth:`resize`
+        may have replaced since acquisition) plus one debt payment on each
+        gate a resize dropped — so writers blocked on retired stripes wake
+        exactly when the barrier that retired them exits."""
+        tl = self._tl
+        if getattr(tl, "depth", 0) < 1:
+            raise RuntimeError("release_all without matching acquire_all")
+        for g in reversed(list(dict.fromkeys(self._gates))):
+            g.release()
+        still = []
+        for debt in tl.dropped:
+            debt[0].release()
+            debt[1] -= 1
+            if debt[1] > 0:
+                still.append(debt)
+        tl.dropped = still
+        tl.depth -= 1
+
+    # -- resize (layout swaps) --------------------------------------------
+    def resize(self, n_gates: int, carry: Optional[Dict[int, int]] = None) -> None:
+        """Replace the stripe set for a resharded layout. Must be called
+        while holding all gates (:meth:`acquire_all`); the swap is only
+        visible to writers once this thread's outermost barrier releases.
+
+        ``carry`` maps ``{new_index: old_index}`` for shards whose block
+        interval is unchanged — they keep their gate object, so a writer
+        queued on that stripe contends with the right shard after the
+        swap. New stripes are created ALREADY HELD at the caller's current
+        barrier depth (a fresh unlocked gate would let a writer slip into
+        the critical section mid-swap); dropped stripes are recorded as
+        per-release debts paid off by :meth:`release_all`."""
+        tl = self._tl
+        depth = getattr(tl, "depth", 0)
+        if depth < 1:
+            raise RuntimeError("resize requires holding all gates")
+        old = self._gates
+        if not self.striped:
+            new = [old[0]] * n_gates
+        else:
+            carry = carry or {}
+            new = []
+            for k in range(n_gates):
+                p = carry.get(k)
+                if p is not None and 0 <= p < len(old):
+                    new.append(old[p])
+                else:
+                    g = threading.RLock()
+                    for _ in range(depth):
+                        g.acquire()
+                    new.append(g)
+        live = {id(g) for g in new}
+        for g in dict.fromkeys(old):
+            if id(g) not in live:
+                tl.dropped.append([g, depth])
+        self._wait_s = [
+            self._wait_s[carry[k]] if carry and k in carry else 0.0
+            for k in range(n_gates)
+        ] if self.striped else [0.0] * n_gates
+        self._waits = [
+            self._waits[carry[k]] if carry and k in carry else 0
+            for k in range(n_gates)
+        ] if self.striped else [0] * n_gates
+        self._gates = new
+
+    # -- observability -----------------------------------------------------
+    def wait_summary(self) -> Dict[str, float]:
+        """Cumulative per-write acquisition wait across current stripes
+        (stripes dropped by a resize take their counts with them)."""
+        return {
+            "gate_wait_us": sum(self._wait_s) * 1e6,
+            "gate_acquires": float(sum(self._waits)),
+        }

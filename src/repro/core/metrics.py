@@ -34,6 +34,8 @@ class SnapshotMetrics:
     inherited_blocks: int = 0         # clean blocks adopted from the base epoch
     total_blocks: int = 0             # block-table size at fork (dirty_frac denom)
     policy_mode: str = "full"         # "full" | "delta" (BgsavePolicy decision)
+    gate_wait_s: float = 0.0          # summed write-gate acquisition waits
+    gate_waits: int = 0               # gated writes that landed in this epoch
     aborted: bool = False
 
     def __post_init__(self):
@@ -44,6 +46,13 @@ class SnapshotMetrics:
         with self._lock:
             self.interruptions.append((t, dur_s, blocks))
             self.copied_blocks_parent += blocks
+
+    def record_gate_wait(self, wait_s: float) -> None:
+        """One write's gate-acquisition wait while this epoch was in
+        flight (striped gates: only same-shard contention ever waits)."""
+        with self._lock:
+            self.gate_wait_s += wait_s
+            self.gate_waits += 1
 
     @property
     def n_interruptions(self) -> int:
@@ -92,4 +101,6 @@ class SnapshotMetrics:
             "parent_copied_blocks": float(self.copied_blocks_parent),
             "child_copied_blocks": float(self.copied_blocks_child),
             "inherited_blocks": float(self.inherited_blocks),
+            "gate_wait_us": self.gate_wait_s * 1e6,
+            "gate_waits": float(self.gate_waits),
         }

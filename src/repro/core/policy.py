@@ -24,11 +24,14 @@ decides, at every fork barrier, one of three modes per shard:
     points at the previous epoch's shard directory. Skips do not advance
     the anchor clock (the restore chain does not grow).
 
-The skip-soundness argument lives in DESIGN.md §8: every write routes
-through ``before_write`` under the write gate, the counters reset under
-the same gate at each T0 stamp, and the gate is held across the whole
-barrier — so "counter == 0 at the barrier" implies byte-identity with the
-previous image.
+The skip-soundness argument lives in DESIGN.md §8 and survives the
+PR-5 striped write gates (DESIGN.md §9): every write to shard k routes
+through ``before_write`` while holding *shard k's gate stripe*
+(:class:`~repro.core.gates.GateSet`), shard k's counter
+(:class:`ShardWriteCounters`) mutates only under that stripe and resets
+under it at each T0 stamp, and the fork barrier holds ALL stripes — so
+"shard k's counter == 0 at the barrier" still implies byte-identity with
+the previous image, per shard, without any global serialization.
 
 Across a reshard the per-shard state follows :meth:`ShardLayout.parents`:
 an unchanged shard keeps its state; split children inherit the parent's
@@ -40,7 +43,55 @@ snapshotter, so the decision degrades to "full" regardless.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Set
+
+
+class ShardWriteCounters:
+    """Per-shard write counters backing the policy's skip proof and dirty
+    estimate, sharded to match the striped write gates.
+
+    Concurrency contract (the striping argument, DESIGN.md §9): slot ``k``
+    is mutated only by a writer holding gate stripe ``k``; the barrier and
+    layout-swap paths read/reset/remap every slot while holding ALL
+    stripes. No slot is ever touched by two threads at once, so the plain
+    lists need no locks of their own.
+
+    ``touched`` holds the DISTINCT block ids the writes hit (global ids
+    under a range layout) — the policy's full-epoch dirty estimate must
+    not count a hot block once per write, or a write-skewed shard would
+    pin its EMA at 1.0.
+    """
+
+    def __init__(self, n_shards: int):
+        self.writes: List[int] = [0] * n_shards
+        self.touched: List[Set[int]] = [set() for _ in range(n_shards)]
+
+    def note(self, shard_id: int, block_id: int) -> None:
+        """One write against ``shard_id`` touching ``block_id`` (caller
+        holds stripe ``shard_id``)."""
+        self.writes[shard_id] += 1
+        self.touched[shard_id].add(block_id)
+
+    def touched_count(self, shard_id: int) -> int:
+        return len(self.touched[shard_id])
+
+    def reset(self, shard_id: int) -> None:
+        """Zero one shard's counters (at its T0 stamp, under the barrier)."""
+        self.writes[shard_id] = 0
+        self.touched[shard_id] = set()
+
+    def remap(self, parents: Sequence[Sequence[int]], bounds: Sequence[int]) -> None:
+        """Re-bucket across a layout swap (caller holds all stripes):
+        write counts sum over each new shard's parents; touched sets hold
+        global ids, so they re-bucket by the new ``bounds`` intervals."""
+        self.writes = [
+            sum(self.writes[p] for p in ps) for ps in parents
+        ]
+        all_touched: Set[int] = set().union(*self.touched) if self.touched else set()
+        self.touched = [
+            {g for g in all_touched if bounds[k] <= g < bounds[k + 1]}
+            for k in range(len(parents))
+        ]
 
 
 @dataclasses.dataclass

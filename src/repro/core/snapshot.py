@@ -329,6 +329,21 @@ class Snapshotter:
             total += dur
         return total
 
+    def note_gate_wait(self, wait_s: float) -> None:
+        """Charge one write's CONTENDED gate-acquisition wait to the
+        newest in-flight epoch's metrics. Under striped gates a writer
+        only waits when its OWN shard's stripe is contended (a barrier, a
+        layout swap, or another writer on the same shard) — recording it
+        next to the proactive-sync stalls makes gate contention
+        observable in the same per-epoch summaries (``gate_wait_us``).
+        One wall-clock wait is one epoch's record: charging every active
+        epoch would multiply-count the same stall whenever consecutive
+        snapshots overlap, unlike interruptions (distinct per-epoch sync
+        work that legitimately sums)."""
+        snaps = self.active()
+        if snaps:
+            snaps[-1].metrics.record_gate_wait(wait_s)
+
     def active(self) -> List[SnapshotHandle]:
         with self._active_lock:
             return [

@@ -64,6 +64,7 @@ class EngineReport:
             "min_tput_qps": float(tput.min() / 0.05) if tput.size else float("nan"),
             "interruptions": float(sum(m.get("interruptions", 0.0) for m in mets)),
             "out_of_service_ms": float(sum(m.get("out_of_service_ms", 0.0) for m in mets)),
+            "gate_wait_us": float(sum(m.get("gate_wait_us", 0.0) for m in mets)),
             "fork_ms": float(np.mean([m.get("fork_ms", 0.0) for m in mets])) if mets else float("nan"),
             "copy_window_ms": float(np.mean([m.get("copy_window_ms", 0.0) for m in mets])) if mets else float("nan"),
             "skipped_shards": float(sum(m.get("skipped_shards", 0.0) for m in mets)),
@@ -85,6 +86,7 @@ class KVEngine:
         incremental: bool = False,
         persist_workers: Optional[int] = None,
         policy: Optional[BgsavePolicy] = None,
+        striped_gates: bool = True,
     ):
         """``backend`` selects the staging substrate ("host" numpy or
         "device" Pallas-kernel staging); ``incremental=True`` makes every
@@ -95,7 +97,10 @@ class KVEngine:
         :class:`ShardedSnapshotCoordinator`; ``persist_workers`` sizes its
         shared persist pool (default: one per shard). ``policy`` (a
         :class:`BgsavePolicy`, sharded stores only) replaces the global
-        ``incremental`` flag with per-shard full/delta/skip decisions."""
+        ``incremental`` flag with per-shard full/delta/skip decisions.
+        ``striped_gates=False`` aliases every write-gate stripe to one
+        global lock (the pre-PR-5 behavior, kept as the contention
+        benchmark's baseline arm)."""
         self.store = store
         self.mode = mode
         self._copier_threads = max(1, copier_threads)
@@ -131,12 +136,16 @@ class KVEngine:
                 store.providers, mode=mode,
                 persist_workers=persist_workers,
                 layout=getattr(store, "layout", None),
-                policy=policy, **snapshotter_kw,
+                policy=policy, striped_gates=striped_gates,
+                **snapshotter_kw,
             )
-            self._gate = self.coordinator.write_gate
             self._write_hook = (
                 lambda shard_id, leaf_id, rows=None:
                 self.coordinator.before_write(shard_id, leaf_id, rows)
+            )
+            self._gate_wait_hook = (
+                lambda shard_id, wait_s:
+                self.coordinator.note_gate_wait(shard_id, wait_s)
             )
         else:
             if policy is not None:
@@ -147,17 +156,27 @@ class KVEngine:
                 persist_workers=persist_workers if persist_workers is not None else 1,
                 **snapshotter_kw,
             )
-            self._gate = None
             self._write_hook = (
                 lambda leaf_id, rows=None:
                 self.snapshotter.before_write(leaf_id, rows)
             )
+            self._gate_wait_hook = None
 
     @property
     def n_shards(self) -> int:
         """Shard count under the store's CURRENT layout (resharding moves
         it mid-run, so nothing caches it)."""
         return getattr(self.store, "n_shards", 1)
+
+    @property
+    def _gate(self):
+        """LIVE write-gate accessor. Never cache the coordinator's gate
+        object on the engine: a layout swap replaces stripes inside the
+        :class:`~repro.core.gates.GateSet` (and a future coordinator swap
+        would replace the set wholesale) — the pre-PR-5 engine cached the
+        construction-time gate and would have committed writes under a
+        stale gate after any such swap."""
+        return None if self.coordinator is None else self.coordinator.gates
 
     # -- online resharding ------------------------------------------------
     def split(self, shard_id: int, at_block: Optional[int] = None):
@@ -293,8 +312,13 @@ class KVEngine:
             if ev.t > now:
                 time.sleep(ev.t - now)
             if ev.op == "set":
-                store.set(ev.rows, vals_pool[i % 64],
-                          before_write=self._write_hook, gate=self._gate)
+                if self.coordinator is not None:
+                    store.set(ev.rows, vals_pool[i % 64],
+                              before_write=self._write_hook, gate=self._gate,
+                              on_gate_wait=self._gate_wait_hook)
+                else:
+                    store.set(ev.rows, vals_pool[i % 64],
+                              before_write=self._write_hook, gate=self._gate)
             else:
                 store.get(ev.rows)
             lat.append((ev.t, (time.perf_counter() - t0) - ev.t))

@@ -11,7 +11,6 @@ redis-benchmark's integer key space does.
 """
 from __future__ import annotations
 
-import contextlib
 import re
 from functools import partial
 from typing import Callable, List, Optional, Sequence
@@ -20,11 +19,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.gates import GateRetired, GateSet
 from repro.core.layout import ShardLayout
 from repro.core.provider import PyTreeProvider
 from repro.core.sinks import read_file_snapshot, read_snapshot_layout
-
-_NO_GATE = contextlib.nullcontext()
 
 
 @partial(jax.jit, donate_argnums=(0,))
@@ -35,6 +33,19 @@ def _scatter_set(block, rows, vals):
 @jax.jit
 def _gather_get(block, rows):
     return block[rows]
+
+
+def _consecutive_runs(groups):
+    """Yield slices of ``groups`` (tuples whose first element is a block
+    id, in ascending order) covering maximal runs of consecutive blocks —
+    the read/write analogue of the persist path's run unit."""
+    i = 0
+    while i < len(groups):
+        j = i + 1
+        while j < len(groups) and groups[j][0] == groups[j - 1][0] + 1:
+            j += 1
+        yield groups[i:j]
+        i = j
 
 
 class KVStore:
@@ -113,29 +124,72 @@ class KVStore:
         multi-block leaf syncs only the blocks the write will actually kill
         (row→block-precise, DESIGN.md §2) instead of the whole leaf.
 
-        ``gate`` (a lock/context manager) is held across sync → donated
-        commit per block, so a concurrent snapshot fork barrier can never
-        land between a write's proactive sync and its buffer swap."""
+        ``gate`` (a lock/context manager) is held ONCE across the whole
+        batch's sync → donated commits (one acquisition per call, not one
+        per block as before PR 5), so a concurrent snapshot fork barrier
+        can never land between a write's proactive sync and its buffer
+        swap — and a single-shard batch is atomic w.r.t. the barrier."""
         vals = np.asarray(vals)
         rows = np.asarray(rows)
+        if gate is None:
+            self._commit(rows, vals, before_write)
+        else:  # locks and context managers alike support `with`
+            with gate:
+                self._commit(rows, vals, before_write)
+
+    def _commit(
+        self,
+        rows: np.ndarray,
+        vals: np.ndarray,
+        before_write: Optional[Callable[[int, np.ndarray], None]] = None,
+    ) -> None:
+        """Batched scatter commit — caller holds the write gate (or runs
+        ungated, the paper's single-threaded parent).
+
+        Touched blocks are grouped once, adjacent block ids coalesce into
+        runs (the same unit the persist path moves, DESIGN.md §7), and
+        each run commits with ONE device conversion of the batch values
+        and ONE ``block_until_ready`` instead of per-block round trips.
+        Within a run every block's proactive sync happens before ANY of
+        the run's buffers is donated, so the §4.2 protect-before-kill
+        contract holds block-for-block."""
         bids = rows // self.block_rows
+        groups = []
         for b in np.unique(bids):
-            mask = bids == b
-            local = rows[mask] - b * self.block_rows
-            with gate if gate is not None else _NO_GATE:
-                if before_write is not None:
-                    # sync THIS block's touched rows in all active snapshots
-                    before_write(int(b), local)
-                old = self.provider.leaf(int(b))
-                new = _scatter_set(old, jnp.asarray(local), jnp.asarray(vals[mask]))
-                new.block_until_ready()
-                self.provider.update_leaf(int(b), new)  # old was donated by XLA
+            pos = np.nonzero(bids == b)[0]
+            groups.append((int(b), rows[pos] - int(b) * self.block_rows, pos))
+        vals_dev = None
+        for run in _consecutive_runs(groups):
+            if before_write is not None:
+                for b, local, _ in run:
+                    # sync the block's touched rows in all active snapshots
+                    before_write(b, local)
+            if vals_dev is None:
+                vals_dev = jnp.asarray(vals)  # one H2D for the whole batch
+            staged = []
+            for b, local, pos in run:
+                v = vals_dev if len(pos) == rows.shape[0] \
+                    else vals_dev[jnp.asarray(pos)]
+                staged.append(
+                    (b, _scatter_set(self.provider.leaf(b), jnp.asarray(local), v))
+                )
+            jax.block_until_ready([a for _, a in staged])
+            for b, new in staged:
+                self.provider.update_leaf(b, new)  # old was donated by XLA
 
     def get(self, rows: np.ndarray) -> np.ndarray:
+        """Gather read. Contiguous touched-block runs are serviced with
+        one gather concatenation and ONE device-to-host transfer per run
+        (mirroring the persist path's run-writes) instead of one D2H per
+        block."""
         outs = []
-        for b, local in self._split(rows):
-            out = _gather_get(self.provider.leaf(b), jnp.asarray(local))
-            outs.append(np.asarray(out))
+        for run in _consecutive_runs(list(self._split(rows))):
+            parts = [
+                _gather_get(self.provider.leaf(b), jnp.asarray(local))
+                for b, local in run
+            ]
+            merged = parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+            outs.append(np.asarray(merged))  # one D2H per contiguous run
         return np.concatenate(outs) if outs else np.empty((0, self.row_width), np.float32)
 
     def read_all(self) -> np.ndarray:
@@ -170,14 +224,16 @@ class ShardedKVStore:
 
     :meth:`split` / :meth:`merge` reshard ONLINE with zero data movement:
     child shards wrap the parent's device blocks under fresh providers and
-    the layout advances one epoch. Concurrency contract: the write gate
-    serializes a reshard against snapshot BARRIERS only — ``set``/``get``
-    route and resolve shard objects outside the gate (they take it per
-    block), so a reshard must additionally be serialized against writers:
-    issue it from the serving thread itself (the paper's single-threaded
-    parent model; ``KVEngine.run(actions=...)`` does exactly this) or
-    quiesce writers first. A reshard landing mid-batch on another thread
-    would let the batch's tail write through the retired parent store.
+    the layout advances one epoch. Concurrency contract: with a striped
+    :class:`~repro.core.gates.GateSet` as the ``gate``, :meth:`set` is
+    safe against a reshard landing mid-batch from another thread — each
+    shard group commits under its stripe and REVALIDATES the layout after
+    acquiring (a swap needs all stripes, so holding one excludes it); a
+    stale group re-routes its uncommitted tail under the successor layout
+    instead of writing through the retired parent store. With a plain
+    lock (or ungated), the pre-PR-5 contract stands: issue reshards from
+    the serving thread itself (``KVEngine.run(actions=...)`` does) or
+    quiesce writers first.
 
     ``before_write`` hooks gain a leading ``shard_id``:
     ``before_write(shard_id, leaf_id, local_rows)``; indices are under the
@@ -200,12 +256,17 @@ class ShardedKVStore:
         ]
         self.row_width = int(row_width)
         self.block_rows = int(block_rows)
-        self.layout = ShardLayout.uniform([s.n_blocks for s in self.shards])
-        self._refresh_bounds()
+        self._apply_layout(ShardLayout.uniform([s.n_blocks for s in self.shards]))
 
-    def _refresh_bounds(self) -> None:
-        self._row_bounds = self.layout.row_bounds(self.block_rows)
+    def _apply_layout(self, layout: ShardLayout) -> None:
+        """Install a layout: bounds first, ``self.layout`` LAST. Striped
+        writers route outside the gate and validate ``self.layout`` object
+        identity after acquiring their stripe — publishing the layout last
+        makes that check sufficient (a writer that saw the new layout also
+        sees the new row bounds and shard list)."""
+        self._row_bounds = layout.row_bounds(self.block_rows)
         self.capacity = int(self._row_bounds[-1])
+        self.layout = layout
 
     @property
     def n_shards(self) -> int:
@@ -240,15 +301,59 @@ class ShardedKVStore:
             pos = order[s:e]
             yield int(u), rows[pos] - int(self._row_bounds[u]), pos
 
-    def set(self, rows, vals, before_write=None, gate=None) -> None:
+    def set(self, rows, vals, before_write=None, gate=None,
+            on_gate_wait=None) -> None:
+        """Routed scatter write, one gate acquisition per (shard, batch).
+
+        With a :class:`GateSet` the acquisition is the touched shard's
+        STRIPE: writes to different shards commit concurrently, and
+        ``on_gate_wait(shard_id, wait_s)`` reports each acquisition's
+        contended wait (the engine feeds it into the epoch metrics). At
+        most one stripe is held at a time — shard groups commit in
+        ascending shard order and release between groups — so writers can
+        never deadlock against the ordered all-gate barrier."""
         vals = np.asarray(vals)
         rows = np.asarray(rows)
-        for k, local, pos in self._route(rows):
-            hook = None
-            if before_write is not None:
-                hook = (lambda leaf_id, lrows, _k=k:
-                        before_write(_k, leaf_id, lrows))
-            self.shards[k].set(local, vals[pos], before_write=hook, gate=gate)
+        if not isinstance(gate, GateSet):
+            # legacy path: one shared lock (or none) for every shard
+            for k, local, pos in self._route(rows):
+                hook = None
+                if before_write is not None:
+                    hook = (lambda leaf_id, lrows, _k=k:
+                            before_write(_k, leaf_id, lrows))
+                self.shards[k].set(local, vals[pos], before_write=hook, gate=gate)
+            return
+        while rows.size:
+            layout = self.layout
+            groups = list(self._route(rows))
+            rerouted = False
+            for i, (k, local, pos) in enumerate(groups):
+                try:
+                    g, wait = gate.acquire(k)
+                except GateRetired:
+                    g = None  # layout shrank under us: re-route the tail
+                if g is None or self.layout is not layout:
+                    # a reshard swapped the layout between routing and this
+                    # stripe: the uncommitted tail (this group onward) must
+                    # re-route, or it would write through a retired store
+                    if g is not None:
+                        g.release()
+                    rest = np.concatenate([p for _, _, p in groups[i:]])
+                    rows, vals = rows[rest], vals[rest]
+                    rerouted = True
+                    break
+                try:
+                    if on_gate_wait is not None:
+                        on_gate_wait(k, wait)
+                    hook = None
+                    if before_write is not None:
+                        hook = (lambda leaf_id, lrows, _k=k:
+                                before_write(_k, leaf_id, lrows))
+                    self.shards[k]._commit(local, vals[pos], hook)
+                finally:
+                    g.release()
+            if not rerouted:
+                return
 
     def get(self, rows) -> np.ndarray:
         outs = [self.shards[k].get(local) for k, local, _ in self._route(rows)]
@@ -277,8 +382,7 @@ class ShardedKVStore:
         left = KVStore.from_blocks(blocks[:at], self.row_width, self.block_rows)
         right = KVStore.from_blocks(blocks[at:], self.row_width, self.block_rows)
         self.shards[shard_id: shard_id + 1] = [left, right]
-        self.layout = new_layout
-        self._refresh_bounds()
+        self._apply_layout(new_layout)
         return self.layout
 
     def merge(self, shard_id: int, other: int) -> ShardLayout:
@@ -289,8 +393,7 @@ class ShardedKVStore:
             self.shards[other].blocks_list()
         merged = KVStore.from_blocks(blocks, self.row_width, self.block_rows)
         self.shards[shard_id: other + 1] = [merged]
-        self.layout = new_layout
-        self._refresh_bounds()
+        self._apply_layout(new_layout)
         return self.layout
 
     # -- cross-layout restore ---------------------------------------------

@@ -55,6 +55,46 @@ class Workload:
             out.append(QueryEvent(float(t[i]), "set" if ops[i] else "get", rows))
         return out
 
+    def writer_streams(
+        self,
+        capacity: int,
+        duration_s: float,
+        writers: int,
+        spans: Optional[List] = None,
+    ) -> List[List[QueryEvent]]:
+        """Per-thread open-loop streams for the multi-writer contention
+        benchmark (PR 5): ``writers`` independent generators, each confined
+        to its own key span. The default carves disjoint even slices of
+        the key space (K writers over N range-partitioned shards give each
+        shard ~K/N dedicated writers); an explicit ``spans`` list may
+        overlap — overlapping writers then contend on the same gate
+        stripe and overwrite each other's keys, which is fine for a
+        contention benchmark but not for tests that check per-writer
+        values.
+
+        Each stream divides this workload's aggregate ``rate_qps`` (and
+        its ``clients``) evenly and draws from an independent seed, so the
+        union behaves like :meth:`events` while every stream stays
+        replayable on its own thread."""
+        writers = max(1, int(writers))
+        out: List[List[QueryEvent]] = []
+        for w in range(writers):
+            lo, hi = (
+                spans[w] if spans is not None
+                else (w * capacity // writers, (w + 1) * capacity // writers)
+            )
+            sub = dataclasses.replace(
+                self,
+                rate_qps=self.rate_qps / writers,
+                clients=max(1, self.clients // writers),
+                seed=self.seed + 7919 * (w + 1),
+            )
+            evs = sub.events(hi - lo, duration_s)
+            for ev in evs:
+                ev.rows = ev.rows + lo  # shift into the writer's span
+            out.append(evs)
+        return out
+
     def _keys(self, rng: np.random.Generator, capacity: int) -> np.ndarray:
         """One query = ``batch`` consecutive keys from a pattern-drawn base
         (a pipelined redis-benchmark request touches one locality region)."""

@@ -1,0 +1,363 @@
+"""Striped write gates (PR 5): GateSet semantics, deadlock freedom of the
+ordered all-gate barrier under layout swaps, and the headline invariant —
+
+    ANY interleaving of concurrent multi-threaded per-shard writes with a
+    mid-stream BGSAVE barrier (and an optional split/merge) equals a
+    quiesced point-in-time cut: per shard, the snapshot reflects a prefix
+    of each writer's batch sequence, whole batches at a time, cut at that
+    shard's T0 stamp (DESIGN.md §9).
+
+The concurrency tests run seeded even without hypothesis; with the
+optional 'test' extra installed, a hypothesis wrapper additionally draws
+the writer/shard/batch geometry and the reshard op.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import GateRetired, GateSet
+from repro.kvstore import KVEngine, ShardedKVStore
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # property wrapper skips; seeded tests still run
+    HAVE_HYPOTHESIS = False
+
+
+# --------------------------------------------------------------------- #
+# GateSet unit semantics                                                 #
+# --------------------------------------------------------------------- #
+def test_striped_gates_are_independent():
+    gs = GateSet(3)
+    g0, w0 = gs.acquire(0)
+    try:
+        # another stripe is acquirable from a second thread while 0 is held
+        ok = threading.Event()
+
+        def other():
+            g1, _ = gs.acquire(1)
+            g1.release()
+            ok.set()
+
+        th = threading.Thread(target=other)
+        th.start()
+        th.join(5.0)
+        assert ok.is_set()
+    finally:
+        g0.release()
+    assert gs.wait_summary()["gate_acquires"] == 2.0
+
+
+def test_unstriped_gateset_aliases_one_lock():
+    gs = GateSet(3, striped=False)
+    g0, _ = gs.acquire(0)
+    try:
+        blocked = threading.Event()
+
+        def other():
+            g2, _ = gs.acquire(2)  # same underlying lock as stripe 0
+            g2.release()
+            blocked.set()
+
+        th = threading.Thread(target=other)
+        th.start()
+        th.join(0.2)
+        assert not blocked.is_set()  # global-gate semantics: it waits
+    finally:
+        g0.release()
+    assert blocked.wait(5.0)
+
+
+def test_all_gate_barrier_is_reentrant_and_excludes_writers():
+    gs = GateSet(2)
+    entered = threading.Event()
+
+    def writer():
+        g, _ = gs.acquire(1)
+        g.release()
+        entered.set()
+
+    with gs.all():
+        with gs.all():  # nested: bgsave_to_dir -> bgsave re-acquires
+            th = threading.Thread(target=writer)
+            th.start()
+            th.join(0.2)
+            assert not entered.is_set()
+        th.join(0.2)
+        assert not entered.is_set()  # still one barrier level held
+    assert entered.wait(5.0)
+    th.join(5.0)
+
+
+def test_resize_creates_new_stripes_already_held():
+    """A stripe born from a mid-barrier resize must not admit writers
+    until the resizing thread's outermost barrier exits."""
+    gs = GateSet(2)
+    got_new = threading.Event()
+
+    def writer_new_stripe():
+        g, _ = gs.acquire(2)  # only exists after the resize
+        g.release()
+        got_new.set()
+
+    gs.acquire_all()
+    gs.resize(3, carry={0: 0, 1: 1})
+    th = threading.Thread(target=writer_new_stripe)
+    th.start()
+    th.join(0.2)
+    assert not got_new.is_set()  # fresh gate created already-held
+    gs.release_all()
+    assert got_new.wait(5.0)
+    th.join(5.0)
+
+
+def test_resize_wakes_writers_blocked_on_dropped_stripes():
+    """A writer queued on a stripe that a merge retires must wake at
+    barrier exit and see GateRetired (so it can re-route), not hang."""
+    gs = GateSet(2)
+    outcome = {}
+
+    def writer_old_stripe():
+        try:
+            g, _ = gs.acquire(1)
+            g.release()
+            outcome["ok"] = True
+        except GateRetired:
+            outcome["retired"] = True
+
+    gs.acquire_all()
+    th = threading.Thread(target=writer_old_stripe)
+    th.start()
+    time.sleep(0.05)  # let it block on the (old) stripe 1
+    gs.resize(1, carry={0: 0})  # merge: stripe 1 dropped
+    gs.release_all()
+    th.join(5.0)
+    assert not th.is_alive()
+    assert outcome == {"retired": True}
+
+
+def test_resize_requires_barrier_and_validates():
+    gs = GateSet(2)
+    with pytest.raises(RuntimeError):
+        gs.resize(3)
+    with pytest.raises(RuntimeError):
+        gs.release_all()
+    with pytest.raises(GateRetired):
+        gs.acquire(7)
+
+
+# --------------------------------------------------------------------- #
+# the interleaving invariant (tentpole acceptance)                       #
+# --------------------------------------------------------------------- #
+def _run_interleaving(n_shards, writers, n_batches, reshard=None, seed=0,
+                      striped=True):
+    """Concurrent per-span writers vs a mid-stream barrier (+ optional
+    reshard). Returns everything the checks below need."""
+    block_rows = 16
+    capacity = n_shards * 4 * block_rows
+    store = ShardedKVStore(capacity, row_width=8, block_rows=block_rows,
+                           seed=seed, shards=n_shards)
+    eng = KVEngine(store, mode="asyncfork", copier_threads=1,
+                   persist_bandwidth=None, copier_duty=1.0,
+                   striped_gates=striped)
+    store.warmup(batch=4)
+    init = store.read_all().copy()
+    spans = [(w * capacity // writers, (w + 1) * capacity // writers)
+             for w in range(writers)]
+    records = [[] for _ in range(writers)]  # (seq, t_start, t_end)
+    errors = []
+    start = threading.Barrier(writers + 1)
+
+    def writer(w):
+        lo, hi = spans[w]
+        rows = np.arange(lo, hi, dtype=np.int64)
+        start.wait()
+        try:
+            for seq in range(1, n_batches + 1):
+                vals = np.full((rows.size, 8), float(w * 1000 + seq),
+                               np.float32)
+                t0 = time.perf_counter()
+                store.set(rows, vals, before_write=eng._write_hook,
+                          gate=eng._gate, on_gate_wait=eng._gate_wait_hook)
+                records[w].append((seq, t0, time.perf_counter()))
+        except BaseException as exc:  # pragma: no cover - the assert below
+            errors.append(exc)
+
+    threads = [threading.Thread(target=writer, args=(w,))
+               for w in range(writers)]
+    for th in threads:
+        th.start()
+    start.wait()
+    if reshard == "split":
+        eng.split(0)
+    elif reshard == "merge":
+        eng.merge(0, 1)
+    t_bg0 = time.perf_counter()
+    snap = eng.coordinator.bgsave()
+    t_bg1 = time.perf_counter()
+    for th in threads:
+        th.join(30.0)
+        assert not th.is_alive(), "writer deadlocked"
+    assert not errors, errors
+    assert snap.wait_persisted(60)
+    img = np.concatenate([
+        np.concatenate([np.asarray(b) for b in t["blocks"]])
+        for t in snap.to_trees()
+    ])
+    return store, eng, snap, init, spans, records, img, (t_bg0, t_bg1)
+
+
+def _check_point_in_time_cut(snap, init, spans, records, img, window,
+                             block_rows=16):
+    """Per (writer-span ∩ barrier-layout shard): the image is uniform at
+    some batch seq j (whole gate-held batches are atomic w.r.t. the
+    barrier on each shard), j covers every batch that finished before the
+    barrier began and none that started after it returned."""
+    t_bg0, t_bg1 = window
+    layout = snap.layout
+    shard_rows = [(layout.bounds[k] * block_rows,
+                   layout.bounds[k + 1] * block_rows)
+                  for k in range(layout.n_shards)]
+    for w, (lo, hi) in enumerate(spans):
+        seqs = [s for s, _, _ in records[w]]
+        must_have = max((s for s, _, e in records[w] if e < t_bg0), default=0)
+        too_late = min((s for s, b, _ in records[w] if b > t_bg1),
+                       default=max(seqs, default=0) + 1)
+        for slo, shi in shard_rows:
+            a, b = max(lo, slo), min(hi, shi)
+            if a >= b:
+                continue
+            cut = img[a:b]
+            if np.array_equal(cut, init[a:b]):
+                j = 0
+            else:
+                uniq = np.unique(cut)
+                assert uniq.size == 1, (
+                    f"writer {w} rows [{a},{b}): torn batch in snapshot "
+                    f"(values {uniq[:4]}...)"
+                )
+                j = int(uniq[0]) - w * 1000
+                assert j in seqs, f"writer {w}: impossible seq {j}"
+            assert j >= must_have, (
+                f"writer {w} rows [{a},{b}): snapshot at seq {j} misses "
+                f"batch {must_have} that completed before the barrier"
+            )
+            assert j < too_late, (
+                f"writer {w} rows [{a},{b}): snapshot at seq {j} includes "
+                f"a batch that started after the barrier returned"
+            )
+
+
+def _check_no_lost_writes(store, spans, n_batches, init):
+    live = store.read_all()
+    for w, (lo, hi) in enumerate(spans):
+        expect = float(w * 1000 + n_batches)
+        assert (live[lo:hi] == expect).all(), (
+            f"writer {w}: final state lost its last batch (reshard "
+            "re-route must not drop or misdirect the tail)"
+        )
+
+
+@pytest.mark.parametrize("striped", [True, False])
+def test_concurrent_writers_barrier_is_quiesced_cut(striped):
+    out = _run_interleaving(n_shards=3, writers=4, n_batches=6,
+                            striped=striped)
+    store, eng, snap, init, spans, records, img, window = out
+    _check_point_in_time_cut(snap, init, spans, records, img, window)
+    _check_no_lost_writes(store, spans, 6, init)
+    # the wait metric is wired end to end
+    assert "gate_wait_us" in snap.metrics.summary()
+
+
+@pytest.mark.parametrize("reshard", ["split", "merge"])
+def test_concurrent_writers_reshard_and_barrier(reshard):
+    """A split/merge fired from a non-writer thread lands mid-stream:
+    stale-routed tails must re-route (no lost updates, no torn batches)
+    and the barrier cut must hold under the successor layout."""
+    out = _run_interleaving(n_shards=2, writers=3, n_batches=6,
+                            reshard=reshard)
+    store, eng, snap, init, spans, records, img, window = out
+    assert store.layout.epoch == 1
+    _check_point_in_time_cut(snap, init, spans, records, img, window)
+    _check_no_lost_writes(store, spans, 6, init)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=8, deadline=None)
+    @given(
+        n_shards=st.integers(2, 4),
+        writers=st.integers(1, 4),
+        n_batches=st.integers(1, 5),
+        reshard=st.sampled_from([None, "split", "merge"]),
+        seed=st.integers(0, 3),
+    )
+    def test_property_interleaving_equals_quiesced_cut(
+        n_shards, writers, n_batches, reshard, seed
+    ):
+        out = _run_interleaving(n_shards=n_shards, writers=writers,
+                                n_batches=n_batches, reshard=reshard,
+                                seed=seed)
+        store, eng, snap, init, spans, records, img, window = out
+        _check_point_in_time_cut(snap, init, spans, records, img, window)
+        _check_no_lost_writes(store, spans, n_batches, init)
+
+
+# --------------------------------------------------------------------- #
+# deadlock freedom: writers x barriers x layout swaps                    #
+# --------------------------------------------------------------------- #
+def test_no_deadlock_writers_barriers_and_layout_swaps():
+    """Ordered all-gate acquisition + single-stripe writers + mid-flight
+    resizes: every thread must finish. (A cycle would hang the join and
+    trip the suite's timeout.)"""
+    n_shards = 3
+    store = ShardedKVStore(n_shards * 8 * 16, row_width=8, block_rows=16,
+                           seed=0, shards=n_shards)
+    eng = KVEngine(store, mode="asyncfork", copier_threads=1,
+                   persist_bandwidth=None, copier_duty=1.0)
+    store.warmup(batch=4)
+    stop = threading.Event()
+    errors = []
+
+    def writer(w):
+        rng = np.random.default_rng(w)
+        vals = np.full((4, 8), float(w), np.float32)
+        try:
+            while not stop.is_set():
+                base = int(rng.integers(0, store.capacity - 4))
+                rows = np.arange(base, base + 4, dtype=np.int64)
+                store.set(rows, vals, before_write=eng._write_hook,
+                          gate=eng._gate,
+                          on_gate_wait=eng._gate_wait_hook)
+        except BaseException as exc:  # pragma: no cover
+            errors.append(exc)
+
+    def barrier_loop():
+        try:
+            while not stop.is_set():
+                eng.coordinator.bgsave().wait_persisted(30)
+        except BaseException as exc:  # pragma: no cover
+            errors.append(exc)
+
+    def reshard_loop():
+        try:
+            while not stop.is_set():
+                eng.split(0)
+                eng.merge(0, 1)
+        except BaseException as exc:  # pragma: no cover
+            errors.append(exc)
+
+    threads = [threading.Thread(target=writer, args=(w,)) for w in range(3)]
+    threads += [threading.Thread(target=barrier_loop),
+                threading.Thread(target=reshard_loop)]
+    for th in threads:
+        th.start()
+    time.sleep(1.0)
+    stop.set()
+    for th in threads:
+        th.join(30.0)
+        assert not th.is_alive(), "deadlock: thread failed to finish"
+    assert not errors, errors
+    eng.coordinator.wait_all(60)
