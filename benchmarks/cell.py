@@ -168,6 +168,181 @@ def run_gate_contention(spec):
     }
 
 
+def run_read_concurrency(spec):
+    """Multi-reader serving harness (PR 6): N open-loop reader streams
+    (spawn-db-gets style) submit GETs through a :class:`RequestServer`
+    while a background writer donates block buffers out from under them
+    and CONSECUTIVE BGSAVE fork barriers land mid-run.
+
+    Two arms share the harness: ``concurrent=True`` serves reads on a
+    worker pool through the seqlock/shared-stripe read plane, so a fork
+    barrier (or the writer) stalls no one else; ``concurrent=False`` is
+    the single-threaded serial arm — one worker serves EVERY request in
+    queue order, the paper's single-threaded parent — so each fork stall
+    and each write queues every reader behind it. The headline metric is
+    reader p99 inside the snapshot windows, serial over concurrent."""
+    import threading
+    import time
+
+    import numpy as np
+
+    from repro.kvstore import (
+        FlushRequest,
+        GetRequest,
+        KVEngine,
+        RequestServer,
+        SetRequest,
+        ShardedKVStore,
+        Workload,
+    )
+
+    capacity = int(spec["size_mb"] * (1 << 20) / (4 * spec.get("row_width", 256)))
+    shards = int(spec.get("shards", 2))
+    readers = max(1, int(spec.get("readers", 4)))
+    concurrent = bool(spec.get("concurrent", True))
+    duration = float(spec.get("duration", 8.0))
+    store = ShardedKVStore(
+        capacity,
+        row_width=spec.get("row_width", 256),
+        block_rows=spec.get("block_rows", 4096),
+        seed=0,
+        shards=shards,
+    )
+    eng = KVEngine(
+        store,
+        mode=spec.get("mode", "asyncfork"),
+        copier_threads=spec.get("threads", 1),
+        persist_bandwidth=spec.get("persist_bw"),
+        copier_duty=spec.get("duty", 1.0),
+        persist_workers=spec.get("persist_workers"),
+    )
+    capacity = store.capacity  # post block-rounding
+    rd = Workload(rate_qps=spec.get("qps", 300), set_ratio=0.0,
+                  batch=spec.get("batch", 16),
+                  clients=spec.get("clients", 50), seed=spec.get("seed", 1))
+    wr = Workload(rate_qps=spec.get("write_qps", 40), set_ratio=1.0,
+                  batch=spec.get("write_batch", 4096),
+                  clients=spec.get("clients", 50),
+                  seed=spec.get("seed", 1) + 17)
+    read_streams = rd.reader_streams(capacity, duration, readers)
+    write_stream = wr.writer_streams(capacity, duration, 1)[0]
+    for b in sorted({rd.batch, wr.batch}):
+        store.warmup(batch=b)
+    pool = np.random.rand(8, wr.batch, store.row_width).astype(np.float32)
+    srv = RequestServer(
+        eng,
+        readers=readers if concurrent else 1,
+        queue_depth=int(spec.get("queue_depth", 512)),
+        concurrent_reads=concurrent,
+    )
+    msgs = [[] for _ in range(readers)]  # (arrival, Message) per stream
+    start_bar = threading.Barrier(readers + 2)
+    t0_box = {}
+
+    def read_client(r):
+        evs = read_streams[r]
+        start_bar.wait()
+        t0 = t0_box["t0"]
+        for ev in evs:
+            now = time.perf_counter() - t0
+            if ev.t > now:
+                time.sleep(ev.t - now)
+            # open loop: submit WITHOUT waiting; replies collected after
+            msgs[r].append((ev.t, srv.submit(GetRequest(ev.rows))))
+
+    write_msgs = []
+
+    def write_client():
+        start_bar.wait()
+        t0 = t0_box["t0"]
+        for i, ev in enumerate(write_stream):
+            now = time.perf_counter() - t0
+            if ev.t > now:
+                time.sleep(ev.t - now)
+            # open loop, like the readers: the offered write load is
+            # IDENTICAL in both arms. A synchronous writer would let the
+            # serial arm throttle it (writes queue behind reads, landing
+            # fewer donation/sync stalls), silently sparing the one
+            # worker the very load the concurrent plane absorbs.
+            write_msgs.append(srv.submit(SetRequest(ev.rows, pool[i % 8])))
+
+    threads = [threading.Thread(target=read_client, args=(r,))
+               for r in range(readers)]
+    threads.append(threading.Thread(target=write_client))
+    for th in threads:
+        th.start()
+    t0_box["t0"] = time.perf_counter()
+    start_bar.wait()
+    # consecutive BGSAVEs through the SERVER: in the serial arm the fork
+    # stall lands on the one worker every reader queues behind (the
+    # paper's inline fork); in the concurrent arm it occupies one worker
+    # while the rest keep serving through the seqlock plane
+    first = float(spec.get("bgsave_at", 0.1))
+    every = float(spec.get("bgsave_every", 0.08))
+    flush_msgs = []
+    frac = first
+    while frac < 0.95:
+        t0 = t0_box["t0"]
+        dt = frac * duration - (time.perf_counter() - t0)
+        if dt > 0:
+            time.sleep(dt)
+        flush_msgs.append(srv.submit(FlushRequest()))
+        frac += every
+    for th in threads:
+        th.join(duration + 120)
+    snaps = []
+    for m in flush_msgs:
+        rep = m.wait(timeout=300)
+        if rep.error is not None:
+            raise rep.error
+        snaps.append(rep.value)
+    for s in snaps:
+        s.wait_persisted(120)
+    t0 = t0_box["t0"]
+    lat = []  # (arrival, latency) across all reader streams
+    for per in msgs:
+        for a, m in per:
+            rep = m.wait(timeout=300)
+            if rep.error is not None:
+                raise rep.error
+            lat.append((a, (rep.done_t - t0) - a))
+    for m in write_msgs:
+        rep = m.wait(timeout=300)
+        if rep.error is not None:
+            raise rep.error
+    stats = srv.stats()
+    srv.close()
+    spans_t = [(s.fork_start - t0, (s.t0 - t0) + s.metrics.persist_s)
+               for s in snaps]
+    inside = [l for a, l in lat
+              if any(lo <= a <= hi for lo, hi in spans_t)]
+    outside = [l for a, l in lat
+               if not any(lo <= a <= hi for lo, hi in spans_t)]
+
+    def p99_ms(x):
+        return float(np.percentile(np.array(x), 99) * 1e3) if x else float("nan")
+
+    summs = [s.metrics.summary() for s in snaps]
+    return {
+        "concurrent": concurrent,
+        "shards": shards,
+        "readers": readers,
+        "snapshots": len(snaps),
+        "reads": len(lat),
+        "reads_in_window": len(inside),
+        "read_p99_in_ms": p99_ms(inside),
+        "read_p99_out_ms": p99_ms(outside),
+        "read_max_in_ms": float(max(inside) * 1e3) if inside else float("nan"),
+        "read_retries": float(sum(s.get("read_retries", 0.0) for s in summs)),
+        "shared_wait_us": float(sum(s.get("shared_wait_us", 0.0) for s in summs)),
+        "gate_wait_us": float(sum(s.get("gate_wait_us", 0.0) for s in summs)),
+        "queue_depth_max": stats["queue_depth_max"],
+        "queue_depth_mean": stats["queue_depth_mean"],
+        "fork_ms": float(np.mean([s.get("fork_ms", 0.0) for s in summs])),
+        "out_of_service_ms": float(sum(s.get("out_of_service_ms", 0.0) for s in summs)),
+    }
+
+
 def run(spec):
     import numpy as np
 
@@ -175,6 +350,8 @@ def run(spec):
 
     if spec.get("cell") == "gate_contention":
         return run_gate_contention(spec)
+    if spec.get("cell") == "read_concurrency":
+        return run_read_concurrency(spec)
 
     capacity = int(spec["size_mb"] * (1 << 20) / (4 * spec.get("row_width", 256)))
     shards = int(spec.get("shards", 1))

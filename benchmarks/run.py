@@ -9,14 +9,15 @@ growth, interruption counts, out-of-service time, and the DEF > ODF >
 Async-fork latency ordering on snapshot queries.
 
 Usage: ``python -m benchmarks.run [cell ...] [--full] [--json PATH]
-[--copier-duty X]``.
+[--copier-duty X] [--readers N]``.
 Positional names select individual cells (e.g. ``persist_path``); with
 none, the whole suite runs. ``--json`` additionally writes the collected
 rows as a JSON trajectory artifact (CI uploads ``BENCH_3.json`` so future
 PRs have a perf baseline). ``--copier-duty`` pins the per-shard copier
 duty in the scaling cells (``shard_scaling``, ``gate_contention``) for
 multi-core reruns — the single-core container default decays it
-1/sqrt(shards).
+1/sqrt(shards). ``--readers`` overrides the ``read_concurrency`` cell's
+reader-stream count for multi-core reruns.
 """
 from __future__ import annotations
 
@@ -35,6 +36,10 @@ FAST = "--full" not in sys.argv
 # 1/sqrt(N) default — on a real multi-core host pass 1.0 to validate the
 # near-linear window shrink the cluster model predicts.
 DUTY_OVERRIDE = None
+# --readers=N: reader-stream count for the read_concurrency cell. The
+# single-core default (4) already shows the serial arm's queueing; on a
+# real multi-core host raise it to scale reader parallelism.
+READERS_OVERRIDE = None
 
 _ROWS: list = []
 
@@ -396,6 +401,45 @@ def gate_contention():
              f"striped_vs_global_p99={ratio:.2f}x")
 
 
+def read_concurrency():
+    """New cell (PR 6): N open-loop reader streams + a background writer
+    through the RequestServer, consecutive BGSAVE barriers landing
+    mid-run. The serial arm funnels every request through ONE worker (the
+    paper's single-threaded parent: each fork stall and each donated
+    write queues all readers behind it); the concurrent arm serves reads
+    on a worker pool through the seqlock/shared-stripe read plane, so
+    only the flush-carrying worker stalls. The gated ratio is serial-
+    over-concurrent reader p99 inside the snapshot windows (bigger =
+    the concurrent plane wins)."""
+    readers = READERS_OVERRIDE if READERS_OVERRIDE is not None else 4
+    base = {
+        "cell": "read_concurrency", "size_mb": 32, "duration": 8.0,
+        "shards": 2, "readers": readers, "threads": 1,
+        "duty": DUTY_OVERRIDE if DUTY_OVERRIDE is not None else 0.05,
+        "qps": 300, "batch": 16, "write_qps": 40, "write_batch": 4096,
+        "persist_bw": 3e7, "bgsave_at": 0.1, "bgsave_every": 0.08,
+    }
+    arms = {}
+    for concurrent in (False, True):
+        arms[concurrent] = run_cell({**base, "concurrent": concurrent})
+    c, s = arms[True], arms[False]
+    ratio = s["read_p99_in_ms"] / max(1e-9, c["read_p99_in_ms"])
+    out_ratio = s["read_p99_out_ms"] / max(1e-9, c["read_p99_out_ms"])
+    _row(f"read_concurrency/{readers}readers", c["read_p99_in_ms"] * 1e3,
+         f"serial_p99_in_us={s['read_p99_in_ms']*1e3:.0f};"
+         f"concurrent_p99_out_us={c['read_p99_out_ms']*1e3:.0f};"
+         f"serial_p99_out_us={s['read_p99_out_ms']*1e3:.0f};"
+         f"concurrent_max_in_us={c['read_max_in_ms']*1e3:.0f};"
+         f"read_retries={c['read_retries']:.0f};"
+         f"shared_wait_us={c['shared_wait_us']:.0f};"
+         f"queue_depth_max={c['queue_depth_max']:.0f};"
+         f"serial_queue_depth_max={s['queue_depth_max']:.0f};"
+         f"snapshots={c['snapshots']};"
+         f"reads_in_window={c['reads_in_window']};"
+         f"out_p99_ratio={out_ratio:.2f};"
+         f"serial_vs_concurrent_p99={ratio:.2f}x")
+
+
 def persist_path():
     """New cell: the zero-copy persist/restore hot path.
 
@@ -504,6 +548,7 @@ CELLS = {
     "reshard_epoch": reshard_epoch,
     "persist_path": persist_path,
     "gate_contention": gate_contention,
+    "read_concurrency": read_concurrency,
 }
 
 
@@ -511,7 +556,7 @@ def main() -> None:
     json_path = None
     names = []
     argv = iter(sys.argv[1:])
-    global DUTY_OVERRIDE
+    global DUTY_OVERRIDE, READERS_OVERRIDE
     for a in argv:
         if a == "--json":
             json_path = next(argv, None)
@@ -521,6 +566,10 @@ def main() -> None:
             DUTY_OVERRIDE = float(next(argv))
         elif a.startswith("--copier-duty="):
             DUTY_OVERRIDE = float(a.split("=", 1)[1])
+        elif a == "--readers":
+            READERS_OVERRIDE = int(next(argv))
+        elif a.startswith("--readers="):
+            READERS_OVERRIDE = int(a.split("=", 1)[1])
         elif not a.startswith("-"):
             names.append(a)
     unknown = [n for n in names if n not in CELLS]

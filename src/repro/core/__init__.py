@@ -15,7 +15,7 @@ from repro.core.coordinator import (
     CoordinatedSnapshot,
     ShardedSnapshotCoordinator,
 )
-from repro.core.gates import GateRetired, GateSet
+from repro.core.gates import GateRetired, GateSet, SharedGate
 from repro.core.layout import ShardLayout
 from repro.core.metrics import SnapshotMetrics
 from repro.core.persist import PersistJob, PersistPipeline
@@ -61,6 +61,7 @@ __all__ = [
     "ShardLayout",
     "GateSet",
     "GateRetired",
+    "SharedGate",
     "BgsavePolicy",
     "ShardEpochView",
     "ShardPolicyState",

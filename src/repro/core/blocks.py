@@ -306,6 +306,20 @@ class BlockTable:
                 self._cv.wait(timeout=1.0)
             return BlockState(int(self._states[i]))
 
+    def wait_all_not_copying(self) -> None:
+        """Wait until no block anywhere in the table is mid-copy.
+
+        Sealing a snapshot (``copy_done``) promises every block is staged,
+        but a parent-side ``sync_for_write`` can still hold a block in
+        COPYING that every copier skipped (trylock lost in the main sweep,
+        not UNCOPIED in the steal sweep). The sealer waits such stragglers
+        out here; otherwise ``to_tree`` can serve a staging slot whose
+        ``np.empty`` garbage was never overwritten."""
+        copying = int(BlockState.COPYING)
+        with self._cv:
+            while bool((self._states == copying).any()):
+                self._cv.wait(timeout=1.0)
+
     def rollback_leaf(self, leaf_id: int) -> int:
         """§4.4: make every non-final block of the leaf writable again."""
         base = int(self._leaf_base[leaf_id])

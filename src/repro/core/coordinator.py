@@ -152,6 +152,16 @@ class AggregateMetrics:
         return sum(p.metrics.gate_wait_s for p in self._parts)
 
     @property
+    def read_retries(self) -> int:
+        """Summed seqlock re-reads charged to shards' epochs."""
+        return sum(p.metrics.read_retries for p in self._parts)
+
+    @property
+    def shared_wait_s(self) -> float:
+        """Summed shared-stripe waits (reader-side ``gate_wait_s``)."""
+        return sum(p.metrics.shared_wait_s for p in self._parts)
+
+    @property
     def out_of_service_s(self) -> float:
         """Fig 20 analogue: one barrier stall + every parent-side copy
         stall (per-part out_of_service_s would re-count overlapping fork
@@ -206,6 +216,8 @@ class AggregateMetrics:
             "delta_shards": float(sum(1 for m in self._modes if m == "delta")),
             "skipped_shards": float(self.skipped_shards),
             "gate_wait_us": self.gate_wait_s * 1e6,
+            "read_retries": float(self.read_retries),
+            "shared_wait_us": self.shared_wait_s * 1e6,
             "dirty_frac_mean": (sum(dirty) / len(dirty)) if dirty else float("nan"),
             "per_shard": per_shard,
         }
@@ -403,6 +415,18 @@ class ShardedSnapshotCoordinator:
         same per-shard summaries the copy stalls land in."""
         if wait_s > 0.0:
             self.snapshotters[shard_id].note_gate_wait(wait_s)
+
+    def note_read_event(self, shard_id: int, retries: int,
+                        shared_wait_s: float) -> None:
+        """Attribute one read's seqlock churn (fast-path retries + shared
+        stripe waits) to the shard's in-flight epochs. ``shard_id`` is the
+        FIRST shard the retrying read touched under whatever view it last
+        routed with — a reshard may have shrunk the layout since, so the
+        index clamps rather than raising (the charge is an attribution,
+        not an invariant)."""
+        if retries or shared_wait_s > 0.0:
+            k = min(max(0, shard_id), len(self.snapshotters) - 1)
+            self.snapshotters[k].note_read_event(retries, shared_wait_s)
 
     def _sync_retired(self, shard_id: int, leaf_id: int, rows) -> float:
         # Lock-free under striped gates: writers on different stripes may

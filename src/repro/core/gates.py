@@ -22,7 +22,14 @@ our coordinator:
     called while the swapper holds all gates): unchanged shards keep their
     gate object, changed shards get fresh gates created *already held* by
     the swapping thread, and dropped gates are released at barrier exit so
-    writers blocked on them wake, fail validation, and re-route.
+    writers blocked on them wake, fail validation, and re-route;
+  * **readers** (PR 6) may take a stripe in SHARED mode
+    (:meth:`acquire_shared`): many readers overlap each other on the same
+    stripe and overlap writers on *other* stripes, while the stripe's own
+    writer — and every barrier-class op — still excludes them. The
+    concurrent read plane only falls back to shared acquisition when its
+    seqlock detects churn (``ShardedKVStore.get_concurrent``), so the
+    uncontended read path takes no lock at all.
 
 Deadlock freedom: a writer holds at most ONE stripe at a time (a
 multi-shard batch commits shard groups sequentially, releasing between
@@ -46,6 +53,162 @@ from typing import Dict, List, Optional, Tuple
 class GateRetired(RuntimeError):
     """The requested stripe index no longer exists (a concurrent layout
     swap shrank the gate set); the caller must re-route and retry."""
+
+
+class SharedGate:
+    """One gate stripe: an RLock-compatible exclusive side plus a shared
+    (reader) mode.
+
+    Exclusive side — ``acquire([blocking])`` / ``release`` — is reentrant
+    per thread, exactly like the :class:`threading.RLock` stripes it
+    replaces, so the ordered all-gate barrier, nested ``bgsave_to_dir``
+    barriers, and :meth:`GateSet.resize`'s born-held fresh stripes all
+    work unchanged. Shared side — :meth:`acquire_shared` /
+    :meth:`release_shared` — admits any number of concurrent readers
+    while no writer holds the gate.
+
+    Writer preference (window-bounded): once a waiting writer's ticket
+    ages past :data:`BARGE_WINDOW_S`, new shared acquisitions block, so
+    a continuous stream of short readers cannot starve a fork barrier —
+    but a FRESH ticket does not turn readers away, so reader tail
+    latency never convoys behind every passing writer (readers never
+    nest shared holds — the read plane holds at most one stripe at a
+    time — so preference cannot deadlock them). A
+    thread that holds the gate exclusively may still acquire shared
+    (counts as a reader it must release); the reverse upgrade (shared →
+    exclusive on the same thread) is a deadlock and must never be coded.
+
+    Bounded exclusive-side starvation: uncontended acquisition barges
+    (like the ``RLock`` it replaces — a just-releasing hot writer may
+    re-take a free gate ahead of sleeping waiters, which is what keeps
+    contended p99 low: fast writers burst through instead of waiting
+    out a round-robin of slow ones), BUT only while the longest-blocked
+    waiter is younger than :data:`BARGE_WINDOW_S`. Past that, the fast
+    path defers and queued writers drain in FIFO ticket order, so a
+    blocked all-gate barrier is served within one barge window plus one
+    critical section. A bare Condition with no ticketing lets a looping
+    writer win every wakeup race forever (running threads always beat
+    threads that must first reacquire the condition lock) — that
+    starved the fork barrier for MINUTES under a tight commit loop.
+
+    Shared-side contended waits are metered inside the gate (readers are
+    concurrent, so per-\\ ``GateSet`` slot accounting would race); the
+    exclusive side keeps PR 5's slot-k-under-stripe-k accounting in
+    :class:`GateSet`.
+    """
+
+    #: how long the oldest queued writer may be barged past (seconds).
+    #: Large enough that sub-ms commit critical sections still burst
+    #: through instead of FIFO round-robining; small enough that a
+    #: barrier blocked behind a hot commit loop is served promptly and
+    #: that readers (locked out of shared mode while any writer ticket
+    #: is queued — writer preference) never convoy for tens of ms.
+    BARGE_WINDOW_S = 0.01
+
+    __slots__ = ("_cv", "_writer", "_depth", "_readers", "_tickets",
+                 "_next_ticket", "shared_wait_s", "shared_waits")
+
+    def __init__(self):
+        self._cv = threading.Condition(threading.Lock())
+        self._writer: Optional[int] = None  # owning thread ident
+        self._depth = 0                     # exclusive reentrance depth
+        self._readers = 0                   # live shared holders
+        self._tickets: Dict[int, float] = {}  # FIFO: ticket -> enqueue time
+        self._next_ticket = 0
+        self.shared_wait_s = 0.0
+        self.shared_waits = 0
+
+    def _may_barge(self) -> bool:
+        """True while no queued writer has aged past the barge window.
+        (Tickets are issued in increasing order and the dict preserves
+        insertion order, so the first entry is the oldest.)"""
+        if not self._tickets:
+            return True
+        oldest = next(iter(self._tickets.values()))
+        return (time.monotonic() - oldest) < self.BARGE_WINDOW_S
+
+    # -- exclusive (writer / barrier) side --------------------------------
+    def acquire(self, blocking: bool = True) -> bool:
+        me = threading.get_ident()
+        with self._cv:
+            if self._writer == me:
+                self._depth += 1
+                return True
+            if (self._writer is None and self._readers == 0
+                    and self._may_barge()):
+                self._writer, self._depth = me, 1
+                return True
+            if not blocking:
+                return False
+            ticket = self._next_ticket
+            self._next_ticket += 1
+            self._tickets[ticket] = time.monotonic()
+            try:
+                while (self._writer is not None or self._readers
+                       or next(iter(self._tickets)) != ticket):
+                    # timeout so the oldest waiter re-checks even if every
+                    # barging acquirer keeps losing the notify race
+                    self._cv.wait(self.BARGE_WINDOW_S)
+                self._writer, self._depth = me, 1
+                return True
+            finally:
+                self._tickets.pop(ticket, None)
+                # an abandoned oldest ticket (interrupted wait) must not
+                # wedge the queue behind it
+                self._cv.notify_all()
+
+    def release(self) -> None:
+        with self._cv:
+            if self._writer != threading.get_ident():
+                raise RuntimeError("release() of a gate this thread "
+                                   "does not hold exclusively")
+            self._depth -= 1
+            if self._depth == 0:
+                self._writer = None
+                self._cv.notify_all()
+
+    def __enter__(self) -> "SharedGate":
+        self.acquire()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.release()
+
+    # -- shared (reader) side ---------------------------------------------
+    def acquire_shared(self, blocking: bool = True) -> bool:
+        """Join the stripe's reader group; returns False (non-blocking)
+        or blocks while a writer holds OR waits for the stripe."""
+        me = threading.get_ident()
+        t0 = time.perf_counter()
+        with self._cv:
+            if self._writer == me:
+                # barrier/writer thread reading under its own exclusive
+                # hold: count it as a reader it must release_shared()
+                self._readers += 1
+                return True
+            if self._writer is None and self._may_barge():
+                self._readers += 1
+                return True
+            if not blocking:
+                return False
+            # writer preference is window-bounded like the exclusive fast
+            # path: only a ticket older than BARGE_WINDOW_S turns readers
+            # away, so reader tails never convoy behind every fresh
+            # writer ticket while the barrier stays starvation-bounded
+            while self._writer is not None or not self._may_barge():
+                self._cv.wait(self.BARGE_WINDOW_S)
+            self._readers += 1
+            self.shared_wait_s += time.perf_counter() - t0
+            self.shared_waits += 1
+            return True
+
+    def release_shared(self) -> None:
+        with self._cv:
+            if self._readers < 1:
+                raise RuntimeError("release_shared() without a shared hold")
+            self._readers -= 1
+            if self._readers == 0:
+                self._cv.notify_all()
 
 
 class _AllGates:
@@ -72,11 +235,11 @@ class GateSet:
             raise ValueError("need at least one gate")
         self.striped = bool(striped)
         if self.striped:
-            self._gates: List[threading.RLock] = [
-                threading.RLock() for _ in range(n_gates)
+            self._gates: List[SharedGate] = [
+                SharedGate() for _ in range(n_gates)
             ]
         else:
-            g = threading.RLock()  # the PR-2 global gate, aliased N ways
+            g = SharedGate()  # the PR-2 global gate, aliased N ways
             self._gates = [g] * n_gates
         self._wait_s = [0.0] * n_gates
         self._waits = [0] * n_gates
@@ -87,7 +250,7 @@ class GateSet:
         return len(self._gates)
 
     # -- single-stripe path (writers) ------------------------------------
-    def acquire(self, k: int) -> Tuple[threading.RLock, float]:
+    def acquire(self, k: int) -> Tuple[SharedGate, float]:
         """Acquire stripe ``k``; returns ``(gate, wait_seconds)`` — the
         caller releases via ``gate.release()``. ``wait_seconds`` is 0.0
         when the stripe was uncontended (non-blocking fast path), so it
@@ -116,6 +279,33 @@ class GateSet:
                 self._waits[k] += 1
                 return g, wait
             g.release()
+
+    # -- shared-stripe path (readers) ------------------------------------
+    def acquire_shared(self, k: int) -> Tuple[SharedGate, float]:
+        """Acquire stripe ``k`` in SHARED mode; returns ``(gate,
+        wait_seconds)`` — the caller releases via ``gate.release_shared()``.
+        Readers overlap each other on the stripe and overlap writers on
+        every other stripe; the stripe's own writer and any all-gate
+        barrier exclude them (and vice versa).
+
+        Epoch-validated like :meth:`acquire`: a shared hold on stripe
+        ``k`` blocks any resize (a resize needs every stripe exclusively),
+        so once validated the stripe list — and the routing view a layout
+        swap would replace — cannot change while the hold lasts. Raises
+        :class:`GateRetired` when ``k`` fell off the end of the set."""
+        t0 = time.perf_counter()
+        blocked = False
+        while True:
+            gates = self._gates
+            if k >= len(gates):
+                raise GateRetired(f"stripe {k} >= {len(gates)} gates")
+            g = gates[k]
+            if not g.acquire_shared(blocking=False):
+                blocked = True
+                g.acquire_shared()
+            if self._gates is gates:
+                return g, (time.perf_counter() - t0) if blocked else 0.0
+            g.release_shared()
 
     # -- all-gate barrier -------------------------------------------------
     def all(self) -> _AllGates:
@@ -184,7 +374,7 @@ class GateSet:
                 if p is not None and 0 <= p < len(old):
                     new.append(old[p])
                 else:
-                    g = threading.RLock()
+                    g = SharedGate()
                     for _ in range(depth):
                         g.acquire()
                     new.append(g)
@@ -205,8 +395,14 @@ class GateSet:
     # -- observability -----------------------------------------------------
     def wait_summary(self) -> Dict[str, float]:
         """Cumulative per-write acquisition wait across current stripes
-        (stripes dropped by a resize take their counts with them)."""
+        (stripes dropped by a resize take their counts with them). Shared
+        (reader) waits are metered inside each stripe — readers are
+        concurrent, so slot-per-stripe accounting would race — and summed
+        over the distinct live gates here."""
+        uniq = list(dict.fromkeys(self._gates))
         return {
             "gate_wait_us": sum(self._wait_s) * 1e6,
             "gate_acquires": float(sum(self._waits)),
+            "shared_wait_us": sum(g.shared_wait_s for g in uniq) * 1e6,
+            "shared_waits": float(sum(g.shared_waits for g in uniq)),
         }

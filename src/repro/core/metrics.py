@@ -36,6 +36,9 @@ class SnapshotMetrics:
     policy_mode: str = "full"         # "full" | "delta" (BgsavePolicy decision)
     gate_wait_s: float = 0.0          # summed write-gate acquisition waits
     gate_waits: int = 0               # gated writes that landed in this epoch
+    read_retries: int = 0             # seqlock re-reads while this epoch ran
+    shared_wait_s: float = 0.0        # readers' shared-stripe waits
+    shared_waits: int = 0             # reads that fell back to shared mode
     aborted: bool = False
 
     def __post_init__(self):
@@ -53,6 +56,16 @@ class SnapshotMetrics:
         with self._lock:
             self.gate_wait_s += wait_s
             self.gate_waits += 1
+
+    def record_read_event(self, retries: int, shared_wait_s: float) -> None:
+        """One read's seqlock churn while this epoch was in flight:
+        ``retries`` fast-path re-reads plus (when the read fell back to
+        shared stripe mode) its summed shared-acquisition wait."""
+        with self._lock:
+            self.read_retries += retries
+            if shared_wait_s > 0.0:
+                self.shared_wait_s += shared_wait_s
+                self.shared_waits += 1
 
     @property
     def n_interruptions(self) -> int:
@@ -103,4 +116,7 @@ class SnapshotMetrics:
             "inherited_blocks": float(self.inherited_blocks),
             "gate_wait_us": self.gate_wait_s * 1e6,
             "gate_waits": float(self.gate_waits),
+            "read_retries": float(self.read_retries),
+            "shared_wait_us": self.shared_wait_s * 1e6,
+            "shared_waits": float(self.shared_waits),
         }

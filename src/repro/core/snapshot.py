@@ -344,6 +344,14 @@ class Snapshotter:
         if snaps:
             snaps[-1].metrics.record_gate_wait(wait_s)
 
+    def note_read_event(self, retries: int, shared_wait_s: float) -> None:
+        """Charge one read's seqlock churn (fast-path retries and any
+        shared-stripe fallback wait) to the newest in-flight epoch, under
+        the same single-epoch convention as :meth:`note_gate_wait`."""
+        snaps = self.active()
+        if snaps:
+            snaps[-1].metrics.record_read_event(retries, shared_wait_s)
+
     def active(self) -> List[SnapshotHandle]:
         with self._active_lock:
             return [
@@ -513,6 +521,8 @@ class BlockingSnapshotter(Snapshotter):
                     raise SnapshotError("fork failed") from exc
                 table.mark(ref.key, BlockState.COPIED)
                 snap.metrics.copied_blocks_child += 1
+        if not snap.aborted:  # lost trylocks: wait the holder's stage out
+            table.wait_all_not_copying()
         snap.copy_done.set()
         snap.metrics.fork_s = time.perf_counter() - snap.fork_start
         snap.metrics.copy_window_s = snap.metrics.fork_s
@@ -609,6 +619,11 @@ class AsyncForkSnapshotter(Snapshotter):
             finally:
                 done_evt.set()
                 if all(e.is_set() for e in pending):
+                    # Both copier sweeps skip a block the parent's
+                    # sync_for_write holds in COPYING; its stage may still
+                    # be in flight, so wait it out before sealing.
+                    if not snap.aborted:
+                        table.wait_all_not_copying()
                     snap.metrics.copy_window_s = time.perf_counter() - snap.t0
                     snap.copy_done.set()
 

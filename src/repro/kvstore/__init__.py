@@ -1,12 +1,27 @@
-from repro.kvstore.store import KVStore, ShardedKVStore
+from repro.kvstore.store import KVStore, RoutingView, ShardedKVStore
 from repro.kvstore.workload import Workload, QueryEvent
 from repro.kvstore.engine import KVEngine, EngineReport
+from repro.kvstore.server import (
+    FlushRequest,
+    GetRequest,
+    Message,
+    Reply,
+    RequestServer,
+    SetRequest,
+)
 
 __all__ = [
     "KVStore",
+    "RoutingView",
     "ShardedKVStore",
     "Workload",
     "QueryEvent",
     "KVEngine",
     "EngineReport",
+    "RequestServer",
+    "GetRequest",
+    "SetRequest",
+    "FlushRequest",
+    "Message",
+    "Reply",
 ]

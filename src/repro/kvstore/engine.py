@@ -36,6 +36,7 @@ class EngineReport:
     throughput_buckets: np.ndarray  # completed queries per 50 ms bucket
     duration_s: float
     n_shards: int = 1
+    server_stats: Optional[Dict[str, float]] = None  # RequestServer.stats()
 
     @staticmethod
     def _pct(x: np.ndarray, q: float) -> float:
@@ -65,6 +66,11 @@ class EngineReport:
             "interruptions": float(sum(m.get("interruptions", 0.0) for m in mets)),
             "out_of_service_ms": float(sum(m.get("out_of_service_ms", 0.0) for m in mets)),
             "gate_wait_us": float(sum(m.get("gate_wait_us", 0.0) for m in mets)),
+            "read_retries": float(sum(m.get("read_retries", 0.0) for m in mets)),
+            "shared_wait_us": float(sum(m.get("shared_wait_us", 0.0) for m in mets)),
+            "server_queue_depth": float(
+                (self.server_stats or {}).get("queue_depth_max", 0.0)
+            ),
             "fork_ms": float(np.mean([m.get("fork_ms", 0.0) for m in mets])) if mets else float("nan"),
             "copy_window_ms": float(np.mean([m.get("copy_window_ms", 0.0) for m in mets])) if mets else float("nan"),
             "skipped_shards": float(sum(m.get("skipped_shards", 0.0) for m in mets)),
@@ -147,6 +153,11 @@ class KVEngine:
                 lambda shard_id, wait_s:
                 self.coordinator.note_gate_wait(shard_id, wait_s)
             )
+            self._read_event_hook = (
+                lambda shard_id, retries, shared_wait_s:
+                self.coordinator.note_read_event(shard_id, retries,
+                                                 shared_wait_s)
+            )
         else:
             if policy is not None:
                 raise ValueError("BgsavePolicy needs a ShardedKVStore")
@@ -161,6 +172,7 @@ class KVEngine:
                 self.snapshotter.before_write(leaf_id, rows)
             )
             self._gate_wait_hook = None
+            self._read_event_hook = None
 
     @property
     def n_shards(self) -> int:
@@ -319,6 +331,13 @@ class KVEngine:
                 else:
                     store.set(ev.rows, vals_pool[i % 64],
                               before_write=self._write_hook, gate=self._gate)
+            elif self.coordinator is not None:
+                # the concurrent-safe read plane: other threads (a
+                # RequestServer's readers) may be gathering alongside this
+                # serving loop, and its own reads must survive a reshard
+                # action or a racing reader-triggered retry identically
+                store.get_concurrent(ev.rows, gate=self._gate,
+                                     on_read_event=self._read_event_hook)
             else:
                 store.get(ev.rows)
             lat.append((ev.t, (time.perf_counter() - t0) - ev.t))

@@ -1,0 +1,217 @@
+"""Async request server — many client sessions over one engine.
+
+The shape of leveldb-rs's ``AsyncDB`` (SNIPPETS.md §3): clients submit
+``Get`` / ``Set`` / ``Flush`` requests into one bounded request queue,
+each carrying its own single-slot reply channel; a bounded pool of worker
+threads drains the queue against the engine. Replies carry a completion
+timestamp, so open-loop clients can submit without waiting and charge
+queueing delay to latency afterwards (the paper's §3 measurement model).
+
+Concurrency contract: with ``concurrent_reads=True`` (the default) the
+workers serve ``Get`` through :meth:`ShardedKVStore.get_concurrent` —
+seqlock fast path, shared-stripe fallback — and ``Set`` under the
+engine's striped write gates, so any mix of requests is safe on any
+worker. With ``concurrent_reads=False`` the pool degenerates to ONE
+worker (enforced) and every request funnels through that single thread:
+the paper's single-threaded parent, kept as the benchmark's serial arm.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from repro.kvstore.engine import KVEngine
+
+
+@dataclasses.dataclass
+class GetRequest:
+    rows: np.ndarray
+
+
+@dataclasses.dataclass
+class SetRequest:
+    rows: np.ndarray
+    vals: np.ndarray
+
+
+@dataclasses.dataclass
+class FlushRequest:
+    """BGSAVE through the engine (paper's ``BGSAVE`` command)."""
+
+
+_CLOSE = object()  # sentinel: one per worker, queued by close()
+
+
+@dataclasses.dataclass
+class Reply:
+    value: Any                      # Get: rows; Set: None; Flush: snapshot
+    error: Optional[BaseException]
+    done_t: float                   # perf_counter at completion
+
+
+@dataclasses.dataclass
+class Message:
+    """One in-flight request: the request plus its private reply slot."""
+
+    req: Any
+    reply: "queue.Queue[Reply]"
+
+    def wait(self, timeout: Optional[float] = None) -> Reply:
+        return self.reply.get(timeout=timeout)
+
+
+class RequestServer:
+    """Bounded request queue + worker pool over one :class:`KVEngine`.
+
+    ``readers`` sizes the worker pool; ``queue_depth`` bounds the request
+    queue (submit blocks when full — the open-loop generator's backstop
+    against unbounded memory, not a latency hider). ``stats()`` reports
+    request counts and the queue-depth high-water/mean sampled at each
+    submit, which the benchmark threads into
+    ``EngineReport.summary()['server_queue_depth']``.
+    """
+
+    def __init__(
+        self,
+        engine: KVEngine,
+        readers: int = 4,
+        queue_depth: int = 64,
+        concurrent_reads: bool = True,
+    ):
+        readers = int(readers)
+        if readers < 1:
+            raise ValueError("need at least one worker")
+        if not concurrent_reads and readers != 1:
+            raise ValueError(
+                "concurrent_reads=False is the single-threaded serial arm; "
+                "it requires readers=1 (a multi-worker pool would race "
+                "serial get/set)"
+            )
+        self.engine = engine
+        self.concurrent_reads = bool(concurrent_reads)
+        self._q: "queue.Queue[Message]" = queue.Queue(maxsize=int(queue_depth))
+        self._lock = threading.Lock()
+        self._counts = {"get": 0, "set": 0, "flush": 0}
+        self._depth_max = 0
+        self._depth_sum = 0
+        self._depth_samples = 0
+        self._closed = False
+        self._workers = [
+            threading.Thread(target=self._worker, name=f"kv-server-{i}",
+                             daemon=True)
+            for i in range(readers)
+        ]
+        for w in self._workers:
+            w.start()
+
+    # -- client side -----------------------------------------------------
+    def submit(self, req: Any, timeout: Optional[float] = None) -> Message:
+        """Enqueue a request, return its message WITHOUT waiting for the
+        reply (open-loop clients collect ``msg.wait()`` later)."""
+        if self._closed:
+            raise RuntimeError("server is closed")
+        msg = Message(req, queue.Queue(maxsize=1))
+        self._q.put(msg, timeout=timeout)
+        depth = self._q.qsize()
+        with self._lock:
+            if isinstance(req, GetRequest):
+                self._counts["get"] += 1
+            elif isinstance(req, SetRequest):
+                self._counts["set"] += 1
+            elif isinstance(req, FlushRequest):
+                self._counts["flush"] += 1
+            self._depth_max = max(self._depth_max, depth)
+            self._depth_sum += depth
+            self._depth_samples += 1
+        return msg
+
+    def _call(self, req: Any, timeout: Optional[float] = None) -> Any:
+        reply = self.submit(req).wait(timeout=timeout)
+        if reply.error is not None:
+            raise reply.error
+        return reply.value
+
+    def get(self, rows, timeout: Optional[float] = None) -> np.ndarray:
+        return self._call(GetRequest(np.asarray(rows)), timeout)
+
+    def set(self, rows, vals, timeout: Optional[float] = None) -> None:
+        self._call(SetRequest(np.asarray(rows), np.asarray(vals)), timeout)
+
+    def flush(self, timeout: Optional[float] = None):
+        """Synchronous BGSAVE trigger; returns the snapshot handle (its
+        persist may still be draining — callers ``wait_persisted``)."""
+        return self._call(FlushRequest(), timeout)
+
+    def close(self, timeout: Optional[float] = None) -> None:
+        """Drain the queue and stop the pool (idempotent). Requests
+        already submitted are served; new submits raise."""
+        if self._closed:
+            return
+        self._closed = True
+        for _ in self._workers:
+            close_msg = Message(_CLOSE, queue.Queue(maxsize=1))
+            self._q.put(close_msg)
+        for w in self._workers:
+            w.join(timeout=timeout)
+
+    def __enter__(self) -> "RequestServer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- worker side -----------------------------------------------------
+    def _worker(self) -> None:
+        while True:
+            msg = self._q.get()
+            if msg.req is _CLOSE:
+                return
+            try:
+                value = self._dispatch(msg.req)
+                err: Optional[BaseException] = None
+            except BaseException as exc:  # the CLIENT decides what's fatal
+                value, err = None, exc
+            msg.reply.put(Reply(value, err, time.perf_counter()))
+
+    def _dispatch(self, req: Any) -> Any:
+        eng = self.engine
+        store = eng.store
+        if isinstance(req, GetRequest):
+            if self.concurrent_reads and eng.coordinator is not None:
+                return store.get_concurrent(
+                    req.rows, gate=eng._gate,
+                    on_read_event=eng._read_event_hook,
+                )
+            return store.get(req.rows)  # serial arm: the single worker
+        if isinstance(req, SetRequest):
+            if eng.coordinator is not None:
+                store.set(req.rows, req.vals,
+                          before_write=eng._write_hook, gate=eng._gate,
+                          on_gate_wait=eng._gate_wait_hook)
+            else:
+                store.set(req.rows, req.vals, before_write=eng._write_hook)
+            return None
+        if isinstance(req, FlushRequest):
+            return eng.bgsave()
+        raise TypeError(f"unknown request {type(req).__name__}")
+
+    # -- observability ---------------------------------------------------
+    def stats(self) -> Dict[str, float]:
+        with self._lock:
+            samples = self._depth_samples
+            return {
+                "gets": float(self._counts["get"]),
+                "sets": float(self._counts["set"]),
+                "flushes": float(self._counts["flush"]),
+                "queue_depth_max": float(self._depth_max),
+                "queue_depth_mean": (
+                    self._depth_sum / samples if samples else 0.0
+                ),
+                "readers": float(len(self._workers)),
+                "concurrent_reads": float(self.concurrent_reads),
+            }

@@ -12,8 +12,9 @@ redis-benchmark's integer key space does.
 from __future__ import annotations
 
 import re
+import time
 from functools import partial
-from typing import Callable, List, Optional, Sequence
+from typing import Callable, List, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -208,6 +209,43 @@ class KVStore:
 _SHARD_LEAF_RE = re.compile(r"^shard(\d+)/blocks/(\d+)$")
 
 
+class RoutingView(NamedTuple):
+    """One immutable snapshot of the sharded store's routing state.
+
+    ``layout`` (the versioned block partition), ``row_bounds`` (its row
+    prefix sums) and ``stores`` (the shard stores, as a tuple) are
+    published TOGETHER as a single attribute store — a reader that
+    snapshots the view can never route new-layout rows against old-layout
+    bounds or old-layout stores (the pre-PR-6 store published
+    ``_row_bounds`` and ``layout`` as two separate attributes, leaving
+    exactly that window open between the two stores)."""
+
+    layout: ShardLayout
+    row_bounds: np.ndarray
+    stores: Tuple[KVStore, ...]
+
+
+def _gather_ordered(store: KVStore, local: np.ndarray) -> np.ndarray:
+    """:meth:`KVStore.get` returns rows grouped by block (run-coalesced);
+    undo that permutation so the caller gets INPUT order back. The
+    grouping is exactly a stable sort by block id, so its inverse is one
+    scatter — the run-coalesced D2H hot path is untouched."""
+    res = store.get(local)
+    perm = np.argsort(np.asarray(local) // store.block_rows, kind="stable")
+    out = np.empty_like(res)
+    out[perm] = res
+    return out
+
+
+def _is_deleted_buffer_error(exc: BaseException) -> bool:
+    """A gather raced a donated commit: the block's old buffer died
+    between the reader's leaf fetch and its device dispatch. JAX surfaces
+    this as a RuntimeError/ValueError naming the deleted/donated array;
+    anything else is a real error and must propagate."""
+    msg = str(exc).lower()
+    return "delet" in msg or "donat" in msg
+
+
 class ShardedKVStore:
     """Range-partitioned union of N independent :class:`KVStore` shards
     under a versioned :class:`~repro.core.layout.ShardLayout`.
@@ -256,17 +294,36 @@ class ShardedKVStore:
         ]
         self.row_width = int(row_width)
         self.block_rows = int(block_rows)
+        # seqlock over the routing view: EVEN = stable, ODD = a reshard is
+        # mid-swap. Readers snapshot (_seq, _view), gather, and re-check
+        # _seq — a changed counter means a reshard landed mid-read.
+        self._seq = 0
         self._apply_layout(ShardLayout.uniform([s.n_blocks for s in self.shards]))
 
     def _apply_layout(self, layout: ShardLayout) -> None:
-        """Install a layout: bounds first, ``self.layout`` LAST. Striped
-        writers route outside the gate and validate ``self.layout`` object
-        identity after acquiring their stripe — publishing the layout last
-        makes that check sufficient (a writer that saw the new layout also
-        sees the new row bounds and shard list)."""
-        self._row_bounds = layout.row_bounds(self.block_rows)
-        self.capacity = int(self._row_bounds[-1])
-        self.layout = layout
+        """Install a layout by publishing ONE immutable
+        :class:`RoutingView` with a single attribute store. Striped
+        writers route outside the gate and validate the view's object
+        identity after acquiring their stripe; seqlock readers snapshot
+        it ungated — one atomic publish makes both checks sufficient (a
+        thread that saw the new view sees the new layout, bounds and
+        shard stores together, never a mix)."""
+        self._view = RoutingView(
+            layout, layout.row_bounds(self.block_rows), tuple(self.shards)
+        )
+
+    # -- routing-view accessors (all derive from the ONE published view) --
+    @property
+    def layout(self) -> ShardLayout:
+        return self._view.layout
+
+    @property
+    def _row_bounds(self) -> np.ndarray:
+        return self._view.row_bounds
+
+    @property
+    def capacity(self) -> int:
+        return int(self._view.row_bounds[-1])
 
     @property
     def n_shards(self) -> int:
@@ -285,21 +342,24 @@ class ShardedKVStore:
         return [s.provider for s in self.shards]
 
     # -- routing (vectorized over the layout boundaries) -----------------
-    def _route(self, rows: np.ndarray):
+    def _route(self, rows: np.ndarray, view: Optional[RoutingView] = None):
         """Yield ``(shard_id, local_rows, positions)`` per touched shard —
         one ``searchsorted`` + one stable argsort for the whole batch
-        instead of a Python-level scan per row."""
+        instead of a Python-level scan per row. ``view`` pins the routing
+        view; concurrent callers pass the snapshot they validated so every
+        group routes against ONE consistent (layout, bounds, stores)."""
         rows = np.asarray(rows)
         if rows.size == 0:
             return
-        sids = np.searchsorted(self._row_bounds, rows, side="right") - 1
+        row_bounds = (view or self._view).row_bounds
+        sids = np.searchsorted(row_bounds, rows, side="right") - 1
         order = np.argsort(sids, kind="stable")
         sorted_sids = sids[order]
         uniq, starts = np.unique(sorted_sids, return_index=True)
         bounds = np.append(starts[1:], rows.shape[0])
         for u, s, e in zip(uniq, starts, bounds):
             pos = order[s:e]
-            yield int(u), rows[pos] - int(self._row_bounds[u]), pos
+            yield int(u), rows[pos] - int(row_bounds[u]), pos
 
     def set(self, rows, vals, before_write=None, gate=None,
             on_gate_wait=None) -> None:
@@ -324,16 +384,16 @@ class ShardedKVStore:
                 self.shards[k].set(local, vals[pos], before_write=hook, gate=gate)
             return
         while rows.size:
-            layout = self.layout
-            groups = list(self._route(rows))
+            view = self._view
+            groups = list(self._route(rows, view))
             rerouted = False
             for i, (k, local, pos) in enumerate(groups):
                 try:
                     g, wait = gate.acquire(k)
                 except GateRetired:
                     g = None  # layout shrank under us: re-route the tail
-                if g is None or self.layout is not layout:
-                    # a reshard swapped the layout between routing and this
+                if g is None or self._view is not view:
+                    # a reshard swapped the view between routing and this
                     # stripe: the uncommitted tail (this group onward) must
                     # re-route, or it would write through a retired store
                     if g is not None:
@@ -349,16 +409,137 @@ class ShardedKVStore:
                     if before_write is not None:
                         hook = (lambda leaf_id, lrows, _k=k:
                                 before_write(_k, leaf_id, lrows))
-                    self.shards[k]._commit(local, vals[pos], hook)
+                    view.stores[k]._commit(local, vals[pos], hook)
                 finally:
                     g.release()
             if not rerouted:
                 return
 
     def get(self, rows) -> np.ndarray:
+        """Serial gather — the paper's single-threaded parent. Safe only
+        on the thread that also issues the writes (or with writers
+        quiesced): a concurrent donated commit can kill a block buffer
+        mid-gather. Concurrent readers use :meth:`get_concurrent`.
+
+        NOTE: rows crossing shard boundaries come back grouped by shard
+        (historical behavior, callers sort); ``get_concurrent`` returns
+        input order."""
         outs = [self.shards[k].get(local) for k, local, _ in self._route(rows)]
         return (np.concatenate(outs) if outs
                 else np.empty((0, self.row_width), np.float32))
+
+    def get_concurrent(
+        self,
+        rows,
+        gate: Optional[GateSet] = None,
+        max_retries: int = 8,
+        donation_retries: int = 64,
+        on_read_event: Optional[Callable[[int, int, float], None]] = None,
+    ) -> np.ndarray:
+        """Concurrent-safe gather, lock-free on the uncontended path.
+
+        Seqlock fast path: snapshot ``(_seq, _view)``, gather through the
+        view's stores, re-validate ``_seq`` — when no reshard landed
+        mid-read (the overwhelmingly common case) the read takes NO lock
+        and never blocks a writer anywhere. The two failure modes retry
+        on different budgets: layout CHURN (odd counter / failed seq
+        validation — a reshard mid-swap) spends ``max_retries`` spinning
+        attempts, then falls back to SHARED stripe acquisition
+        (``gate.acquire_shared``), which serializes against the swap.
+        A DONATION race (the touched block's old buffer died under a
+        mid-commit write) instead backs off ~1ms and re-reads, up to
+        ``donation_retries`` — the writer publishes the replacement
+        buffer within one commit, so grabbing stripes here would only
+        convoy every reader behind every writer; the generous budget
+        still bounds the spin, and exhausting it takes the shared
+        fallback too (excluding the shard's writer excludes the race),
+        so progress is guaranteed either way (no livelock).
+
+        Returns rows in INPUT order (unlike :meth:`get`).
+        ``on_read_event(shard_id, retries, shared_wait_s)`` fires once per
+        call that retried or fell back, so the engine can charge read-side
+        churn to the in-flight epoch next to ``gate_wait_us``."""
+        rows = np.asarray(rows)
+        out = np.empty((rows.shape[0], self.row_width), np.float32)
+        if rows.size == 0:
+            return out
+        retries = 0
+        shared_wait = 0.0
+        first_shard = 0
+        try:
+            churn = races = 0
+            while churn < max_retries and races < donation_retries:
+                seq0 = self._seq
+                view = self._view
+                if seq0 & 1:  # reshard mid-swap: the view may be stale
+                    churn += 1
+                    retries += 1
+                    continue
+                try:
+                    for k, local, pos in self._route(rows, view):
+                        first_shard = k
+                        out[pos] = _gather_ordered(view.stores[k], local)
+                except (RuntimeError, ValueError) as exc:
+                    if not _is_deleted_buffer_error(exc):
+                        raise
+                    races += 1
+                    retries += 1
+                    time.sleep(1e-3)  # one commit republishes the buffer
+                    continue
+                if self._seq == seq0:
+                    return out
+                churn += 1
+                retries += 1  # a reshard landed mid-gather: re-read
+            # -- bounded fallback: shared stripes exclude the writers ----
+            remaining = rows
+            positions = np.arange(rows.shape[0])
+            while remaining.size:
+                view = self._view
+                groups = list(self._route(remaining, view))
+                rerouted = False
+                for i, (k, local, pos) in enumerate(groups):
+                    first_shard = k
+                    if gate is None:
+                        # store-only use (no coordinator): best effort —
+                        # re-gather through the freshest view until the
+                        # buffers stop dying under us
+                        try:
+                            out[positions[pos]] = _gather_ordered(view.stores[k], local)
+                            continue
+                        except (RuntimeError, ValueError) as exc:
+                            if not _is_deleted_buffer_error(exc):
+                                raise
+                            retries += 1
+                            rerouted = True
+                    else:
+                        try:
+                            g, wait = gate.acquire_shared(k)
+                        except GateRetired:
+                            g = None  # layout shrank: re-route the tail
+                        if g is not None and self._view is not view:
+                            g.release_shared()
+                            g = None
+                        if g is None:
+                            retries += 1
+                            rerouted = True
+                        else:
+                            try:
+                                shared_wait += wait
+                                out[positions[pos]] = _gather_ordered(view.stores[k], local)
+                                continue
+                            finally:
+                                g.release_shared()
+                    # stale view/stripe: re-route this group onward
+                    rest = np.concatenate([p for _, _, p in groups[i:]])
+                    remaining = remaining[rest]
+                    positions = positions[rest]
+                    break
+                if not rerouted:
+                    break
+            return out
+        finally:
+            if on_read_event is not None and (retries or shared_wait):
+                on_read_event(first_shard, retries, shared_wait)
 
     def read_all(self) -> np.ndarray:
         return np.concatenate([s.read_all() for s in self.shards])
@@ -381,8 +562,12 @@ class ShardedKVStore:
         blocks = src.blocks_list()
         left = KVStore.from_blocks(blocks[:at], self.row_width, self.block_rows)
         right = KVStore.from_blocks(blocks[at:], self.row_width, self.block_rows)
-        self.shards[shard_id: shard_id + 1] = [left, right]
-        self._apply_layout(new_layout)
+        self._seq += 1  # odd: readers that snapshot now will retry
+        try:
+            self.shards[shard_id: shard_id + 1] = [left, right]
+            self._apply_layout(new_layout)
+        finally:
+            self._seq += 1  # even: new view published, reads validate
         return self.layout
 
     def merge(self, shard_id: int, other: int) -> ShardLayout:
@@ -392,8 +577,12 @@ class ShardedKVStore:
         blocks = self.shards[shard_id].blocks_list() + \
             self.shards[other].blocks_list()
         merged = KVStore.from_blocks(blocks, self.row_width, self.block_rows)
-        self.shards[shard_id: other + 1] = [merged]
-        self._apply_layout(new_layout)
+        self._seq += 1  # odd: readers that snapshot now will retry
+        try:
+            self.shards[shard_id: other + 1] = [merged]
+            self._apply_layout(new_layout)
+        finally:
+            self._seq += 1  # even: new view published, reads validate
         return self.layout
 
     # -- cross-layout restore ---------------------------------------------

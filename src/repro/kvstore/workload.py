@@ -95,6 +95,21 @@ class Workload:
             out.append(evs)
         return out
 
+    def reader_streams(
+        self,
+        capacity: int,
+        duration_s: float,
+        readers: int,
+        spans: Optional[List] = None,
+    ) -> List[List[QueryEvent]]:
+        """Per-thread open-loop GET streams for the multi-reader benchmark
+        (spawn-db-gets style): the reader-side mirror of
+        :meth:`writer_streams` — same span carving, rate/client division
+        and independent seeds, but every event is a ``get``."""
+        return dataclasses.replace(self, set_ratio=0.0).writer_streams(
+            capacity, duration_s, readers, spans
+        )
+
     def _keys(self, rng: np.random.Generator, capacity: int) -> np.ndarray:
         """One query = ``batch`` consecutive keys from a pattern-drawn base
         (a pipelined redis-benchmark request touches one locality region)."""

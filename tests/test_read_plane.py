@@ -1,0 +1,536 @@
+"""Concurrent read plane (PR 6): SharedGate / shared-stripe semantics,
+the single-publish routing view, seqlock reads, the RequestServer, and
+the headline invariant —
+
+    ANY interleaving of concurrent readers with per-shard writers, BGSAVE
+    barriers, and split/merge loops yields, for every row of every read,
+    a value some prefix of that row's committed writes could produce —
+    never a torn row, never bytes through a retired store's stale routing
+    (DESIGN.md §10).
+
+The concurrency tests run seeded even without hypothesis; with the
+optional 'test' extra installed, a hypothesis wrapper additionally draws
+the reader/writer/shard geometry and the reshard op.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import GateRetired, GateSet, SharedGate, SnapshotMetrics
+from repro.kvstore import (
+    FlushRequest,
+    GetRequest,
+    KVEngine,
+    RequestServer,
+    SetRequest,
+    ShardedKVStore,
+    Workload,
+)
+from repro.kvstore.store import RoutingView
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # property wrapper skips; seeded tests still run
+    HAVE_HYPOTHESIS = False
+
+
+# --------------------------------------------------------------------- #
+# SharedGate unit semantics                                              #
+# --------------------------------------------------------------------- #
+def test_shared_readers_overlap():
+    g = SharedGate()
+    assert g.acquire_shared(blocking=False)
+    ok = threading.Event()
+
+    def other():
+        assert g.acquire_shared(blocking=False)  # overlaps the first hold
+        g.release_shared()
+        ok.set()
+
+    th = threading.Thread(target=other)
+    th.start()
+    th.join(5.0)
+    assert ok.is_set()
+    g.release_shared()
+
+
+def test_exclusive_excludes_shared_and_vice_versa():
+    g = SharedGate()
+    with g:  # exclusive
+        done = []
+        th = threading.Thread(
+            target=lambda: done.append(g.acquire_shared(blocking=False)))
+        th.start()
+        th.join(5.0)
+        assert done == [False]
+    g.acquire_shared()
+    done2 = []
+    th = threading.Thread(target=lambda: done2.append(g.acquire(blocking=False)))
+    th.start()
+    th.join(5.0)
+    assert done2 == [False]
+    g.release_shared()
+
+
+def test_writer_preference_blocks_new_shared():
+    """A QUEUED exclusive acquirer must not starve behind a stream of
+    overlapping readers: once a writer waits, fresh shared acquires from
+    other threads block until it gets through."""
+    g = SharedGate()
+    g.acquire_shared()
+    writer_in = threading.Event()
+
+    def writer():
+        with g:
+            writer_in.set()
+
+    th = threading.Thread(target=writer)
+    th.start()
+    time.sleep(0.05)  # let the writer queue up on the condition
+    late = []
+    th2 = threading.Thread(
+        target=lambda: late.append(g.acquire_shared(blocking=False)))
+    th2.start()
+    th2.join(5.0)
+    assert late == [False]  # writer-preference: the late reader yields
+    g.release_shared()
+    th.join(5.0)
+    assert writer_in.is_set()
+
+
+def test_exclusive_holder_may_read_shared():
+    """The barrier thread reads through its own stripes (reentrant
+    shared-in-exclusive — e.g. a bgsave gathering under the all-gate)."""
+    g = SharedGate()
+    with g:
+        assert g.acquire_shared(blocking=False)
+        g.release_shared()
+
+
+def test_shared_release_without_hold_raises():
+    g = SharedGate()
+    with pytest.raises(RuntimeError):
+        g.release_shared()
+    with pytest.raises(RuntimeError):
+        g.release()
+
+
+def test_gateset_shared_blocked_on_fresh_stripe_until_barrier_exit():
+    """A stripe born held from a mid-barrier resize admits readers only
+    when the resizing barrier exits — same rule as writers."""
+    gs = GateSet(2)
+    got = threading.Event()
+
+    def reader_new_stripe():
+        sg, _ = gs.acquire_shared(2)  # only exists after the resize
+        sg.release_shared()
+        got.set()
+
+    gs.acquire_all()
+    gs.resize(3, carry={0: 0, 1: 1})
+    th = threading.Thread(target=reader_new_stripe)
+    th.start()
+    th.join(0.2)
+    assert not got.is_set()  # fresh gate is exclusive-held by the barrier
+    gs.release_all()
+    assert got.wait(5.0)
+    th.join(5.0)
+
+
+def test_gateset_shared_out_of_range_raises_retired():
+    gs = GateSet(2)
+    with pytest.raises(GateRetired):
+        gs.acquire_shared(5)
+
+
+def test_all_gate_barrier_not_starved_by_hot_writer():
+    """FIFO service order: a writer hammering acquire/release in a tight
+    loop must not indefinitely re-take a briefly free stripe ahead of a
+    blocked all-gate barrier (a bare Condition lets the running thread
+    win every wakeup race — the barrier once starved for minutes here)."""
+    gs = GateSet(3)
+    stop = threading.Event()
+
+    def hot_writer():
+        while not stop.is_set():
+            with gs.all():
+                time.sleep(0.0005)
+
+    th = threading.Thread(target=hot_writer)
+    th.start()
+    try:
+        time.sleep(0.05)  # let the writer reach steady-state hammering
+        for _ in range(3):
+            t0 = time.perf_counter()
+            with gs.all():
+                waited = time.perf_counter() - t0
+            # generous bound: pre-fix this exceeded 60s routinely
+            assert waited < 5.0, f"barrier starved {waited:.1f}s"
+    finally:
+        stop.set()
+        th.join(10.0)
+
+
+def test_gateset_shared_wait_metered():
+    gs = GateSet(2)
+    sg, w = gs.acquire_shared(0)
+    assert w == 0.0  # uncontended: no wait charged
+    sg.release_shared()
+    summ = gs.wait_summary()
+    assert "shared_wait_us" in summ and "shared_waits" in summ
+
+
+# --------------------------------------------------------------------- #
+# routing view: one atomic publish                                       #
+# --------------------------------------------------------------------- #
+def test_routing_view_is_single_published_object():
+    store = ShardedKVStore(4 * 16 * 2, row_width=8, block_rows=16, shards=2)
+    v = store._view
+    assert isinstance(v, RoutingView)
+    # every routing accessor derives from the ONE view (the pre-PR-6
+    # split publication of _row_bounds then layout is gone)
+    assert store.layout is v.layout
+    assert store._row_bounds is v.row_bounds
+    assert store.capacity == int(v.row_bounds[-1])
+    assert v.stores == tuple(store.shards)
+    store.split(0)
+    v2 = store._view
+    assert v2 is not v and v2.layout.epoch == 1
+    assert store._seq == 2  # even again: seqlock round-tripped
+
+
+def test_get_concurrent_returns_input_order():
+    store = ShardedKVStore(4 * 16 * 3, row_width=8, block_rows=16, shards=3)
+    rng = np.random.default_rng(0)
+    rows = rng.permutation(store.capacity)[:40].astype(np.int64)
+    vals = rng.random((40, 8), dtype=np.float32)
+    store.set(rows, vals)
+    out = store.get_concurrent(rows)
+    assert np.array_equal(out, vals)  # scrambled cross-shard, cross-block
+
+
+# --------------------------------------------------------------------- #
+# readers vs writers / barriers / reshards (tentpole acceptance)         #
+# --------------------------------------------------------------------- #
+def _run_read_interleaving(n_shards, writers, readers, seed=0,
+                           duration_s=0.8, reshard=True):
+    """Concurrent get_concurrent readers vs span-confined writers, a
+    BGSAVE loop, and (optionally) a split/merge loop. Returns per-read
+    records for the prefix-consistency check."""
+    block_rows = 16
+    capacity = n_shards * 4 * block_rows
+    store = ShardedKVStore(capacity, row_width=8, block_rows=block_rows,
+                           seed=seed, shards=n_shards)
+    eng = KVEngine(store, mode="asyncfork", copier_threads=1,
+                   persist_bandwidth=None, copier_duty=1.0)
+    store.warmup(batch=4)
+    init = store.read_all().copy()
+    spans = [(w * capacity // writers, (w + 1) * capacity // writers)
+             for w in range(writers)]
+    batch_log = [[] for _ in range(writers)]  # (seq, t_start, t_end)
+    reads = []       # (writer, rows, out, t_start, t_end)
+    reads_lock = threading.Lock()
+    errors = []
+    stop = threading.Event()
+    start = threading.Barrier(writers + readers + 1)
+
+    def writer(w):
+        lo, hi = spans[w]
+        rows = np.arange(lo, hi, dtype=np.int64)
+        start.wait()
+        try:
+            seq = 0
+            while not stop.is_set():
+                seq += 1
+                vals = np.full((rows.size, 8), float(w * 1000 + seq),
+                               np.float32)
+                t0 = time.perf_counter()
+                store.set(rows, vals, before_write=eng._write_hook,
+                          gate=eng._gate, on_gate_wait=eng._gate_wait_hook)
+                batch_log[w].append((seq, t0, time.perf_counter()))
+        except BaseException as exc:  # pragma: no cover - asserted below
+            errors.append(exc)
+
+    def reader(r):
+        rng = np.random.default_rng(seed * 100 + r)
+        start.wait()
+        try:
+            local = []
+            while not stop.is_set():
+                w = int(rng.integers(0, writers))
+                lo, hi = spans[w]
+                a = int(rng.integers(lo, hi - 4))
+                rows = np.arange(a, a + 4, dtype=np.int64)
+                t0 = time.perf_counter()
+                out = store.get_concurrent(
+                    rows, gate=eng._gate,
+                    on_read_event=eng._read_event_hook)
+                local.append((w, rows, out, t0, time.perf_counter()))
+            with reads_lock:
+                reads.extend(local)
+        except BaseException as exc:  # pragma: no cover - asserted below
+            errors.append(exc)
+
+    def reshard_loop():
+        try:
+            while not stop.is_set():
+                eng.split(0)
+                eng.merge(0, 1)
+        except BaseException as exc:  # pragma: no cover
+            errors.append(exc)
+
+    def barrier_loop():
+        try:
+            while not stop.is_set():
+                eng.coordinator.bgsave().wait_persisted(30)
+        except BaseException as exc:  # pragma: no cover
+            errors.append(exc)
+
+    threads = [threading.Thread(target=writer, args=(w,))
+               for w in range(writers)]
+    threads += [threading.Thread(target=reader, args=(r,))
+                for r in range(readers)]
+    extra = [threading.Thread(target=barrier_loop)]
+    if reshard:
+        extra.append(threading.Thread(target=reshard_loop))
+    for th in threads + extra:
+        th.start()
+    start.wait()
+    time.sleep(duration_s)
+    stop.set()
+    for th in threads + extra:
+        th.join(60.0)
+        assert not th.is_alive(), "read-plane thread deadlocked"
+    assert not errors, errors
+    eng.coordinator.wait_all(60)
+    return init, batch_log, reads
+
+
+def _check_prefix_consistent_reads(init, batch_log, reads):
+    """Per ROW of every read: the observed value is either the row's
+    initial value or some writer batch w*1000+seq, with seq bounded below
+    by the newest batch that COMPLETED before the read began and above by
+    the newest batch that STARTED before the read ended — i.e. exactly a
+    prefix of that row's committed writes. Any stale-routing read through
+    a retired store would surface as an impossible seq or a foreign
+    writer's value."""
+    assert reads, "readers recorded nothing"
+    for w, rows, out, t0, t1 in reads:
+        log = batch_log[w]
+        floor = max((s for s, _, e in log if e < t0), default=0)
+        ceil = max((s for s, b, _ in log if b < t1), default=0)
+        for i, row in enumerate(rows):
+            if np.array_equal(out[i], init[row]):
+                assert floor == 0, (
+                    f"row {row}: read returned the INITIAL value after "
+                    f"batch {floor} completed (read through a retired "
+                    "store's stale buffers)"
+                )
+                continue  # prefix of length zero, pre-first-batch
+            rv = np.unique(out[i])
+            assert rv.size == 1, (
+                f"row {row}: torn ROW in read (values {rv[:4]}...) — one "
+                "row is written by one scatter, it can never be mixed"
+            )
+            seq = int(round(float(rv[0]))) - w * 1000
+            assert 1 <= seq <= len(log), (
+                f"row {row}: value {v} is no batch of writer {w} "
+                "(stale routing through a retired store?)"
+            )
+            assert seq >= floor, (
+                f"row {row}: read saw batch {seq} but batch {floor} "
+                f"completed before the read began (time-travel read)"
+            )
+            assert seq <= ceil, (
+                f"row {row}: read saw batch {seq} which only started "
+                f"after the read ended"
+            )
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_readers_vs_writers_barriers_and_reshards(seed):
+    init, batch_log, reads = _run_read_interleaving(
+        n_shards=2, writers=2, readers=3, seed=seed)
+    _check_prefix_consistent_reads(init, batch_log, reads)
+
+
+def test_readers_vs_writers_no_reshard_mostly_lock_free():
+    """With no reshard loop the seqlock never bumps: reads must still be
+    donation-safe (deleted-buffer retries) and prefix-consistent."""
+    init, batch_log, reads = _run_read_interleaving(
+        n_shards=2, writers=2, readers=2, seed=7, reshard=False)
+    _check_prefix_consistent_reads(init, batch_log, reads)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=6, deadline=None)
+    @given(
+        n_shards=st.integers(2, 3),
+        writers=st.integers(1, 3),
+        readers=st.integers(1, 4),
+        seed=st.integers(0, 3),
+        reshard=st.booleans(),
+    )
+    def test_property_reads_are_prefix_consistent(
+        n_shards, writers, readers, seed, reshard
+    ):
+        init, batch_log, reads = _run_read_interleaving(
+            n_shards=n_shards, writers=writers, readers=readers,
+            seed=seed, duration_s=0.4, reshard=reshard)
+        _check_prefix_consistent_reads(init, batch_log, reads)
+
+
+def test_get_concurrent_bounded_retries_fall_back_to_shared():
+    """Seqlock churn must not livelock: with the counter pinned ODD (a
+    reshard forever mid-swap, the worst case) the fast path exhausts its
+    bounded retries and the shared-stripe fallback still completes the
+    read — against the stripes, which nothing holds here."""
+    store = ShardedKVStore(2 * 4 * 16, row_width=8, block_rows=16, shards=2)
+    gs = GateSet(2)
+    rows = np.arange(8, dtype=np.int64)
+    vals = np.random.rand(8, 8).astype(np.float32)
+    store.set(rows, vals)
+    store._seq = 1  # pinned odd: every fast-path attempt must retry
+    try:
+        events = []
+        out = store.get_concurrent(
+            rows, gate=gs, max_retries=3,
+            on_read_event=lambda k, r, w: events.append((k, r, w)))
+        assert np.array_equal(out, vals)
+        assert events and events[0][1] == 3  # all three retries, then shared
+    finally:
+        store._seq = 0
+
+
+# --------------------------------------------------------------------- #
+# RequestServer                                                          #
+# --------------------------------------------------------------------- #
+def _small_engine(shards=2):
+    store = ShardedKVStore(shards * 4 * 16, row_width=8, block_rows=16,
+                           shards=shards)
+    eng = KVEngine(store, mode="asyncfork", copier_threads=1,
+                   persist_bandwidth=None, copier_duty=1.0)
+    store.warmup(batch=4)
+    return eng
+
+
+def test_request_server_round_trip_and_stats():
+    eng = _small_engine()
+    with RequestServer(eng, readers=3, queue_depth=16) as srv:
+        rows = np.arange(12, dtype=np.int64)
+        vals = np.random.rand(12, 8).astype(np.float32)
+        srv.set(rows, vals)
+        assert np.array_equal(srv.get(rows), vals)
+        snap = srv.flush()
+        assert snap.wait_persisted(60) and snap.ok
+        s = srv.stats()
+        assert s["gets"] == 1.0 and s["sets"] == 1.0 and s["flushes"] == 1.0
+        assert s["queue_depth_max"] >= 0.0 and s["readers"] == 3.0
+    eng.coordinator.wait_all(60)
+
+
+def test_request_server_open_loop_submit():
+    """Open-loop clients: submit N gets without waiting, collect replies
+    afterwards — every reply carries a completion timestamp."""
+    eng = _small_engine()
+    rows = np.arange(8, dtype=np.int64)
+    vals = np.random.rand(8, 8).astype(np.float32)
+    eng.store.set(rows, vals)
+    with RequestServer(eng, readers=4, queue_depth=32) as srv:
+        t0 = time.perf_counter()
+        msgs = [srv.submit(GetRequest(rows)) for _ in range(16)]
+        for m in msgs:
+            rep = m.wait(timeout=30)
+            assert rep.error is None
+            assert rep.done_t >= t0
+            assert np.array_equal(rep.value, vals)
+
+
+def test_request_server_concurrent_sessions():
+    """Many threads hammer get/set/flush through one server: replies all
+    arrive, every read is a full row the engine could have produced."""
+    eng = _small_engine()
+    cap = eng.store.capacity
+    errors = []
+    with RequestServer(eng, readers=4, queue_depth=64) as srv:
+        def session(c):
+            rng = np.random.default_rng(c)
+            try:
+                for i in range(20):
+                    a = int(rng.integers(0, cap - 4))
+                    rows = np.arange(a, a + 4, dtype=np.int64)
+                    if i % 3 == 0:
+                        srv.set(rows, np.full((4, 8), float(c), np.float32))
+                    else:
+                        out = srv.get(rows)
+                        assert out.shape == (4, 8)
+                if c == 0:
+                    srv.flush().wait_persisted(60)
+            except BaseException as exc:  # pragma: no cover
+                errors.append(exc)
+
+        ths = [threading.Thread(target=session, args=(c,)) for c in range(6)]
+        for th in ths:
+            th.start()
+        for th in ths:
+            th.join(60.0)
+            assert not th.is_alive()
+    assert not errors, errors
+    eng.coordinator.wait_all(60)
+
+
+def test_request_server_serial_arm_enforces_one_worker():
+    eng = _small_engine()
+    with pytest.raises(ValueError):
+        RequestServer(eng, readers=2, concurrent_reads=False)
+    srv = RequestServer(eng, readers=1, concurrent_reads=False)
+    rows = np.arange(4, dtype=np.int64)
+    vals = np.random.rand(4, 8).astype(np.float32)
+    srv.set(rows, vals)
+    assert np.array_equal(srv.get(rows), vals)
+    srv.close()
+
+
+def test_request_server_error_reply_and_close():
+    eng = _small_engine()
+    srv = RequestServer(eng, readers=2)
+    rep = srv.submit(object()).wait(timeout=30)  # unknown request type
+    assert isinstance(rep.error, TypeError)
+    srv.close()
+    srv.close()  # idempotent
+    with pytest.raises(RuntimeError):
+        srv.get(np.arange(4, dtype=np.int64))
+
+
+# --------------------------------------------------------------------- #
+# metrics plumbing                                                       #
+# --------------------------------------------------------------------- #
+def test_read_metrics_reach_every_summary():
+    m = SnapshotMetrics()
+    m.record_read_event(3, 0.002)
+    s = m.summary()
+    assert s["read_retries"] == 3.0
+    assert s["shared_wait_us"] == pytest.approx(2000.0)
+    assert s["shared_waits"] == 1.0
+
+    eng = _small_engine()
+    snap = eng.coordinator.bgsave()
+    # out-of-range shard ids clamp instead of raising (a reshard may have
+    # shrunk the layout since the read routed); charges only land while
+    # the epoch is in flight, so aggregate through the part directly
+    eng.coordinator.note_read_event(99, 1, 0.0)
+    snap.parts[0].metrics.record_read_event(2, 0.001)
+    snap.wait_persisted(60)
+    agg = snap.metrics.summary()
+    assert agg["read_retries"] == 2.0
+    assert agg["shared_wait_us"] == pytest.approx(1000.0)
+
+    rep = eng.run(Workload(rate_qps=200.0, set_ratio=0.5), 0.3,
+                  bgsave_at=(0.3,))
+    summ = rep.summary()
+    for key in ("read_retries", "shared_wait_us", "server_queue_depth"):
+        assert key in summ
+    eng.coordinator.wait_all(60)
