@@ -343,6 +343,263 @@ def run_read_concurrency(spec):
     }
 
 
+def run_snapshot_reads(spec):
+    """Snapshot-reads-as-a-product harness (PR 7): live open-loop readers
+    + a background writer through a :class:`RequestServer`, with (the
+    ``analytical=True`` arm) extra analyst streams issuing
+    ``GetAtRequest`` point-in-time reads against a pinned epoch through
+    the SAME server. GetAt resolves against the epoch's frozen images —
+    no gate, no seqlock, no retries — so the live read tail should track
+    the live-only baseline arm; the analysts only contend for workers.
+
+    The same run then measures the fork cost of a writable branch
+    (``KVEngine.branch``: COW wrap, O(metadata)) against an honest full
+    copy of the epoch's images into fresh device blocks, and finally
+    builds a delta chain ``max_chain + 2`` deep on disk and lets the
+    :class:`ChainCompactor` fold it, timing the chain restore before and
+    after the fold."""
+    import os
+    import shutil
+    import tempfile
+    import threading
+    import time
+
+    import numpy as np
+
+    from repro.core import (
+        BgsavePolicy,
+        ChainCompactor,
+        CompactionPolicy,
+        read_file_snapshot,
+    )
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kvstore import (
+        FlushRequest,
+        GetAtRequest,
+        GetRequest,
+        KVEngine,
+        KVStore,
+        RequestServer,
+        SetRequest,
+        ShardedKVStore,
+        Workload,
+    )
+
+    capacity = int(spec["size_mb"] * (1 << 20) / (4 * spec.get("row_width", 256)))
+    shards = int(spec.get("shards", 2))
+    readers = max(1, int(spec.get("readers", 2)))
+    analysts = max(1, int(spec.get("analysts", 2)))
+    analytical = bool(spec.get("analytical", True))
+    duration = float(spec.get("duration", 8.0))
+    max_chain = max(1, int(spec.get("max_chain", 3)))
+    store = ShardedKVStore(
+        capacity,
+        row_width=spec.get("row_width", 256),
+        block_rows=spec.get("block_rows", 4096),
+        seed=0,
+        shards=shards,
+    )
+    eng = KVEngine(
+        store,
+        mode=spec.get("mode", "asyncfork"),
+        copier_threads=spec.get("threads", 1),
+        persist_bandwidth=spec.get("persist_bw"),
+        copier_duty=spec.get("duty", 1.0),
+        persist_workers=spec.get("persist_workers"),
+        policy=BgsavePolicy(delta_threshold=2.0, full_every=99),
+    )
+    capacity = store.capacity  # post block-rounding
+    rd = Workload(rate_qps=spec.get("qps", 300), set_ratio=0.0,
+                  batch=spec.get("batch", 16),
+                  clients=spec.get("clients", 50), seed=spec.get("seed", 1))
+    an = Workload(rate_qps=spec.get("getat_qps", spec.get("qps", 300)),
+                  set_ratio=0.0, batch=spec.get("batch", 16),
+                  clients=spec.get("clients", 50),
+                  seed=spec.get("seed", 1) + 7)
+    wr = Workload(rate_qps=spec.get("write_qps", 40), set_ratio=1.0,
+                  batch=spec.get("write_batch", 4096),
+                  clients=spec.get("clients", 50),
+                  seed=spec.get("seed", 1) + 17)
+    read_streams = rd.reader_streams(capacity, duration, readers)
+    analyst_streams = an.reader_streams(capacity, duration, analysts)
+    write_stream = wr.writer_streams(capacity, duration, 1)[0]
+    for b in sorted({rd.batch, wr.batch}):
+        store.warmup(batch=b)
+    pool = np.random.rand(8, wr.batch, store.row_width).astype(np.float32)
+
+    # the pinned analysis epoch: taken BEFORE the serving window, retained
+    # in memory (the engine's policy retains images), so every GetAt is a
+    # zero-copy gather off frozen staging buffers
+    epoch0 = eng.bgsave()
+    epoch0.wait_persisted(120)
+    ref = eng.catalog.pin(epoch0.epoch_id)
+
+    srv = RequestServer(
+        eng, readers=readers + (analysts if analytical else 0),
+        queue_depth=int(spec.get("queue_depth", 512)),
+    )
+    n_clients = readers + 1 + (analysts if analytical else 0)
+    msgs = [[] for _ in range(readers)]
+    an_msgs = [[] for _ in range(analysts)]
+    start_bar = threading.Barrier(n_clients + 1)
+    t0_box = {}
+
+    def read_client(r):
+        evs = read_streams[r]
+        start_bar.wait()
+        t0 = t0_box["t0"]
+        for ev in evs:
+            now = time.perf_counter() - t0
+            if ev.t > now:
+                time.sleep(ev.t - now)
+            msgs[r].append((ev.t, srv.submit(GetRequest(ev.rows))))
+
+    def analyst_client(r):
+        evs = analyst_streams[r]
+        start_bar.wait()
+        t0 = t0_box["t0"]
+        for ev in evs:
+            now = time.perf_counter() - t0
+            if ev.t > now:
+                time.sleep(ev.t - now)
+            an_msgs[r].append((ev.t, srv.submit(GetAtRequest(ev.rows, ref))))
+
+    write_msgs = []
+
+    def write_client():
+        start_bar.wait()
+        t0 = t0_box["t0"]
+        for i, ev in enumerate(write_stream):
+            now = time.perf_counter() - t0
+            if ev.t > now:
+                time.sleep(ev.t - now)
+            write_msgs.append(srv.submit(SetRequest(ev.rows, pool[i % 8])))
+
+    threads = [threading.Thread(target=read_client, args=(r,))
+               for r in range(readers)]
+    if analytical:
+        threads += [threading.Thread(target=analyst_client, args=(r,))
+                    for r in range(analysts)]
+    threads.append(threading.Thread(target=write_client))
+    for th in threads:
+        th.start()
+    t0_box["t0"] = time.perf_counter()
+    start_bar.wait()
+    # one mid-run BGSAVE through the server so part of the window is a
+    # live snapshot epoch, as in production
+    dt = float(spec.get("bgsave_at", 0.3)) * duration \
+        - (time.perf_counter() - t0_box["t0"])
+    if dt > 0:
+        time.sleep(dt)
+    flush_msg = srv.submit(FlushRequest())
+    for th in threads:
+        th.join(duration + 120)
+    rep = flush_msg.wait(timeout=300)
+    if rep.error is not None:
+        raise rep.error
+    rep.value.wait_persisted(120)
+    t0 = t0_box["t0"]
+
+    def collect(per_stream):
+        lat = []
+        for per in per_stream:
+            for a, m in per:
+                r = m.wait(timeout=300)
+                if r.error is not None:
+                    raise r.error
+                lat.append((r.done_t - t0) - a)
+        return lat
+
+    live_lat = collect(msgs)
+    getat_lat = collect(an_msgs) if analytical else []
+    for m in write_msgs:
+        r = m.wait(timeout=300)
+        if r.error is not None:
+            raise r.error
+    stats = srv.stats()
+    srv.close()
+
+    def p99_ms(x):
+        return float(np.percentile(np.array(x), 99) * 1e3) if x else float("nan")
+
+    # -- branch fork vs full copy ----------------------------------------
+    t0 = time.perf_counter()
+    child = eng.branch(ref)
+    branch_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    copies = []
+    for k in range(store.n_shards):
+        blocks = [jnp.asarray(np.ascontiguousarray(b))
+                  for b in ref.shard_blocks(k)]
+        copies.append(KVStore.from_blocks(blocks, store.row_width,
+                                          store.block_rows))
+    for s in copies:
+        for b in range(s.n_blocks):
+            jax.block_until_ready(s.provider.leaf(b))
+    ShardedKVStore.from_shards(copies, store.row_width, store.block_rows)
+    copy_s = time.perf_counter() - t0
+    # the branch must actually serve its cut
+    probe = np.arange(0, min(1024, capacity), 7)
+    assert child.store.get_concurrent(probe).shape[0] == probe.size
+    child.branch_ref.release()
+    ref.release()
+
+    # -- delta-chain fold (the maintenance plane) ------------------------
+    tmp = tempfile.mkdtemp(prefix="snapshot_reads_")
+    cat = eng.catalog
+    try:
+        dirs = []
+        for e in range(max_chain + 3):
+            if e:
+                rows = np.arange(0, store.block_rows, 37, dtype=np.int64)
+                store.set(rows, pool[e % 8][: rows.size],
+                          before_write=eng._write_hook, gate=eng._gate)
+            snap = eng.coordinator.bgsave_to_dir(os.path.join(tmp, f"ep{e}"))
+            snap.wait_persisted(120)
+            dirs.append(snap)
+        tip = cat._records[dirs[-1].epoch_id].shard_dirs[0]
+        depth_before = cat.dir_depth(tip)
+        read_file_snapshot(tip)  # warm the page cache off-clock
+        t0 = time.perf_counter()
+        read_file_snapshot(tip)
+        chain_restore_s = time.perf_counter() - t0
+        comp = ChainCompactor(cat, CompactionPolicy(max_chain=max_chain))
+        t0 = time.perf_counter()
+        folded = comp.scan_once()
+        compact_s = time.perf_counter() - t0
+        depth_after = cat.dir_depth(tip)
+        t0 = time.perf_counter()
+        read_file_snapshot(tip)
+        flat_restore_s = time.perf_counter() - t0
+    finally:
+        for snap in dirs:
+            cat.drop_epoch(snap.epoch_id)
+        shutil.rmtree(tmp, ignore_errors=True)
+
+    return {
+        "analytical": analytical,
+        "shards": shards,
+        "readers": readers,
+        "analysts": analysts if analytical else 0,
+        "live_reads": len(live_lat),
+        "live_p99_ms": p99_ms(live_lat),
+        "getats": stats["get_ats"],
+        "getat_p99_ms": p99_ms(getat_lat),
+        "queue_depth_max": stats["queue_depth_max"],
+        "branch_fork_ms": branch_s * 1e3,
+        "copy_fork_ms": copy_s * 1e3,
+        "max_chain": max_chain,
+        "chain_depth_before": depth_before,
+        "chain_depth_after": depth_after,
+        "compacted_dirs": len(folded),
+        "compact_ms": compact_s * 1e3,
+        "chain_restore_ms": chain_restore_s * 1e3,
+        "flat_restore_ms": flat_restore_s * 1e3,
+    }
+
+
 def run(spec):
     import numpy as np
 
@@ -352,6 +609,8 @@ def run(spec):
         return run_gate_contention(spec)
     if spec.get("cell") == "read_concurrency":
         return run_read_concurrency(spec)
+    if spec.get("cell") == "snapshot_reads":
+        return run_snapshot_reads(spec)
 
     capacity = int(spec["size_mb"] * (1 << 20) / (4 * spec.get("row_width", 256)))
     shards = int(spec.get("shards", 1))

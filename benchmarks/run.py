@@ -9,7 +9,7 @@ growth, interruption counts, out-of-service time, and the DEF > ODF >
 Async-fork latency ordering on snapshot queries.
 
 Usage: ``python -m benchmarks.run [cell ...] [--full] [--json PATH]
-[--copier-duty X] [--readers N]``.
+[--copier-duty X] [--readers N] [--max-chain N]``.
 Positional names select individual cells (e.g. ``persist_path``); with
 none, the whole suite runs. ``--json`` additionally writes the collected
 rows as a JSON trajectory artifact (CI uploads ``BENCH_3.json`` so future
@@ -17,7 +17,8 @@ PRs have a perf baseline). ``--copier-duty`` pins the per-shard copier
 duty in the scaling cells (``shard_scaling``, ``gate_contention``) for
 multi-core reruns — the single-core container default decays it
 1/sqrt(shards). ``--readers`` overrides the ``read_concurrency`` cell's
-reader-stream count for multi-core reruns.
+reader-stream count for multi-core reruns. ``--max-chain`` overrides the
+``snapshot_reads`` cell's ChainCompactor fold threshold.
 """
 from __future__ import annotations
 
@@ -40,6 +41,9 @@ DUTY_OVERRIDE = None
 # single-core default (4) already shows the serial arm's queueing; on a
 # real multi-core host raise it to scale reader parallelism.
 READERS_OVERRIDE = None
+# --max-chain=N: delta-chain fold threshold for the snapshot_reads
+# cell's ChainCompactor sub-phase (default 3, like CompactionPolicy).
+MAX_CHAIN_OVERRIDE = None
 
 _ROWS: list = []
 
@@ -440,6 +444,54 @@ def read_concurrency():
          f"serial_vs_concurrent_p99={ratio:.2f}x")
 
 
+def snapshot_reads():
+    """New cell (PR 7): snapshot reads as a product. Live reader streams
+    + a background writer through the RequestServer, with an arm adding
+    analyst streams issuing GetAt(epoch) reads against a pinned epoch
+    through the SAME server vs a live-only baseline — GetAt gathers off
+    the epoch's frozen images (no gate/seqlock/retries), so the live
+    read tail should track the baseline. The same run times a writable
+    branch fork (COW wrap, O(metadata)) against an honest full copy of
+    the epoch's images, and a ChainCompactor fold of a delta chain
+    ``max_chain + 2`` deep. The gated ratio is full-copy-over-branch
+    fork latency (bigger = the zero-copy branch wins)."""
+    mc = MAX_CHAIN_OVERRIDE if MAX_CHAIN_OVERRIDE is not None else 3
+    base = {
+        "cell": "snapshot_reads", "size_mb": 32, "duration": 8.0,
+        "shards": 2, "readers": 2, "analysts": 2, "threads": 1,
+        "duty": DUTY_OVERRIDE if DUTY_OVERRIDE is not None else 0.05,
+        "qps": 120, "batch": 16, "write_qps": 30, "write_batch": 4096,
+        "persist_bw": 3e7, "bgsave_at": 0.3, "max_chain": mc,
+    }
+    arms = {}
+    for analytical in (False, True):
+        arms[analytical] = run_cell({**base, "analytical": analytical})
+    a, b = arms[True], arms[False]
+    # live-read perturbation is a bigger-is-WORSE ratio — keep it out of
+    # the compare.py gate (no `x` suffix), like reshard_epoch/p99_ratio
+    perturb = a["live_p99_ms"] / max(1e-9, b["live_p99_ms"])
+    fork_ratio = a["copy_fork_ms"] / max(1e-9, a["branch_fork_ms"])
+    restore_ratio = (a["chain_restore_ms"]
+                     / max(1e-9, a["flat_restore_ms"]))
+    _row(f"snapshot_reads/{base['analysts']}analysts",
+         a["getat_p99_ms"] * 1e3,
+         f"live_p99_us={a['live_p99_ms']*1e3:.0f};"
+         f"baseline_live_p99_us={b['live_p99_ms']*1e3:.0f};"
+         f"live_p99_ratio={perturb:.2f};"
+         f"getats={a['getats']:.0f};"
+         f"queue_depth_max={a['queue_depth_max']:.0f};"
+         f"branch_fork_us={a['branch_fork_ms']*1e3:.0f};"
+         f"copy_fork_us={a['copy_fork_ms']*1e3:.0f};"
+         f"chain_depth={a['chain_depth_before']}->"
+         f"{a['chain_depth_after']};"
+         f"compacted_dirs={a['compacted_dirs']};"
+         f"compact_us={a['compact_ms']*1e3:.0f};"
+         f"chain_restore_us={a['chain_restore_ms']*1e3:.0f};"
+         f"flat_restore_us={a['flat_restore_ms']*1e3:.0f};"
+         f"restore_speedup={restore_ratio:.2f};"
+         f"branch_vs_copy={fork_ratio:.2f}x")
+
+
 def persist_path():
     """New cell: the zero-copy persist/restore hot path.
 
@@ -549,6 +601,7 @@ CELLS = {
     "persist_path": persist_path,
     "gate_contention": gate_contention,
     "read_concurrency": read_concurrency,
+    "snapshot_reads": snapshot_reads,
 }
 
 
@@ -556,7 +609,7 @@ def main() -> None:
     json_path = None
     names = []
     argv = iter(sys.argv[1:])
-    global DUTY_OVERRIDE, READERS_OVERRIDE
+    global DUTY_OVERRIDE, READERS_OVERRIDE, MAX_CHAIN_OVERRIDE
     for a in argv:
         if a == "--json":
             json_path = next(argv, None)
@@ -570,6 +623,10 @@ def main() -> None:
             READERS_OVERRIDE = int(next(argv))
         elif a.startswith("--readers="):
             READERS_OVERRIDE = int(a.split("=", 1)[1])
+        elif a == "--max-chain":
+            MAX_CHAIN_OVERRIDE = int(next(argv))
+        elif a.startswith("--max-chain="):
+            MAX_CHAIN_OVERRIDE = int(a.split("=", 1)[1])
         elif not a.startswith("-"):
             names.append(a)
     unknown = [n for n in names if n not in CELLS]

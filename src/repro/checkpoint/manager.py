@@ -296,7 +296,8 @@ _TOMBSTONE = _Tombstone()
 
 
 def restore_checkpoint(
-    directory: str, workers: Optional[int] = None
+    directory: str, workers: Optional[int] = None,
+    max_depth: Optional[int] = None,
 ) -> Tuple[Dict, AdamWState]:
     """Read a checkpoint back into host numpy trees.
 
@@ -305,12 +306,15 @@ def restore_checkpoint(
     and per-shard parent chains transparently, restoring shards and
     leaves in parallel on a :class:`~repro.core.sinks.RestorePool`
     (``workers`` sizes it; default one per core, ``workers=1`` is the
-    sequential path).
+    sequential path). ``max_depth`` bounds the parent-chain walk
+    (corrupt/cyclic chains raise ``ValueError`` instead of recursing
+    forever); ``None`` keeps ``read_file_snapshot``'s default bound.
 
     Elastic restart: callers re-``device_put`` these with whatever mesh
     they now have — nothing in the file format encodes the old topology.
     """
-    flat = read_file_snapshot(directory, workers=workers)
+    kw = {} if max_depth is None else {"max_depth": int(max_depth)}
+    flat = read_file_snapshot(directory, workers=workers, **kw)
     params: Dict = {}
     opt_m: Dict = {}
     opt_v: Dict = {}

@@ -10,6 +10,7 @@ from repro.core.blocks import (
     TwoWayPointer,
     coalesce_refs,
 )
+from repro.core.catalog import ChainCompactor, EpochRef, SnapshotCatalog
 from repro.core.coordinator import (
     AggregateMetrics,
     CoordinatedSnapshot,
@@ -21,6 +22,7 @@ from repro.core.metrics import SnapshotMetrics
 from repro.core.persist import PersistJob, PersistPipeline
 from repro.core.policy import (
     BgsavePolicy,
+    CompactionPolicy,
     ShardEpochView,
     ShardPolicyState,
     ShardWriteCounters,
@@ -34,6 +36,7 @@ from repro.core.sinks import (
     Sink,
     read_file_snapshot,
     read_snapshot_layout,
+    snapshot_chain_depth,
     write_composite_manifest,
 )
 from repro.core.staging import (
@@ -56,13 +59,17 @@ from repro.core.snapshot import (
 
 __all__ = [
     "AggregateMetrics",
+    "ChainCompactor",
     "CoordinatedSnapshot",
+    "EpochRef",
+    "SnapshotCatalog",
     "ShardedSnapshotCoordinator",
     "ShardLayout",
     "GateSet",
     "GateRetired",
     "SharedGate",
     "BgsavePolicy",
+    "CompactionPolicy",
     "ShardEpochView",
     "ShardPolicyState",
     "ShardWriteCounters",
@@ -92,6 +99,7 @@ __all__ = [
     "FileSink",
     "RestorePool",
     "read_file_snapshot",
+    "snapshot_chain_depth",
     "Snapshotter",
     "SnapshotHandle",
     "SnapshotError",

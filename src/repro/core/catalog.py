@@ -1,0 +1,566 @@
+"""Snapshot catalog — epochs as a queryable, refcounted product surface.
+
+PRs 1-6 made snapshots cheap to *take*; nothing could *query* them.
+Retained base images were write-side plumbing (dirty-scan inputs), skip
+epochs aliased old shard directories forever, and delta chains grew until
+a ``full_every`` anchor happened to land. This module turns the snapshot
+lifecycle into a first-class catalog:
+
+* :class:`SnapshotCatalog` registers every committed
+  ``CoordinatedSnapshot``/BGSAVE directory as an **epoch** and tracks a
+  refcount per shard directory. A dir is held by (a) every epoch whose
+  composite manifest points at it — its own epoch plus every skip epoch
+  aliasing it — and (b) every child dir whose delta chain names it as
+  parent. Dropping an epoch releases its holds; a dir whose count hits
+  zero is GC'd from disk and releases its own parent, cascading up the
+  chain.
+
+* :class:`EpochRef` is a **pinned read handle** on one epoch
+  (``catalog.pin(epoch_id)``). While any pin is live the epoch cannot be
+  released, so every shard image it references stays valid. Reads
+  resolve **zero-copy against the retained in-memory staging buffers**
+  while the snapshot is resident (staged images are immutable once
+  ``copy_done`` — the copier never rewrites a staged block and commits
+  donate *provider* buffers, not staging), and against **memory-mapped
+  manifests** otherwise. The same handle hands out per-block views for
+  writable branches (``KVEngine.branch``).
+
+* :class:`ChainCompactor` is the maintenance plane: a background worker
+  that folds delta chains deeper than :class:`~repro.core.policy.
+  CompactionPolicy` ``max_chain`` into fresh full images **in place**
+  (the dir keeps its path, so skip aliases and delta children stay
+  valid byte-for-byte) and then releases the parent refs that pinned
+  the ancestor dirs, letting the refcount GC reclaim them.
+
+Consistency argument: DESIGN.md §11.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.policy import CompactionPolicy
+from repro.core.sinks import (
+    RestorePool,
+    _read_snapshot_dir,
+    snapshot_chain_depth,
+)
+
+
+def _norm(path: str) -> str:
+    return os.path.realpath(os.path.abspath(path))
+
+
+class _DirNode:
+    """One shard directory in the reference graph."""
+
+    __slots__ = ("path", "refs", "parent", "owned")
+
+    def __init__(self, path: str, owned: bool):
+        self.path = path
+        self.refs = 0
+        self.parent: Optional[str] = None
+        # only dirs the catalog saw being written (an epoch's own shard
+        # dir) are ever rmtree'd; foreign parents are released but left
+        # on disk
+        self.owned = owned
+
+
+class _EpochRecord:
+    """Internal per-epoch record (reach it through ``pin``)."""
+
+    __slots__ = (
+        "epoch_id", "snap", "layout", "modes", "directory",
+        "shard_dirs", "held_dirs", "pins", "dropped", "images",
+    )
+
+    def __init__(self, epoch_id: int, snap, layout, modes):
+        self.epoch_id = epoch_id
+        self.snap = snap                     # live CoordinatedSnapshot
+        self.layout = layout                 # ShardLayout at the barrier
+        self.modes = modes                   # per-shard full/delta/skip
+        self.directory: Optional[str] = None  # composite dir (durable)
+        self.shard_dirs: List[Optional[str]] = []
+        self.held_dirs: List[str] = []       # dirs this epoch refcounts
+        self.pins = 0
+        self.dropped = False
+        self.images: Dict[int, List[np.ndarray]] = {}  # shard -> blocks
+
+
+class EpochRef:
+    """A pinned, refcounted read handle on one cataloged epoch.
+
+    Usable as a context manager; reads against a released ref raise.
+    ``shard_rows``/``shard_blocks`` resolve through the catalog: the
+    retained in-memory image while the epoch is resident (zero-copy),
+    the memmapped on-disk manifest chain otherwise.
+    """
+
+    def __init__(self, catalog: "SnapshotCatalog", record: _EpochRecord):
+        self._catalog = catalog
+        self._record = record
+        self._released = False
+
+    # -- metadata --------------------------------------------------------
+    @property
+    def epoch_id(self) -> int:
+        return self._record.epoch_id
+
+    @property
+    def layout(self):
+        return self._record.layout
+
+    @property
+    def modes(self) -> List[str]:
+        return list(self._record.modes)
+
+    @property
+    def live(self) -> bool:
+        """True while the epoch's in-memory staging images are resident."""
+        return self._record.snap is not None
+
+    @property
+    def directory(self) -> Optional[str]:
+        return self._record.directory
+
+    @property
+    def released(self) -> bool:
+        return self._released
+
+    # -- reads -----------------------------------------------------------
+    def shard_blocks(self, shard_id: int) -> List[np.ndarray]:
+        """Per-block immutable images of one shard at this epoch.
+
+        Live epochs hand out the staging buffers themselves (zero-copy);
+        durable epochs hand out memmapped (or chain-resolved) block
+        arrays. Callers must treat every array as read-only.
+        """
+        if self._released:
+            raise ValueError(
+                f"EpochRef(epoch={self.epoch_id}) has been released"
+            )
+        return self._catalog._shard_blocks(self._record, shard_id)
+
+    def shard_rows(self, shard_id: int, rows) -> np.ndarray:
+        """Gather shard-local ``rows`` from this epoch's image."""
+        blocks = self.shard_blocks(shard_id)
+        rows = np.asarray(rows, dtype=np.int64).reshape(-1)
+        br = int(blocks[0].shape[0])
+        out = np.empty((rows.size,) + blocks[0].shape[1:],
+                       dtype=blocks[0].dtype)
+        bids = rows // br
+        offs = rows - bids * br
+        for b in np.unique(bids):
+            m = bids == b
+            out[m] = blocks[int(b)][offs[m]]
+        return out
+
+    # -- lifecycle -------------------------------------------------------
+    def release(self) -> None:
+        if not self._released:
+            self._released = True
+            self._catalog._unpin(self._record)
+
+    def __enter__(self) -> "EpochRef":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.release()
+
+
+class SnapshotCatalog:
+    """Epoch registry + shard-directory refcount graph + GC.
+
+    Thread-safety: one internal lock guards the registry and the ref
+    graph; block-image resolution happens outside it (reads may be slow)
+    with a per-record publish under the lock.
+    """
+
+    def __init__(self, pool: Optional[RestorePool] = None,
+                 live_wait_s: float = 120.0):
+        self._lock = threading.RLock()
+        self._records: Dict[int, _EpochRecord] = {}
+        self._dirs: Dict[str, _DirNode] = {}
+        self._composites: set = set()
+        self._next_id = 0
+        self._pool = pool if pool is not None else RestorePool()
+        self.live_wait_s = float(live_wait_s)
+
+    # -- registration (called by the coordinator) ------------------------
+    def register_epoch(self, snap) -> int:
+        """Register a committed snapshot as an epoch; returns its id and
+        stamps it on ``snap.epoch_id``. The catalog holds the snapshot
+        strongly until the epoch is dropped (or ``evict_live``)."""
+        with self._lock:
+            eid = self._next_id
+            self._next_id += 1
+            rec = _EpochRecord(
+                eid, snap,
+                getattr(snap, "layout", None),
+                list(getattr(snap, "modes", None) or []),
+            )
+            self._records[eid] = rec
+        try:
+            snap.epoch_id = eid
+        except Exception:
+            pass
+        return eid
+
+    def attach_dirs(
+        self,
+        snap_or_id,
+        directory: str,
+        shard_dirs: Sequence[str],
+        parents: Sequence[Optional[str]],
+        modes: Optional[Sequence[str]] = None,
+    ) -> None:
+        """Record an epoch's durable layout: its composite ``directory``,
+        the shard dir each entry resolves to (a skip entry passes the
+        ALIASED previous dir) and each dir's delta parent (``None`` for
+        full images and for aliases — the alias target already holds its
+        own parent). Every listed dir gains one reference from this
+        epoch; parent links gain one reference from their child."""
+        eid = snap_or_id if isinstance(snap_or_id, int) \
+            else getattr(snap_or_id, "epoch_id")
+        with self._lock:
+            rec = self._records[eid]
+            rec.directory = _norm(directory)
+            self._composites.add(rec.directory)
+            modes = list(modes) if modes is not None else rec.modes
+            rec.shard_dirs = []
+            for k, sd in enumerate(shard_dirs):
+                sd = _norm(sd)
+                par = parents[k]
+                own = not modes or k >= len(modes) or modes[k] != "skip"
+                self._ensure_dir(
+                    sd, _norm(par) if par is not None else None, own
+                )
+                self._dirs[sd].refs += 1
+                rec.held_dirs.append(sd)
+                rec.shard_dirs.append(sd)
+
+    # -- queries ---------------------------------------------------------
+    def epochs(self) -> List[int]:
+        with self._lock:
+            return sorted(self._records)
+
+    def refcount(self, path: str) -> int:
+        with self._lock:
+            node = self._dirs.get(_norm(path))
+            return node.refs if node is not None else 0
+
+    def dir_depth(self, path: str) -> int:
+        """Delta hops below ``path`` (0 = full image), from the in-memory
+        ref graph when registered, the on-disk manifests otherwise."""
+        with self._lock:
+            path = _norm(path)
+            node = self._dirs.get(path)
+            if node is None:
+                try:
+                    return snapshot_chain_depth(path)
+                except (ValueError, OSError):
+                    return 0
+            depth = 0
+            seen = set()
+            while node is not None and node.parent is not None:
+                if node.path in seen:
+                    break
+                seen.add(node.path)
+                depth += 1
+                node = self._dirs.get(node.parent)
+            return depth
+
+    def deep_dirs(self, max_chain: int) -> List[str]:
+        """Registered dirs whose chain exceeds ``max_chain`` AND whose
+        whole chain is durable (every manifest on disk) — the compactor's
+        work list. Mid-persist chains are skipped, not raced."""
+        with self._lock:
+            out = []
+            for path, node in self._dirs.items():
+                if node.parent is None:
+                    continue
+                if self.dir_depth(path) <= max_chain:
+                    continue
+                cur, ok, seen = node, True, set()
+                while cur is not None:
+                    if cur.path in seen:
+                        ok = False
+                        break
+                    seen.add(cur.path)
+                    if not os.path.exists(
+                        os.path.join(cur.path, "manifest.json")
+                    ):
+                        ok = False
+                        break
+                    cur = (self._dirs.get(cur.parent)
+                           if cur.parent is not None else None)
+                if ok:
+                    out.append(path)
+            return sorted(out)
+
+    # -- pin / drop ------------------------------------------------------
+    def pin(self, epoch_id: int) -> EpochRef:
+        with self._lock:
+            rec = self._records.get(int(epoch_id))
+            if rec is None or rec.dropped:
+                raise ValueError(f"unknown or dropped epoch {epoch_id}")
+            rec.pins += 1
+            return EpochRef(self, rec)
+
+    def drop_epoch(self, epoch_id: int) -> List[str]:
+        """Release the catalog's hold on an epoch. Returns the shard dirs
+        the cascading GC removed from disk (empty while pins — or other
+        epochs/children — still hold the dirs; the release then happens
+        when the last pin drops)."""
+        with self._lock:
+            rec = self._records.get(int(epoch_id))
+            if rec is None:
+                return []
+            rec.dropped = True
+            if rec.pins > 0:
+                return []
+            return self._release(rec)
+
+    def evict_live(self, epoch_id: int) -> None:
+        """Drop the in-memory snapshot (staging images) of an epoch,
+        forcing subsequent reads through the on-disk manifest chain.
+        Refcounts are untouched."""
+        with self._lock:
+            rec = self._records.get(int(epoch_id))
+            if rec is not None:
+                rec.snap = None
+                rec.images = {}
+
+    # -- compaction (called by ChainCompactor) ---------------------------
+    def compact_dir(self, path: str,
+                    pool: Optional[RestorePool] = None) -> List[str]:
+        """Fold the delta chain under one shard dir into a fresh full
+        image **at the same path**, then release its parent ref. The dir's
+        logical content is unchanged (the chain resolution it previously
+        required is now baked in), so every composite manifest pointing at
+        it — its epoch and any skip aliases — stays valid. Returns the
+        ancestor dirs the ref release GC'd."""
+        pool = pool if pool is not None else self._pool
+        with self._lock:
+            path = _norm(path)
+            node = self._dirs.get(path)
+            if node is None or node.parent is None:
+                return []
+            # resolve the chain and rewrite in place while holding the
+            # lock: a concurrent drop/compact must not race the rename
+            flat = _read_snapshot_dir(path, pool, lazy=False)
+            with open(os.path.join(path, "manifest.json")) as f:
+                manifest = json.load(f)
+            tmp = path + ".compact"
+            shutil.rmtree(tmp, ignore_errors=True)
+            os.makedirs(tmp)
+
+            def _write_leaf(leaf):
+                arr = np.ascontiguousarray(
+                    np.asarray(flat[leaf["path"]]),
+                    dtype=np.dtype(leaf["dtype"]),
+                )
+                arr.tofile(os.path.join(tmp, leaf["file"]))
+
+            pool.map(_write_leaf, manifest["leaves"])
+            new_manifest = dict(manifest)
+            new_manifest.pop("parent", None)
+            new_manifest["compacted"] = True
+            new_manifest["leaves"] = [
+                dict(leaf, carried=list(range(len(leaf["blocks"]))))
+                if leaf.get("blocks") else dict(leaf)
+                for leaf in manifest["leaves"]
+            ]
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(new_manifest, f)
+            # atomic-enough swap: readers hold fds/mmaps, which survive
+            # the rename+unlink on Linux; new opens see the full image
+            old = path + ".old"
+            os.rename(path, old)
+            os.rename(tmp, path)
+            shutil.rmtree(old, ignore_errors=True)
+            old_parent = node.parent
+            node.parent = None
+            # cached block images of this dir stay byte-valid (mmaps pin
+            # the old inodes) but drop them so fresh pins read the new
+            # files rather than hold deleted inodes alive
+            for rec in self._records.values():
+                if path in (rec.shard_dirs or []):
+                    for k, sd in enumerate(rec.shard_dirs):
+                        if sd == path:
+                            rec.images.pop(k, None)
+            return self._decref(old_parent)
+
+    # -- internals -------------------------------------------------------
+    def _ensure_dir(self, path: str, parent: Optional[str],
+                    owned: bool) -> None:
+        node = self._dirs.get(path)
+        if node is None:
+            node = _DirNode(path, owned)
+            self._dirs[path] = node
+        elif owned:
+            node.owned = True
+        if parent is not None and node.parent is None and parent != path:
+            self._ensure_dir(parent, None, False)
+            node.parent = parent
+            self._dirs[parent].refs += 1
+
+    def _decref(self, path: str) -> List[str]:
+        removed: List[str] = []
+        node = self._dirs.get(path)
+        if node is None:
+            return removed
+        node.refs -= 1
+        if node.refs <= 0:
+            del self._dirs[path]
+            if node.owned:
+                shutil.rmtree(path, ignore_errors=True)
+                removed.append(path)
+            if node.parent is not None:
+                removed.extend(self._decref(node.parent))
+            self._cleanup_composite(os.path.dirname(path))
+        return removed
+
+    def _cleanup_composite(self, directory: str) -> None:
+        """Remove a composite manifest (and its dir, if empty) once the
+        last shard dir under it is gone — other epochs' refs may keep
+        sibling shard dirs (skip aliases) alive arbitrarily long."""
+        if directory not in self._composites:
+            return
+        prefix = directory.rstrip(os.sep) + os.sep
+        if any(p.startswith(prefix) for p in self._dirs):
+            return
+        try:
+            os.remove(os.path.join(directory, "manifest.json"))
+        except OSError:
+            pass
+        try:
+            os.rmdir(directory)
+        except OSError:
+            pass
+
+    def _unpin(self, rec: _EpochRecord) -> None:
+        with self._lock:
+            rec.pins -= 1
+            if rec.dropped and rec.pins <= 0 \
+                    and rec.epoch_id in self._records:
+                self._release(rec)
+
+    def _release(self, rec: _EpochRecord) -> List[str]:
+        removed: List[str] = []
+        for d in rec.held_dirs:
+            removed.extend(self._decref(d))
+        rec.held_dirs = []
+        rec.snap = None
+        rec.images = {}
+        self._records.pop(rec.epoch_id, None)
+        if rec.directory is not None:
+            self._cleanup_composite(rec.directory)
+        return removed
+
+    def _shard_blocks(self, rec: _EpochRecord,
+                      shard_id: int) -> List[np.ndarray]:
+        with self._lock:
+            cached = rec.images.get(shard_id)
+            snap = rec.snap
+        if cached is not None:
+            return cached
+        blocks: Optional[List[np.ndarray]] = None
+        if snap is not None:
+            handle = (snap.shard_handle(shard_id)
+                      if hasattr(snap, "shard_handle") else snap)
+            if handle is not None:
+                # staged images are immutable once copy_done (donated
+                # commits replace PROVIDER buffers; the copier writes a
+                # block at most once): wait for the copy window to close,
+                # then the buffers are a frozen point-in-time cut
+                handle.wait(self.live_wait_s)
+                leaves = sorted(handle.table.leaf_handles,
+                                key=lambda h: h.leaf_id)
+                blocks = [np.asarray(handle.backend.leaf_array(h.leaf_id))
+                          for h in leaves]
+        if blocks is None:
+            sdirs = rec.shard_dirs
+            if not sdirs or shard_id >= len(sdirs) \
+                    or sdirs[shard_id] is None:
+                raise ValueError(
+                    f"epoch {rec.epoch_id} shard {shard_id} is neither "
+                    "resident in memory nor attached to a snapshot "
+                    "directory; nothing to read"
+                )
+            flat = _read_snapshot_dir(sdirs[shard_id], self._pool,
+                                      lazy=True)
+
+            def _block_id(p: str) -> int:
+                try:
+                    return int(p.rsplit("/", 1)[-1])
+                except ValueError:
+                    return -1
+
+            blocks = [arr for _, arr in
+                      sorted(flat.items(), key=lambda kv: _block_id(kv[0]))]
+        with self._lock:
+            rec.images[shard_id] = blocks
+        return blocks
+
+
+class ChainCompactor:
+    """Background maintenance worker folding deep delta chains.
+
+    ``scan_once`` walks the catalog's ref graph for dirs whose chain
+    exceeds ``policy.max_chain`` and compacts each in place through the
+    catalog (chain reads fan out on the shared :class:`RestorePool`, leaf
+    writes on the same pool). ``start``/``stop`` run the scan on a
+    daemon thread every ``policy.interval_s``.
+    """
+
+    def __init__(self, catalog: SnapshotCatalog,
+                 policy: Optional[CompactionPolicy] = None,
+                 pool: Optional[RestorePool] = None):
+        self.catalog = catalog
+        self.policy = policy if policy is not None else CompactionPolicy()
+        self.pool = pool
+        self.compacted: List[str] = []   # dirs folded to full images
+        self.released: List[str] = []    # ancestor dirs the GC reclaimed
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+
+    def scan_once(self) -> List[str]:
+        done: List[str] = []
+        for path in self.catalog.deep_dirs(self.policy.max_chain):
+            freed = self.catalog.compact_dir(path, pool=self.pool)
+            done.append(path)
+            self.released.extend(freed)
+        self.compacted.extend(done)
+        return done
+
+    def start(self) -> None:
+        if self._thread is not None:
+            return
+        self._stop.clear()
+
+        def _loop():
+            while not self._stop.wait(self.policy.interval_s):
+                try:
+                    self.scan_once()
+                except Exception:
+                    # maintenance must never kill the serving process;
+                    # a failed fold retries on the next tick
+                    pass
+
+        self._thread = threading.Thread(
+            target=_loop, name="chain-compactor", daemon=True
+        )
+        self._thread.start()
+
+    def stop(self) -> None:
+        if self._thread is None:
+            return
+        self._stop.set()
+        self._thread.join(timeout=30)
+        self._thread = None

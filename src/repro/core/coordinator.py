@@ -48,6 +48,7 @@ import os
 import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
+from repro.core.catalog import SnapshotCatalog
 from repro.core.gates import GateSet
 from repro.core.layout import ShardLayout
 from repro.core.persist import PersistPipeline
@@ -74,6 +75,8 @@ class AggregateMetrics:
         self,
         parts: Sequence[Optional[SnapshotHandle]],
         modes: Optional[Sequence[str]] = None,
+        chain_depths: Optional[Sequence[int]] = None,
+        aliased_dirs: int = 0,
     ):
         # ``parts`` may be shard-ordered with None holes (skipped shards)
         self._by_shard = list(parts)
@@ -82,6 +85,13 @@ class AggregateMetrics:
             list(modes) if modes is not None
             else ["full" if p is not None else "skip" for p in self._by_shard]
         )
+        # durable epochs only: per-shard delta hops below each manifest
+        # entry's dir, and how many entries alias a previous epoch's dir —
+        # the ChainCompactor's trigger signal (None/0 for memory epochs)
+        self._chain_depths = (
+            list(chain_depths) if chain_depths is not None else None
+        )
+        self._aliased_dirs = int(aliased_dirs)
 
     @property
     def fork_s(self) -> float:
@@ -190,6 +200,9 @@ class AggregateMetrics:
                 s = p.metrics.summary()
                 s["mode"] = mode
                 per_shard.append(s)
+            if self._chain_depths is not None and \
+                    k < len(self._chain_depths):
+                per_shard[-1]["chain_depth"] = float(self._chain_depths[k])
         # skips are a CERTIFIED dirty fraction of 0.0 (that is what made
         # them skippable) — excluding them would overstate cluster
         # dirtiness exactly when the zero-copy optimization works best
@@ -219,6 +232,9 @@ class AggregateMetrics:
             "read_retries": float(self.read_retries),
             "shared_wait_us": self.shared_wait_s * 1e6,
             "dirty_frac_mean": (sum(dirty) / len(dirty)) if dirty else float("nan"),
+            "chain_depth_max": float(max(self._chain_depths))
+            if self._chain_depths else 0.0,
+            "aliased_dirs": float(self._aliased_dirs),
             "per_shard": per_shard,
         }
 
@@ -255,10 +271,27 @@ class CoordinatedSnapshot:
         now = time.perf_counter()
         self.t0 = min((p.t0 for p in self.parts), default=now)
         self.fork_start = min((p.fork_start for p in self.parts), default=now)
+        # stamped by the SnapshotCatalog / bgsave_to_dir after commit
+        self.epoch_id: Optional[int] = None
+        self.chain_depths: Optional[List[int]] = None
+        self.aliased_dirs: int = 0
 
     @property
     def metrics(self) -> AggregateMetrics:
-        return AggregateMetrics(self.parts_by_shard, self.modes)
+        return AggregateMetrics(self.parts_by_shard, self.modes,
+                                chain_depths=self.chain_depths,
+                                aliased_dirs=self.aliased_dirs)
+
+    def shard_handle(self, shard_id: int) -> Optional[SnapshotHandle]:
+        """The handle holding shard ``shard_id``'s T0 image at this
+        barrier: its own epoch if it forked, the base epoch its zero-copy
+        skip certified byte-identical otherwise. ``None`` only for a
+        skipped shard whose base record is gone (never the case for
+        snapshots this coordinator produced)."""
+        p = self.parts_by_shard[shard_id]
+        if p is not None:
+            return p
+        return self._skipped_bases.get(shard_id)
 
     @property
     def aborted(self) -> bool:
@@ -318,6 +351,7 @@ class ShardedSnapshotCoordinator:
         layout: Optional[ShardLayout] = None,
         policy: Optional[BgsavePolicy] = None,
         striped_gates: bool = True,
+        catalog: Optional[SnapshotCatalog] = None,
         **snapshotter_kw,
     ):
         if not providers:
@@ -370,6 +404,9 @@ class ShardedSnapshotCoordinator:
         self._last_dirs: List[Optional[Tuple[str, SnapshotHandle]]] = \
             [None] * len(self.snapshotters)
         self._snaps: List[CoordinatedSnapshot] = []
+        # every committed barrier registers as an epoch: pin one with
+        # catalog.pin(epoch_id) to serve GetAt reads / fork branches
+        self.catalog = catalog if catalog is not None else SnapshotCatalog()
 
     @property
     def n_shards(self) -> int:
@@ -721,6 +758,7 @@ class ShardedSnapshotCoordinator:
             skipped_bases=skipped_bases,
         )
         self._snaps.append(snap)
+        self.catalog.register_epoch(snap)
         return snap
 
     def bgsave_to_dir(
@@ -802,6 +840,40 @@ class ShardedSnapshotCoordinator:
                         os.path.join(directory, f"shard_{k}"),
                         snap.parts_by_shard[k],
                     )
+            # explicit reference records (the catalog's refcount inputs,
+            # written into the manifest so chain growth is observable):
+            # each entry carries its delta depth, the dirs it depends on
+            # beyond its own, and whether it aliases a previous epoch
+            shard_dirs: List[str] = []
+            parent_dirs: List[Optional[str]] = []
+            depths: List[int] = []
+            for k, mode in enumerate(snap.modes):
+                sdir = os.path.normpath(
+                    os.path.join(directory, entries[k]["dir"])
+                )
+                parent_abs: Optional[str] = None
+                if mode == "skip":
+                    # the aliased dir's own chain depth — the alias holds
+                    # a ref on the dir itself, not on its parent
+                    depth = self.catalog.dir_depth(sdir)
+                    entries[k]["aliased"] = True
+                    entries[k]["refs"] = [entries[k]["dir"]]
+                elif mode == "delta":
+                    parent_rel = sinks[k].parent
+                    if parent_rel is not None:
+                        parent_abs = os.path.normpath(
+                            os.path.join(directory, parent_rel)
+                        )
+                        entries[k]["refs"] = [parent_rel]
+                        depth = self.catalog.dir_depth(parent_abs) + 1
+                    else:  # pragma: no cover - delta without parent degrades
+                        depth = 0
+                else:
+                    depth = 0
+                entries[k]["chain_depth"] = depth
+                shard_dirs.append(sdir)
+                parent_dirs.append(parent_abs)
+                depths.append(depth)
             if layout_record is None and self.layout is not None:
                 layout_record = self.layout.to_record()
         # manifest I/O OUTSIDE the gate: writers need not stall on a
@@ -809,6 +881,10 @@ class ShardedSnapshotCoordinator:
         # nothing below reads gate-protected state
         write_composite_manifest(directory, entries, layout=layout_record)
         snap.directory = directory
+        snap.chain_depths = depths
+        snap.aliased_dirs = sum(1 for m in snap.modes if m == "skip")
+        self.catalog.attach_dirs(snap, directory, shard_dirs, parent_dirs,
+                                 modes=snap.modes)
         return snap
 
     # -- lifecycle -------------------------------------------------------

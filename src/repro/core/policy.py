@@ -195,3 +195,24 @@ class BgsavePolicy:
                 ema = max((self._state[p].dirty_ema for p in ps), default=1.0)
                 new_state.append(ShardPolicyState(dirty_ema=ema))
         self._state = new_state
+
+
+@dataclasses.dataclass(frozen=True)
+class CompactionPolicy:
+    """Thresholds driving the :class:`repro.core.catalog.ChainCompactor`.
+
+    The BGSAVE policy above decides how each epoch is WRITTEN; this one
+    decides when the maintenance plane rewrites what the write path left
+    behind. A shard dir whose delta chain is deeper than ``max_chain``
+    hops gets folded into a fresh full image in place (restores of it and
+    of every skip epoch aliasing it stop walking the chain), after which
+    its parent refs are released and the catalog GC can reclaim the
+    ancestors nothing else pins. ``interval_s`` paces the background
+    scan loop.
+    """
+
+    max_chain: int = 3
+    interval_s: float = 0.05
+
+    def should_compact(self, chain_depth: int) -> bool:
+        return chain_depth > self.max_chain

@@ -33,6 +33,10 @@ from repro.core.blocks import BlockRef, LeafHandle
 # pwritev gathers at most IOV_MAX (1024 on Linux) buffers per call.
 _IOV_MAX = 1024
 
+# Parent-chain walks are bounded: a corrupt manifest (cyclic or absurdly
+# deep parent refs) must fail with a clear error, not recurse forever.
+_DEFAULT_MAX_DEPTH = 32
+
 
 def _as_block_view(data) -> memoryview:
     """Zero-copy byte view of one staged block.
@@ -288,9 +292,20 @@ def write_composite_manifest(
     range partitions), letting a restore re-split/re-merge the image into
     whatever layout is current. ``read_file_snapshot`` merges the shard
     restores (each shard dir is a normal FileSink directory, possibly the
-    head of its own delta chain)."""
+    head of its own delta chain).
+
+    Entries may additionally carry explicit reference records the
+    :class:`repro.core.catalog.SnapshotCatalog` maintains: ``"refs"`` (the
+    relative dirs this entry depends on beyond its own — a delta's parent
+    or a skip's alias target), ``"chain_depth"`` (delta hops below this
+    entry's dir) and ``"aliased": true`` on skip entries. The manifest's
+    top-level ``aliased_dirs`` counts the skip entries so chain growth is
+    visible without walking shard manifests."""
     os.makedirs(directory, exist_ok=True)
     manifest: Dict = {"composite": True, "shards": shards}
+    manifest["aliased_dirs"] = sum(
+        1 for e in shards if e.get("mode") == "skip"
+    )
     if layout is not None:
         manifest["layout"] = layout
     tmp = os.path.join(directory, "manifest.json.tmp")
@@ -348,11 +363,50 @@ def _coalesce_ids(ids: Sequence[int]) -> List[tuple]:
     return runs
 
 
+def snapshot_chain_depth(directory: str, max_depth: int = 64) -> int:
+    """Delta-chain length under a (non-composite) FileSink directory: 0
+    for a full snapshot, 1 + the parent's depth for a delta. Walks
+    manifests only — no data IO. Raises ``ValueError`` on a missing
+    manifest, a cyclic chain, or a chain deeper than ``max_depth``."""
+    depth = 0
+    cur = directory
+    seen = {os.path.realpath(directory)}
+    while True:
+        try:
+            with open(os.path.join(cur, "manifest.json")) as f:
+                manifest = json.load(f)
+        except (FileNotFoundError, NotADirectoryError):
+            raise ValueError(
+                f"broken delta chain under {directory!r}: missing "
+                f"snapshot manifest in {cur!r}"
+            ) from None
+        parent = manifest.get("parent")
+        if parent is None:
+            return depth
+        cur = parent if os.path.isabs(parent) else os.path.join(
+            os.path.dirname(os.path.abspath(cur)), parent
+        )
+        real = os.path.realpath(cur)
+        if real in seen:
+            raise ValueError(
+                f"cyclic delta chain under {directory!r}: parent ref "
+                f"revisits {real!r}"
+            )
+        seen.add(real)
+        depth += 1
+        if depth > max_depth:
+            raise ValueError(
+                f"delta chain under {directory!r} exceeds max_depth="
+                f"{max_depth}; refusing to walk a likely-corrupt manifest"
+            )
+
+
 def read_file_snapshot(
     directory: str,
     *,
     pool: Optional[RestorePool] = None,
     workers: Optional[int] = None,
+    max_depth: int = _DEFAULT_MAX_DEPTH,
 ):
     """Restore {path: np.ndarray} from a FileSink directory.
 
@@ -373,13 +427,33 @@ def read_file_snapshot(
     the hole ranges a descendant copies out of it (an ancestor leaf that
     itself carries holes must still be materialized in full to resolve
     its own chain).
+
+    Parent-chain walks are hard-bounded: a chain deeper than ``max_depth``
+    hops, a cyclic parent ref, or a parent whose manifest is missing all
+    raise ``ValueError`` instead of recursing or looping on a corrupt
+    manifest.
     """
     if pool is None:
         pool = RestorePool(workers)
-    return _read_snapshot_dir(directory, pool)
+    return _read_snapshot_dir(directory, pool, depth_left=max_depth)
 
 
-def _read_snapshot_dir(directory: str, pool: RestorePool, lazy: bool = False):
+def _read_snapshot_dir(
+    directory: str,
+    pool: RestorePool,
+    lazy: bool = False,
+    depth_left: int = _DEFAULT_MAX_DEPTH,
+    chain: tuple = (),
+):
+    # ``chain`` carries the realpaths already visited on this resolution
+    # path (composite hop + parent hops); revisiting one is a cycle.
+    me = os.path.realpath(directory)
+    if me in chain:
+        raise ValueError(
+            f"corrupt snapshot {directory!r}: cyclic snapshot chain "
+            f"({' -> '.join(chain + (me,))})"
+        )
+    chain = chain + (me,)
     with open(os.path.join(directory, "manifest.json")) as f:
         manifest = json.load(f)
 
@@ -390,7 +464,9 @@ def _read_snapshot_dir(directory: str, pool: RestorePool, lazy: bool = False):
             sdir = entry["dir"]
             if not os.path.isabs(sdir):
                 sdir = os.path.join(directory, sdir)
-            return entry.get("prefix", ""), _read_snapshot_dir(sdir, pool, lazy)
+            return entry.get("prefix", ""), _read_snapshot_dir(
+                sdir, pool, lazy, depth_left=depth_left, chain=chain
+            )
 
         out = {}
         for prefix, shard_out in pool.map(_one_shard, entries):
@@ -414,7 +490,21 @@ def _read_snapshot_dir(directory: str, pool: RestorePool, lazy: bool = False):
                 pdir = parent if os.path.isabs(parent) else os.path.join(
                     os.path.dirname(os.path.abspath(directory)), parent
                 )
-                parent_cache["out"] = _read_snapshot_dir(pdir, pool, lazy=True)
+                if depth_left <= 1:
+                    raise ValueError(
+                        f"corrupt snapshot {directory!r}: delta chain "
+                        f"exceeds max_depth; parent {parent!r} not followed"
+                    )
+                if not os.path.exists(os.path.join(pdir, "manifest.json")):
+                    raise ValueError(
+                        f"corrupt snapshot {directory!r}: parent snapshot "
+                        f"{parent!r} is missing its manifest "
+                        f"(resolved {pdir!r})"
+                    )
+                parent_cache["out"] = _read_snapshot_dir(
+                    pdir, pool, lazy=True,
+                    depth_left=depth_left - 1, chain=chain,
+                )
             return parent_cache["out"]
 
     has_parent = manifest.get("parent") is not None

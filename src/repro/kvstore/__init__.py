@@ -1,8 +1,9 @@
-from repro.kvstore.store import KVStore, RoutingView, ShardedKVStore
+from repro.kvstore.store import CowKVStore, KVStore, RoutingView, ShardedKVStore
 from repro.kvstore.workload import Workload, QueryEvent
 from repro.kvstore.engine import KVEngine, EngineReport
 from repro.kvstore.server import (
     FlushRequest,
+    GetAtRequest,
     GetRequest,
     Message,
     Reply,
@@ -11,6 +12,7 @@ from repro.kvstore.server import (
 )
 
 __all__ = [
+    "CowKVStore",
     "KVStore",
     "RoutingView",
     "ShardedKVStore",
@@ -19,6 +21,7 @@ __all__ = [
     "KVEngine",
     "EngineReport",
     "RequestServer",
+    "GetAtRequest",
     "GetRequest",
     "SetRequest",
     "FlushRequest",

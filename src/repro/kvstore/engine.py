@@ -16,11 +16,12 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+from repro.core.catalog import EpochRef, SnapshotCatalog
 from repro.core.coordinator import CoordinatedSnapshot, ShardedSnapshotCoordinator
 from repro.core.policy import BgsavePolicy
 from repro.core.sinks import NullSink, Sink
 from repro.core.snapshot import SnapshotHandle, make_snapshotter
-from repro.kvstore.store import KVStore, ShardedKVStore
+from repro.kvstore.store import CowKVStore, KVStore, ShardedKVStore
 from repro.kvstore.workload import Workload
 
 
@@ -74,6 +75,10 @@ class EngineReport:
             "fork_ms": float(np.mean([m.get("fork_ms", 0.0) for m in mets])) if mets else float("nan"),
             "copy_window_ms": float(np.mean([m.get("copy_window_ms", 0.0) for m in mets])) if mets else float("nan"),
             "skipped_shards": float(sum(m.get("skipped_shards", 0.0) for m in mets)),
+            "chain_depth_max": float(max(
+                (m.get("chain_depth_max", 0.0) for m in mets), default=0.0
+            )),
+            "aliased_dirs": float(sum(m.get("aliased_dirs", 0.0) for m in mets)),
             "shards": float(self.n_shards),
         }
 
@@ -93,6 +98,7 @@ class KVEngine:
         persist_workers: Optional[int] = None,
         policy: Optional[BgsavePolicy] = None,
         striped_gates: bool = True,
+        catalog: Optional[SnapshotCatalog] = None,
     ):
         """``backend`` selects the staging substrate ("host" numpy or
         "device" Pallas-kernel staging); ``incremental=True`` makes every
@@ -106,9 +112,13 @@ class KVEngine:
         ``incremental`` flag with per-shard full/delta/skip decisions.
         ``striped_gates=False`` aliases every write-gate stripe to one
         global lock (the pre-PR-5 behavior, kept as the contention
-        benchmark's baseline arm)."""
+        benchmark's baseline arm). ``catalog`` shares a
+        :class:`SnapshotCatalog` across engines (a branched child engine
+        registers its epochs in its parent's catalog)."""
         self.store = store
         self.mode = mode
+        self._backend = backend
+        self.branch_ref: Optional[EpochRef] = None
         self._copier_threads = max(1, copier_threads)
         self._auto_duty = copier_duty is None
         if copier_duty is None:
@@ -136,13 +146,14 @@ class KVEngine:
             backend=backend,
             retain_images=self.incremental or policy is not None,
         )
-        if self.n_shards > 1:
+        if isinstance(store, ShardedKVStore):
             self.snapshotter = None
             self.coordinator = ShardedSnapshotCoordinator(
                 store.providers, mode=mode,
                 persist_workers=persist_workers,
                 layout=getattr(store, "layout", None),
                 policy=policy, striped_gates=striped_gates,
+                catalog=catalog,
                 **snapshotter_kw,
             )
             self._write_hook = (
@@ -189,6 +200,79 @@ class KVEngine:
         construction-time gate and would have committed writes under a
         stale gate after any such swap."""
         return None if self.coordinator is None else self.coordinator.gates
+
+    # -- snapshot reads & branches (DESIGN.md §11) ------------------------
+    @property
+    def catalog(self) -> SnapshotCatalog:
+        """The coordinator's :class:`SnapshotCatalog` (epoch registry)."""
+        if self.coordinator is None:
+            raise ValueError("the snapshot catalog needs a ShardedKVStore "
+                             "engine")
+        return self.coordinator.catalog
+
+    def get_at(self, rows, epoch: Union[int, EpochRef]) -> np.ndarray:
+        """Point-in-time read: gather ``rows`` as they were at ``epoch``.
+
+        Accepts either a pinned :class:`EpochRef` (the caller controls
+        the pin lifetime — amortize it over many reads) or a bare epoch
+        id (pinned transiently for exactly this call). The gather routes
+        under the EPOCH's frozen layout and never touches the live read
+        plane, so it needs no gate, seqlock, or retry discipline and
+        cannot perturb live traffic (beyond sharing cores)."""
+        if self.coordinator is None:
+            raise ValueError("get_at() needs a ShardedKVStore engine")
+        rows = np.asarray(rows)
+        if isinstance(epoch, EpochRef):
+            return self.store.get_at(rows, epoch)
+        ref = self.catalog.pin(int(epoch))
+        try:
+            return self.store.get_at(rows, ref)
+        finally:
+            ref.release()
+
+    def branch(self, epoch: Union[int, EpochRef]) -> "KVEngine":
+        """Fork a writable child engine off a cataloged epoch, zero-copy.
+
+        The child's shards are :class:`CowKVStore` instances wrapping the
+        epoch's immutable block images directly (``KVStore.from_blocks``
+        machinery — no bytes move at fork time); the first write to a
+        block pays one host-to-device materialization (a COW fault) and
+        from then on the block lives in the child. The parent's images
+        are never written — branch and parent diverge freely. The child
+        holds its OWN pin on the epoch (``child.branch_ref``): release it
+        when the branch is torn down, or the epoch's dirs stay pinned.
+        The child registers snapshots in the parent's catalog, so branch
+        epochs participate in the same refcount/GC graph."""
+        if self.coordinator is None:
+            raise ValueError("branch() needs a ShardedKVStore engine")
+        eid = epoch.epoch_id if isinstance(epoch, EpochRef) else int(epoch)
+        ref = self.catalog.pin(eid)  # the child's own pin
+        try:
+            layout = ref.layout
+            n = layout.n_shards if layout is not None else self.n_shards
+            shards = [
+                CowKVStore.from_frozen_blocks(
+                    ref.shard_blocks(k),
+                    self.store.row_width, self.store.block_rows,
+                )
+                for k in range(n)
+            ]
+        except BaseException:
+            ref.release()
+            raise
+        child_store = ShardedKVStore.from_shards(
+            shards, self.store.row_width, self.store.block_rows, layout
+        )
+        child = KVEngine(
+            child_store, mode=self.mode,
+            copier_threads=self._copier_threads,
+            persist_bandwidth=self.persist_bandwidth,
+            backend=self._backend,
+            incremental=self.incremental,
+            catalog=self.catalog,
+        )
+        child.branch_ref = ref
+        return child
 
     # -- online resharding ------------------------------------------------
     def split(self, shard_id: int, at_block: Optional[int] = None):

@@ -34,6 +34,20 @@ class GetRequest:
 
 
 @dataclasses.dataclass
+class GetAtRequest:
+    """Point-in-time read against a cataloged epoch (``engine.get_at``).
+
+    ``epoch`` is either a bare epoch id (pinned transiently per request)
+    or a pinned :class:`~repro.core.catalog.EpochRef` the client holds
+    across many requests. Snapshot reads flow through the SAME queue and
+    worker pool as live traffic — analytical readers and live queries
+    contend only for workers, never for the store's gates or seqlock."""
+
+    rows: np.ndarray
+    epoch: Any  # int epoch id or EpochRef
+
+
+@dataclasses.dataclass
 class SetRequest:
     rows: np.ndarray
     vals: np.ndarray
@@ -96,7 +110,7 @@ class RequestServer:
         self.concurrent_reads = bool(concurrent_reads)
         self._q: "queue.Queue[Message]" = queue.Queue(maxsize=int(queue_depth))
         self._lock = threading.Lock()
-        self._counts = {"get": 0, "set": 0, "flush": 0}
+        self._counts = {"get": 0, "get_at": 0, "set": 0, "flush": 0}
         self._depth_max = 0
         self._depth_sum = 0
         self._depth_samples = 0
@@ -121,6 +135,8 @@ class RequestServer:
         with self._lock:
             if isinstance(req, GetRequest):
                 self._counts["get"] += 1
+            elif isinstance(req, GetAtRequest):
+                self._counts["get_at"] += 1
             elif isinstance(req, SetRequest):
                 self._counts["set"] += 1
             elif isinstance(req, FlushRequest):
@@ -138,6 +154,10 @@ class RequestServer:
 
     def get(self, rows, timeout: Optional[float] = None) -> np.ndarray:
         return self._call(GetRequest(np.asarray(rows)), timeout)
+
+    def get_at(self, rows, epoch,
+               timeout: Optional[float] = None) -> np.ndarray:
+        return self._call(GetAtRequest(np.asarray(rows), epoch), timeout)
 
     def set(self, rows, vals, timeout: Optional[float] = None) -> None:
         self._call(SetRequest(np.asarray(rows), np.asarray(vals)), timeout)
@@ -188,6 +208,8 @@ class RequestServer:
                     on_read_event=eng._read_event_hook,
                 )
             return store.get(req.rows)  # serial arm: the single worker
+        if isinstance(req, GetAtRequest):
+            return eng.get_at(req.rows, req.epoch)
         if isinstance(req, SetRequest):
             if eng.coordinator is not None:
                 store.set(req.rows, req.vals,
@@ -206,6 +228,7 @@ class RequestServer:
             samples = self._depth_samples
             return {
                 "gets": float(self._counts["get"]),
+                "get_ats": float(self._counts["get_at"]),
                 "sets": float(self._counts["set"]),
                 "flushes": float(self._counts["flush"]),
                 "queue_depth_max": float(self._depth_max),

@@ -206,6 +206,42 @@ class KVStore:
         self.get(rows)
 
 
+class CowKVStore(KVStore):
+    """A writable branch shard wrapping a parent epoch's IMMUTABLE block
+    images (host numpy: staging buffers while the epoch is live, memmaps
+    off its manifests otherwise) and copy-on-writing only dirtied blocks.
+
+    The fork itself is O(metadata): no block is copied until written.
+    The donated-scatter hot path cannot donate a numpy buffer (and must
+    never mutate the parent's image), so :meth:`_commit` first
+    **materializes** each touched numpy leaf as a fresh device array (the
+    COW fault — one H2D per block, paid once) and then commits through
+    the normal donation path; the parent's buffers are never written.
+    ``cow_faults`` counts materialized blocks.
+    """
+
+    cow_faults = 0
+
+    @classmethod
+    def from_frozen_blocks(
+        cls, blocks: Sequence[np.ndarray], row_width: int, block_rows: int
+    ) -> "CowKVStore":
+        self = cls.from_blocks(list(blocks), row_width, block_rows)
+        self.cow_faults = 0
+        return self
+
+    def _commit(self, rows, vals, before_write=None):
+        bids = np.unique(np.asarray(rows) // self.block_rows)
+        for b in bids:
+            leaf = self.provider.leaf(int(b))
+            if isinstance(leaf, np.ndarray):
+                # COW fault: replace the shared parent view with a private
+                # device copy; update_leaf never touches the old buffer
+                self.provider.update_leaf(int(b), jnp.asarray(leaf))
+                self.cow_faults += 1
+        super()._commit(rows, vals, before_write)
+
+
 _SHARD_LEAF_RE = re.compile(r"^shard(\d+)/blocks/(\d+)$")
 
 
@@ -299,6 +335,29 @@ class ShardedKVStore:
         # _seq — a changed counter means a reshard landed mid-read.
         self._seq = 0
         self._apply_layout(ShardLayout.uniform([s.n_blocks for s in self.shards]))
+
+    @classmethod
+    def from_shards(
+        cls,
+        shards: Sequence[KVStore],
+        row_width: int,
+        block_rows: int,
+        layout: Optional[ShardLayout] = None,
+    ) -> "ShardedKVStore":
+        """Wrap EXISTING shard stores (zero data movement) — the branch
+        primitive: ``KVEngine.branch`` builds per-shard
+        :class:`CowKVStore` wrappers over a pinned epoch's images and
+        assembles them here under that epoch's frozen layout."""
+        self = cls.__new__(cls)
+        self.shards = list(shards)
+        self.row_width = int(row_width)
+        self.block_rows = int(block_rows)
+        self._seq = 0
+        self._apply_layout(
+            layout if layout is not None
+            else ShardLayout.uniform([s.n_blocks for s in self.shards])
+        )
+        return self
 
     def _apply_layout(self, layout: ShardLayout) -> None:
         """Install a layout by publishing ONE immutable
@@ -540,6 +599,29 @@ class ShardedKVStore:
         finally:
             if on_read_event is not None and (retries or shared_wait):
                 on_read_event(first_shard, retries, shared_wait)
+
+    def get_at(self, rows, epoch) -> np.ndarray:
+        """Point-in-time gather against a pinned epoch
+        (:class:`~repro.core.catalog.EpochRef`), in INPUT order.
+
+        Routing uses the EPOCH's frozen layout, not the live view — the
+        store may have resharded since the barrier, but the epoch's shard
+        images are indexed under the layout its barrier stamped. The
+        gather touches only the epoch's immutable images (retained
+        staging buffers or memmapped manifests), so it needs no gate, no
+        seqlock and no retries: live writers donate PROVIDER buffers,
+        never a frozen image."""
+        rows = np.asarray(rows)
+        out = np.empty((rows.shape[0], self.row_width), np.float32)
+        if rows.size == 0:
+            return out
+        layout = getattr(epoch, "layout", None)
+        if layout is None:
+            layout = self.layout
+        view = RoutingView(layout, layout.row_bounds(self.block_rows), ())
+        for k, local, pos in self._route(rows, view):
+            out[pos] = epoch.shard_rows(k, local)
+        return out
 
     def read_all(self) -> np.ndarray:
         return np.concatenate([s.read_all() for s in self.shards])

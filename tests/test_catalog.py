@@ -1,0 +1,494 @@
+"""Snapshot reads as a product: the epoch catalog, GetAt(epoch) reads,
+zero-copy writable branches, and the delta-chain compactor (ISSUE 7
+acceptance criteria)."""
+import json
+import os
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    BgsavePolicy,
+    ChainCompactor,
+    CompactionPolicy,
+    SnapshotCatalog,
+    read_file_snapshot,
+    snapshot_chain_depth,
+)
+from repro.kvstore import (
+    CowKVStore,
+    GetAtRequest,
+    KVEngine,
+    RequestServer,
+    ShardedKVStore,
+)
+
+
+def _engine(capacity=512, block_rows=64, row_width=4, shards=2, seed=0,
+            policy=None, **kw):
+    store = ShardedKVStore(capacity=capacity, block_rows=block_rows,
+                           row_width=row_width, seed=seed, shards=shards)
+    eng = KVEngine(store, mode="asyncfork", copier_threads=2,
+                   persist_bandwidth=None, copier_duty=0.5, policy=policy,
+                   **kw)
+    store.warmup(batch=2)
+    return store, eng
+
+
+def _set(store, eng, rows, val):
+    rows = np.asarray(rows, dtype=np.int64)
+    store.set(rows, np.full((rows.size, store.row_width), val, np.float32),
+              before_write=eng._write_hook, gate=eng._gate)
+
+
+_DELTA_POLICY = dict(delta_threshold=2.0, full_every=99)  # force deltas
+
+
+# --------------------------------------------------------------------- #
+# catalog refcounts + GC                                                #
+# --------------------------------------------------------------------- #
+def test_catalog_refcounts_skip_aliases_and_drop_cascade(tmp_path):
+    """A skip epoch refcounts the aliased dir instead of copying it; the
+    dir (and the delta ancestors under it) survive until the LAST epoch
+    holding them drops, then the cascade GC removes them from disk."""
+    store, eng = _engine(policy=BgsavePolicy(**_DELTA_POLICY))
+    coord, cat = eng.coordinator, eng.catalog
+    snaps = []
+    for e in range(3):
+        if e:
+            _set(store, eng, np.arange(0, 64, 3), float(e))  # shard 0 only
+        snap = coord.bgsave_to_dir(str(tmp_path / f"ep{e}"))
+        assert snap.wait_persisted(120)
+        snaps.append(snap)
+    assert snaps[1].modes[1] == "skip" and snaps[2].modes[1] == "skip"
+    aliased = snaps[0].directory and os.path.join(str(tmp_path / "ep0"))
+    s1_dir = json.load(open(tmp_path / "ep1" / "manifest.json"))
+    alias_entry = s1_dir["shards"][1]
+    assert alias_entry["mode"] == "skip" and alias_entry.get("aliased")
+    assert alias_entry["refs"]  # explicit alias ref record
+    alias_target = alias_entry["dir"]
+    if not os.path.isabs(alias_target):
+        alias_target = os.path.normpath(
+            os.path.join(str(tmp_path / "ep1"), alias_target))
+    # held by ep0 (its own entry) + ep1 + ep2 (skip aliases)
+    assert cat.refcount(alias_target) == 3
+    # dropping the aliasing epochs reclaims THEIR delta dirs but never
+    # the alias target (ep0 still holds it)
+    removed = cat.drop_epoch(snaps[2].epoch_id)
+    assert os.path.realpath(alias_target) not in removed
+    assert os.path.exists(alias_target)
+    cat.drop_epoch(snaps[1].epoch_id)
+    assert os.path.exists(alias_target)
+    removed = cat.drop_epoch(snaps[0].epoch_id)
+    assert any(os.path.realpath(alias_target) == p for p in removed)
+    assert not os.path.exists(alias_target)
+    # composite dirs are reaped once their last shard dir is gone
+    assert sorted(os.listdir(tmp_path)) == []
+
+
+def test_catalog_delta_parent_refs_pin_ancestors(tmp_path):
+    """A delta child holds a ref on its parent dir: dropping the parent
+    EPOCH leaves the parent DIR on disk until the child drops too."""
+    store, eng = _engine(policy=BgsavePolicy(**_DELTA_POLICY))
+    coord, cat = eng.coordinator, eng.catalog
+    s0 = coord.bgsave_to_dir(str(tmp_path / "ep0"))
+    assert s0.wait_persisted(120)
+    _set(store, eng, np.arange(0, 512, 9), 1.0)  # dirty both shards
+    s1 = coord.bgsave_to_dir(str(tmp_path / "ep1"))
+    assert s1.wait_persisted(120)
+    assert s1.modes == ["delta", "delta"]
+    man = json.load(open(tmp_path / "ep1" / "manifest.json"))
+    for entry in man["shards"]:
+        assert entry["mode"] == "delta"
+        assert entry["chain_depth"] == 1
+        assert entry["refs"]  # names the parent dir explicitly
+    assert cat.drop_epoch(s0.epoch_id) == []  # children still hold refs
+    assert os.path.exists(tmp_path / "ep0")
+    removed = cat.drop_epoch(s1.epoch_id)
+    assert removed  # the cascade now reclaims both generations
+    assert not os.path.exists(tmp_path / "ep0")
+    assert not os.path.exists(tmp_path / "ep1")
+
+
+# --------------------------------------------------------------------- #
+# read_file_snapshot hard guards (satellite)                            #
+# --------------------------------------------------------------------- #
+def _mini_dir(d, parent=None, full=True):
+    os.makedirs(d, exist_ok=True)
+    np.arange(8, dtype=np.float32).tofile(os.path.join(d, "leaf.bin"))
+    leaf = {"path": "kv", "file": "leaf.bin", "shape": [8],
+            "dtype": "float32", "blocks": [[0, 8, 32]],
+            "carried": [0] if full else []}
+    man = {"leaves": [leaf]}
+    if parent is not None:
+        man["parent"] = parent
+    with open(os.path.join(d, "manifest.json"), "w") as f:
+        json.dump(man, f)
+    return d
+
+
+def test_read_guard_cyclic_chain(tmp_path):
+    a = _mini_dir(str(tmp_path / "a"), parent="b", full=False)
+    _mini_dir(str(tmp_path / "b"), parent="a", full=False)
+    with pytest.raises(ValueError, match="cyclic"):
+        read_file_snapshot(a)
+    with pytest.raises(ValueError, match="cyclic"):
+        snapshot_chain_depth(a)
+
+
+def test_read_guard_missing_parent(tmp_path):
+    a = _mini_dir(str(tmp_path / "a"), parent="gone", full=False)
+    with pytest.raises(ValueError, match="missing"):
+        read_file_snapshot(a)
+    with pytest.raises(ValueError, match="missing snapshot manifest"):
+        snapshot_chain_depth(a)
+
+
+def test_read_guard_max_depth(tmp_path):
+    _mini_dir(str(tmp_path / "d0"))
+    for i in range(1, 6):
+        _mini_dir(str(tmp_path / f"d{i}"), parent=f"d{i-1}", full=False)
+    tip = str(tmp_path / "d5")
+    assert snapshot_chain_depth(tip) == 5
+    flat = read_file_snapshot(tip)  # default bound is generous
+    np.testing.assert_array_equal(flat["kv"],
+                                  np.arange(8, dtype=np.float32))
+    with pytest.raises(ValueError, match="max_depth"):
+        read_file_snapshot(tip, max_depth=3)
+    with pytest.raises(ValueError, match="max_depth"):
+        snapshot_chain_depth(tip, max_depth=3)
+
+
+# --------------------------------------------------------------------- #
+# retained-base lifecycle (satellite)                                   #
+# --------------------------------------------------------------------- #
+def test_retained_base_across_skips_drop_and_reshard(tmp_path):
+    store, eng = _engine(policy=BgsavePolicy(**_DELTA_POLICY))
+    coord = eng.coordinator
+    s0 = coord.bgsave_to_dir(str(tmp_path / "ep0"))
+    assert s0.wait_persisted(120)
+    base1 = coord.snapshotters[1].retained_base()
+    assert base1 is not None
+    # two consecutive skip epochs: the retained base is the SAME handle
+    for e in (1, 2):
+        _set(store, eng, np.arange(0, 32, 3), float(e))  # shard 0 only
+        sn = coord.bgsave_to_dir(str(tmp_path / f"ep{e}"))
+        assert sn.wait_persisted(120)
+        assert sn.modes[1] == "skip"
+        assert coord.snapshotters[1].retained_base() is base1
+    # dropping the retained base degrades the next epoch to full
+    coord.snapshotters[1].drop_retained()
+    assert coord.snapshotters[1].retained_base() is None
+    s3 = coord.bgsave_to_dir(str(tmp_path / "ep3"))
+    assert s3.wait_persisted(120)
+    assert s3.modes[1] == "full"
+    assert coord.snapshotters[1].retained_base() is not None
+    # post-reshard: the split children lose their base (fresh
+    # snapshotters), the unchanged shard keeps its retained handle
+    keep = coord.snapshotters[1].retained_base()
+    eng.split(0)
+    assert coord.snapshotters[0].retained_base() is None
+    assert coord.snapshotters[1].retained_base() is None
+    assert coord.snapshotters[2].retained_base() is keep
+    s4 = coord.bgsave_to_dir(str(tmp_path / "ep4"))
+    assert s4.wait_persisted(120)
+    assert s4.modes[0] == "full" and s4.modes[1] == "full"
+    assert s4.modes[2] == "skip"
+
+
+# --------------------------------------------------------------------- #
+# GetAt(epoch): live, evicted, and through the RequestServer            #
+# --------------------------------------------------------------------- #
+def test_get_at_exact_cut_live_and_from_disk(tmp_path):
+    store, eng = _engine(policy=BgsavePolicy(**_DELTA_POLICY))
+    coord, cat = eng.coordinator, eng.catalog
+    rows = np.arange(0, 512, 7)
+    snaps, truth = [], []
+    for e in range(3):
+        if e:
+            _set(store, eng, np.arange(0, 512, 11), float(e))
+        truth.append(store.get_concurrent(rows).copy())
+        snap = coord.bgsave_to_dir(str(tmp_path / f"ep{e}"))
+        assert snap.wait_persisted(120)
+        snaps.append(snap)
+    for e, snap in enumerate(snaps):  # zero-copy in-memory path
+        np.testing.assert_array_equal(eng.get_at(rows, snap.epoch_id),
+                                      truth[e])
+    for snap in snaps:
+        cat.evict_live(snap.epoch_id)
+    for e, snap in enumerate(snaps):  # memmapped manifest-chain path
+        np.testing.assert_array_equal(eng.get_at(rows, snap.epoch_id),
+                                      truth[e])
+
+
+def test_get_at_pinned_ref_and_errors(tmp_path):
+    store, eng = _engine()
+    rows = np.arange(0, 512, 13)
+    before = store.get_concurrent(rows).copy()
+    snap = eng.bgsave()
+    assert snap.wait_persisted(120)
+    ref = eng.catalog.pin(snap.epoch_id)
+    _set(store, eng, rows, 42.0)
+    np.testing.assert_array_equal(eng.get_at(rows, ref), before)
+    ref.release()
+    with pytest.raises(ValueError, match="released"):
+        ref.shard_blocks(0)
+    with pytest.raises(ValueError, match="unknown or dropped"):
+        eng.get_at(rows, 999)
+    # a NullSink epoch that was evicted has nowhere to read from
+    eng.catalog.evict_live(snap.epoch_id)
+    with pytest.raises(ValueError, match="neither"):
+        eng.get_at(rows, snap.epoch_id)
+
+
+def test_get_at_flows_through_request_server():
+    store, eng = _engine()
+    rows = np.arange(0, 512, 7)
+    before = store.get_concurrent(rows).copy()
+    snap = eng.bgsave()
+    assert snap.wait_persisted(120)
+    with RequestServer(eng, readers=3) as srv:
+        _set(store, eng, rows, 5.0)
+        msgs = [srv.submit(GetAtRequest(rows, snap.epoch_id))
+                for _ in range(4)]
+        live = srv.get(rows)
+        for m in msgs:
+            r = m.wait(timeout=60)
+            assert r.error is None
+            np.testing.assert_array_equal(r.value, before)
+        np.testing.assert_array_equal(live, np.full_like(live, 5.0))
+        stats = srv.stats()
+        assert stats["get_ats"] == 4.0 and stats["gets"] == 1.0
+
+
+# --------------------------------------------------------------------- #
+# writable branches (COW)                                               #
+# --------------------------------------------------------------------- #
+def test_branch_diverges_without_perturbing_parent():
+    store, eng = _engine()
+    rows = np.arange(0, 512, 7)
+    cut = store.get_concurrent(rows).copy()
+    snap = eng.bgsave()
+    assert snap.wait_persisted(120)
+    child = eng.branch(snap.epoch_id)
+    assert isinstance(child.store.shards[0], CowKVStore)
+    assert child.branch_ref is not None and not child.branch_ref.released
+    # the branch starts at the epoch's cut, not the parent's live state
+    _set(store, eng, rows, 7.0)
+    np.testing.assert_array_equal(child.store.get_concurrent(rows), cut)
+    # branch writes: COW faults materialize only touched blocks ...
+    _set(child.store, child, rows[:8], -3.0)
+    assert sum(s.cow_faults for s in child.store.shards) >= 1
+    got = child.store.get_concurrent(rows[:8])
+    np.testing.assert_array_equal(got, np.full_like(got, -3.0))
+    # ... and neither the parent's live state nor the epoch's image moves
+    live = store.get_concurrent(rows)
+    np.testing.assert_array_equal(live, np.full_like(live, 7.0))
+    np.testing.assert_array_equal(eng.get_at(rows, snap.epoch_id), cut)
+    # the branch can snapshot itself, into the SHARED catalog
+    bsnap = child.bgsave()
+    assert bsnap.wait_persisted(120)
+    assert child.catalog is eng.catalog
+    assert bsnap.epoch_id in eng.catalog.epochs()
+    child.branch_ref.release()
+
+
+def test_branch_pin_blocks_gc_until_released(tmp_path):
+    store, eng = _engine()
+    cat = eng.catalog
+    snap = eng.coordinator.bgsave_to_dir(str(tmp_path / "ep0"))
+    assert snap.wait_persisted(120)
+    child = eng.branch(snap.epoch_id)
+    assert cat.drop_epoch(snap.epoch_id) == []  # pinned: nothing removed
+    assert os.path.exists(tmp_path / "ep0")
+    rows = np.arange(0, 512, 17)
+    cut = child.store.get_concurrent(rows).copy()  # still readable
+    child.branch_ref.release()  # last pin: release cascades now
+    assert not os.path.exists(tmp_path / "ep0")
+    np.testing.assert_array_equal(child.store.get_concurrent(rows), cut)
+
+
+# --------------------------------------------------------------------- #
+# chain compactor                                                       #
+# --------------------------------------------------------------------- #
+def test_compactor_folds_deep_chain_and_frees_ancestors(tmp_path):
+    store, eng = _engine(policy=BgsavePolicy(**_DELTA_POLICY))
+    coord, cat = eng.coordinator, eng.catalog
+    rows = np.arange(0, 512, 5)
+    snaps, truth = [], []
+    for e in range(5):
+        if e:
+            _set(store, eng, np.arange(0, 64, 3), float(e))  # shard 0 only
+        truth.append(store.get_concurrent(rows).copy())
+        snap = coord.bgsave_to_dir(str(tmp_path / f"ep{e}"))
+        assert snap.wait_persisted(120)
+        snaps.append(snap)
+    tip = snaps[-1]
+    assert max(tip.chain_depths) == 4
+    assert tip.metrics.summary()["chain_depth_max"] == 4.0
+    assert tip.metrics.summary()["aliased_dirs"] >= 1.0
+    comp = ChainCompactor(cat, CompactionPolicy(max_chain=2))
+    assert comp.scan_once()  # folded at least one dir
+    sdir = cat._records[tip.epoch_id].shard_dirs[0]
+    assert cat.dir_depth(sdir) == 0
+    man = json.load(open(os.path.join(sdir, "manifest.json")))
+    assert man.get("compacted") and "parent" not in man
+    # every epoch still reads its exact cut through the folded chain
+    for e, snap in enumerate(snaps):
+        cat.evict_live(snap.epoch_id)
+        np.testing.assert_array_equal(eng.get_at(rows, snap.epoch_id),
+                                      truth[e])
+    # drop everything: the compacted dirs' parent refs are gone, so the
+    # cascade reclaims the whole tree
+    for snap in snaps:
+        cat.drop_epoch(snap.epoch_id)
+    assert sorted(os.listdir(tmp_path)) == []
+
+
+def test_compactor_background_thread(tmp_path):
+    store, eng = _engine(policy=BgsavePolicy(**_DELTA_POLICY))
+    coord, cat = eng.coordinator, eng.catalog
+    comp = ChainCompactor(cat, CompactionPolicy(max_chain=1,
+                                                interval_s=0.01))
+    comp.start()
+    try:
+        for e in range(4):
+            if e:
+                _set(store, eng, np.arange(0, 64, 3), float(e))
+            snap = coord.bgsave_to_dir(str(tmp_path / f"ep{e}"))
+            assert snap.wait_persisted(120)
+        deadline = 50
+        while cat.deep_dirs(1) and deadline:
+            threading.Event().wait(0.05)
+            deadline -= 1
+    finally:
+        comp.stop()
+    assert not cat.deep_dirs(1)
+    assert comp.compacted
+
+
+# --------------------------------------------------------------------- #
+# engine report plumbing                                                #
+# --------------------------------------------------------------------- #
+def test_engine_report_surfaces_chain_depth_and_aliases(tmp_path):
+    from repro.kvstore import Workload
+    store, eng = _engine(policy=BgsavePolicy(**_DELTA_POLICY))
+    coord = eng.coordinator
+    s0 = coord.bgsave_to_dir(str(tmp_path / "ep0"))
+    assert s0.wait_persisted(120)
+    _set(store, eng, np.arange(0, 64, 3), 1.0)
+    s1 = coord.bgsave_to_dir(str(tmp_path / "ep1"))
+    assert s1.wait_persisted(120)
+    summ = s1.metrics.summary()
+    assert summ["chain_depth_max"] == 1.0 and summ["aliased_dirs"] == 1.0
+    assert summ["per_shard"][0]["chain_depth"] == 1.0
+    eng._snaps = [s0, s1]
+    wl = Workload(rate_qps=300.0, batch=2, set_ratio=0.5, seed=1)
+    rep = eng.run(wl, duration_s=0.2, bgsave_at=())
+    rep.snapshot_metrics = [s.metrics.summary() for s in (s0, s1)]
+    roll = rep.summary()
+    assert roll["chain_depth_max"] == 1.0 and roll["aliased_dirs"] == 1.0
+
+
+# --------------------------------------------------------------------- #
+# property-style end-to-end (the PR's acceptance scenario)              #
+# --------------------------------------------------------------------- #
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - CI installs the test extra
+    HAVE_HYPOTHESIS = False
+
+
+def _epoch_product_scenario(tmp_path, write_rows, write_vals):
+    """>=3 epochs under live writes (one skip epoch, one mid-stream
+    reshard), exact GetAt cuts through the RequestServer for every epoch,
+    a branch diverging without perturbing its parent, and the compactor
+    folding the delta chain + GC'ing the aliased dir at the last drop."""
+    store, eng = _engine(policy=BgsavePolicy(**_DELTA_POLICY))
+    coord, cat = eng.coordinator, eng.catalog
+    probe = np.arange(0, 512, 7)
+    snaps, truth = [], []
+
+    def epoch(e):
+        truth.append(store.get_concurrent(probe).copy())
+        snap = coord.bgsave_to_dir(str(tmp_path / f"ep{e}"))
+        assert snap.wait_persisted(120)
+        snaps.append(snap)
+
+    epoch(0)                                    # full
+    _set(store, eng, write_rows[0], write_vals[0])   # shard 0 rows only
+    epoch(1)                                    # delta + SKIP on shard 1
+    assert "skip" in snaps[1].modes
+    eng.split(0)                                # mid-stream reshard
+    _set(store, eng, write_rows[1], write_vals[1])
+    epoch(2)                                    # post-reshard epoch
+    _set(store, eng, write_rows[2], write_vals[2])
+    epoch(3)
+    assert snaps[2].layout.n_shards == 3
+
+    with RequestServer(eng, readers=2) as srv:
+        for e, snap in enumerate(snaps):        # exact point-in-time cuts
+            np.testing.assert_array_equal(
+                srv.get_at(probe, snap.epoch_id), truth[e])
+
+    child = eng.branch(snaps[1].epoch_id)       # fork at the skip epoch
+    np.testing.assert_array_equal(child.store.get_concurrent(probe),
+                                  truth[1])
+    _set(child.store, child, probe[:6], -9.0)
+    _set(store, eng, probe[:6], 77.0)           # parent writes after fork
+    got = child.store.get_concurrent(probe[:6])
+    np.testing.assert_array_equal(got, np.full_like(got, -9.0))
+    np.testing.assert_array_equal(eng.get_at(probe, snaps[1].epoch_id),
+                                  truth[1])     # image never moves
+
+    # deepen shard 0's chain past max_chain, then fold it
+    for e in range(4, 7):
+        _set(store, eng, write_rows[0][:4], float(e))
+        epoch(e)
+    comp = ChainCompactor(cat, CompactionPolicy(max_chain=2))
+    comp.scan_once()
+    assert not cat.deep_dirs(2)
+    for e, snap in enumerate(snaps):            # folds preserve every cut
+        cat.evict_live(snap.epoch_id)
+        np.testing.assert_array_equal(eng.get_at(probe, snap.epoch_id),
+                                      truth[e])
+    # the aliased dir survives the aliasing epochs' drops, then GC's
+    alias = cat._records[snaps[1].epoch_id].shard_dirs[-1]
+    child.branch_ref.release()
+    for snap in snaps:
+        cat.drop_epoch(snap.epoch_id)
+    assert not os.path.exists(alias)
+    assert sorted(os.listdir(tmp_path)) == []
+
+
+def test_epoch_product_end_to_end(tmp_path):
+    rng = np.random.default_rng(0)
+    write_rows = [np.sort(rng.choice(64, size=9, replace=False)),
+                  np.sort(rng.choice(512, size=12, replace=False)),
+                  np.sort(rng.choice(512, size=12, replace=False))]
+    _epoch_product_scenario(tmp_path, write_rows, [1.0, 2.0, 3.0])
+
+
+if HAVE_HYPOTHESIS:
+
+    @st.composite
+    def epoch_writes(draw):
+        rows0 = draw(st.lists(st.integers(0, 63), min_size=1, max_size=8,
+                              unique=True))
+        rows1 = draw(st.lists(st.integers(0, 511), min_size=1, max_size=8,
+                              unique=True))
+        rows2 = draw(st.lists(st.integers(0, 511), min_size=1, max_size=8,
+                              unique=True))
+        vals = [draw(st.floats(-50, 50, allow_nan=False, width=32))
+                for _ in range(3)]
+        return ([np.array(sorted(rows0)), np.array(sorted(rows1)),
+                 np.array(sorted(rows2))], vals)
+
+    @settings(max_examples=5, deadline=None)
+    @given(script=epoch_writes())
+    def test_property_epoch_product(script, tmp_path_factory):
+        write_rows, write_vals = script
+        tmp = tmp_path_factory.mktemp("epochs")
+        _epoch_product_scenario(tmp, write_rows, write_vals)
