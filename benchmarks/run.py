@@ -582,6 +582,91 @@ def persist_path():
             shutil.rmtree(tmp, ignore_errors=True)
 
 
+def faults():
+    """New cell (PR 8): what crash safety costs, and what recovery costs.
+
+    (a) Durable commit protocol (per-run crc32 into the manifest, fsync
+    of data + manifest + parent dir, deferred composite rename as the
+    commit point) vs ``durable=False`` on the identical epoch stream —
+    the gated ratio is plain-over-durable wall-clock (bigger = cheaper
+    durability). (b) ``SnapshotCatalog.from_dir`` wall-clock vs committed
+    epoch count with deep crc verification on — the restart-time price of
+    the recovery scan (ungated: absolute, machine-bound).
+    """
+    import os
+    import shutil
+    import tempfile
+    import time
+
+    from repro.core import SnapshotCatalog
+    from repro.core.policy import BgsavePolicy
+    from repro.kvstore import KVEngine, ShardedKVStore
+
+    capacity, block_rows, width = 4096, 256, 16
+    epochs = 4 if FAST else 8
+    rows_all = np.arange(capacity, dtype=np.int64)
+
+    def _mk():
+        store = ShardedKVStore(capacity=capacity, block_rows=block_rows,
+                               row_width=width, seed=0, shards=2)
+        eng = KVEngine(store, mode="asyncfork", copier_threads=2,
+                       persist_bandwidth=None, copier_duty=1.0,
+                       policy=BgsavePolicy(delta_threshold=2.0,
+                                           full_every=99))
+        store.warmup(batch=2)
+        return store, eng
+
+    def _save_epochs(pool, n, durable):
+        store, eng = _mk()
+        t0 = time.perf_counter()
+        for e in range(n):
+            rows = rows_all[e % 5::7]
+            store.set(rows,
+                      np.full((rows.size, width), float(e + 1), np.float32),
+                      before_write=eng._write_hook, gate=eng._gate)
+            snap = eng.coordinator.bgsave_to_dir(
+                os.path.join(pool, f"ep{e}"), durable=durable
+            )
+            if not snap.wait_persisted(120.0):
+                raise RuntimeError("bench epoch did not persist")
+        return time.perf_counter() - t0
+
+    secs = {}
+    for durable, tag in ((False, "plain"), (True, "durable")):
+        best = float("inf")
+        for _ in range(3):
+            tmp = tempfile.mkdtemp(prefix=f"faults_{tag}_")
+            try:
+                best = min(best, _save_epochs(tmp, epochs, durable))
+            finally:
+                shutil.rmtree(tmp, ignore_errors=True)
+        secs[tag] = best
+    ratio = secs["plain"] / max(1e-9, secs["durable"])
+    _row(f"faults/durable_commit_{epochs}epochs",
+         secs["durable"] / epochs * 1e6,
+         f"plain_us_per_epoch={secs['plain'] / epochs * 1e6:.0f};"
+         f"epochs={epochs};"
+         f"durable_vs_plain={ratio:.2f}x")
+
+    for n in (epochs, epochs * 4):
+        tmp = tempfile.mkdtemp(prefix="faults_recover_")
+        try:
+            _save_epochs(tmp, n, True)
+            best = float("inf")
+            blocks = 0
+            for _ in range(3):
+                t0 = time.perf_counter()
+                cat = SnapshotCatalog.from_dir(tmp)
+                best = min(best, time.perf_counter() - t0)
+                blocks = cat.last_recovery.blocks_verified
+                assert len(cat.last_recovery.recovered) == n
+            _row(f"faults/recovery_{n}epochs", best * 1e6,
+                 f"epochs={n};blocks_verified={blocks};"
+                 f"us_per_epoch={best / n * 1e6:.0f}")
+        finally:
+            shutil.rmtree(tmp, ignore_errors=True)
+
+
 CELLS = {
     "fig3_fork_time_vs_size": fig3_fork_time_vs_size,
     "fig22_fork_call_duration": fig22_fork_call_duration,
@@ -602,6 +687,7 @@ CELLS = {
     "gate_contention": gate_contention,
     "read_concurrency": read_concurrency,
     "snapshot_reads": snapshot_reads,
+    "faults": faults,
 }
 
 

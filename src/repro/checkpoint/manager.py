@@ -100,6 +100,7 @@ class TrainSnapshotManager:
         full_every: int = 4,
         shards: int = 1,
         persist_workers: Optional[int] = None,
+        durable: bool = True,
     ):
         """``incremental=True`` turns the checkpoint stream into a delta
         chain: each save diffs against the previous save's retained T0
@@ -110,6 +111,12 @@ class TrainSnapshotManager:
         ``shards > 1`` partitions the state across that many independent
         snapshot epochs per save (fork barrier + shared persist pipeline;
         ``persist_workers`` sizes the pool, default one per shard).
+
+        ``durable=True`` (the default) runs the crash-safe commit
+        protocol: per-run crc32 checksums in shard manifests, fsync of
+        data + manifest + parent dir, and (sharded) the composite
+        manifest's atomic rename as the single commit point.
+        ``durable=False`` skips the fsyncs for throughput benchmarks.
 
         ``directory=None`` resolves via :func:`default_checkpoint_dir`
         (outside the repo tree)."""
@@ -122,11 +129,15 @@ class TrainSnapshotManager:
         self.incremental = bool(incremental)
         self.full_every = max(1, int(full_every))
         self.shards = max(1, int(shards))
+        self.durable = bool(durable)
         self._pipeline = PersistPipeline(
             workers=persist_workers if persist_workers is not None
             else max(1, self.shards)
         )
         self._snaps: List[Tuple[SnapshotHandle, PyTreeProvider]] = []
+        # sharded saves also carry a composite-commit thread whose rename
+        # is the epoch's commit point; wait_all must cover it too
+        self._composites: List[CoordinatedSnapshot] = []
         # chain base: (parts, dirname, per-shard leaf-path partition) —
         # the partition is the manager's "layout"; a save whose partition
         # differs from the base's degrades the changed shards to full
@@ -230,7 +241,7 @@ class TrainSnapshotManager:
 
         if self.shards == 1:
             provider = PyTreeProvider(state)  # pins T0 refs (CoW data pages)
-            sink = FileSink(path, parent=parent)
+            sink = FileSink(path, parent=parent, durable=self.durable)
             snapper = self._make_snapshotter(provider)
             snap = snapper.fork(sink, incremental=bases[0] is not None,
                                 base=bases[0])
@@ -253,8 +264,10 @@ class TrainSnapshotManager:
                 copier_duty=self.copier_duty, backend=self.backend,
             )
             result = coord.bgsave_to_dir(path, parent=parent, bases=bases,
-                                         prefix="", layout_record=layout_record)
+                                         prefix="", layout_record=layout_record,
+                                         durable=self.durable)
             parts = result.parts
+            self._composites.append(result)
 
         for snap, prov in zip(parts, providers):
             self._snaps.append((snap, prov))
@@ -265,8 +278,11 @@ class TrainSnapshotManager:
         return result
 
     def wait_all(self, timeout: float = 600.0) -> None:
-        """Block until every save is durable; surfaces the first abort
+        """Block until every save is durable — including each sharded
+        save's composite-manifest commit point; surfaces the first abort
         (even with persist workers still in flight) as SnapshotError."""
+        for comp in self._composites:
+            comp.wait_persisted(timeout)
         for snap, _ in self._snaps:
             snap.wait_persisted(timeout)
 
@@ -274,6 +290,9 @@ class TrainSnapshotManager:
         self._release_done_leaves()
         self._snaps = [
             (s, p) for s, p in self._snaps if not s.persist_done.is_set()
+        ]
+        self._composites = [
+            c for c in self._composites if not c.commit_done.is_set()
         ]
 
     def summary(self) -> Dict[str, float]:
@@ -297,7 +316,7 @@ _TOMBSTONE = _Tombstone()
 
 def restore_checkpoint(
     directory: str, workers: Optional[int] = None,
-    max_depth: Optional[int] = None,
+    max_depth: Optional[int] = None, verify: bool = True,
 ) -> Tuple[Dict, AdamWState]:
     """Read a checkpoint back into host numpy trees.
 
@@ -309,12 +328,16 @@ def restore_checkpoint(
     sequential path). ``max_depth`` bounds the parent-chain walk
     (corrupt/cyclic chains raise ``ValueError`` instead of recursing
     forever); ``None`` keeps ``read_file_snapshot``'s default bound.
+    ``verify=True`` (default) checks every carried block's recorded
+    crc32 against the bytes read — a flipped bit in a committed run
+    raises ``ValueError`` naming the shard dir instead of silently
+    restoring garbage.
 
     Elastic restart: callers re-``device_put`` these with whatever mesh
     they now have — nothing in the file format encodes the old topology.
     """
     kw = {} if max_depth is None else {"max_depth": int(max_depth)}
-    flat = read_file_snapshot(directory, workers=workers, **kw)
+    flat = read_file_snapshot(directory, workers=workers, verify=verify, **kw)
     params: Dict = {}
     opt_m: Dict = {}
     opt_v: Dict = {}

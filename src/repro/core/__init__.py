@@ -16,6 +16,7 @@ from repro.core.coordinator import (
     CoordinatedSnapshot,
     ShardedSnapshotCoordinator,
 )
+from repro.core.faults import FaultInjector, install as install_faults
 from repro.core.gates import GateRetired, GateSet, SharedGate
 from repro.core.layout import ShardLayout
 from repro.core.metrics import SnapshotMetrics
@@ -23,11 +24,13 @@ from repro.core.persist import PersistJob, PersistPipeline
 from repro.core.policy import (
     BgsavePolicy,
     CompactionPolicy,
+    RetryPolicy,
     ShardEpochView,
     ShardPolicyState,
     ShardWriteCounters,
 )
 from repro.core.provider import FailingProvider, PyTreeProvider
+from repro.core.recovery import RecoveryManager, RecoveryReport
 from repro.core.sinks import (
     FileSink,
     MemorySink,
@@ -37,6 +40,7 @@ from repro.core.sinks import (
     read_file_snapshot,
     read_snapshot_layout,
     snapshot_chain_depth,
+    verify_snapshot_dir,
     write_composite_manifest,
 )
 from repro.core.staging import (
@@ -70,6 +74,11 @@ __all__ = [
     "SharedGate",
     "BgsavePolicy",
     "CompactionPolicy",
+    "RetryPolicy",
+    "FaultInjector",
+    "install_faults",
+    "RecoveryManager",
+    "RecoveryReport",
     "ShardEpochView",
     "ShardPolicyState",
     "ShardWriteCounters",
@@ -100,6 +109,7 @@ __all__ = [
     "RestorePool",
     "read_file_snapshot",
     "snapshot_chain_depth",
+    "verify_snapshot_dir",
     "Snapshotter",
     "SnapshotHandle",
     "SnapshotError",

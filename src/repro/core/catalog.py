@@ -40,10 +40,12 @@ import json
 import os
 import shutil
 import threading
+import zlib
 from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro.core.faults import fire as _fire_fault
 from repro.core.policy import CompactionPolicy
 from repro.core.sinks import (
     RestorePool,
@@ -190,6 +192,11 @@ class SnapshotCatalog:
         self._next_id = 0
         self._pool = pool if pool is not None else RestorePool()
         self.live_wait_s = float(live_wait_s)
+        # dir removals that failed (fault-injected or racing an external
+        # delete): the orphan stays on disk for recovery to quarantine
+        self.gc_errors = 0
+        # stamped by SnapshotCatalog.from_dir (a RecoveryReport)
+        self.last_recovery = None
 
     # -- registration (called by the coordinator) ------------------------
     def register_epoch(self, snap) -> int:
@@ -210,6 +217,45 @@ class SnapshotCatalog:
         except Exception:
             pass
         return eid
+
+    def register_durable_epoch(
+        self,
+        directory: str,
+        shard_dirs: Sequence[str],
+        parents: Sequence[Optional[str]],
+        modes: Optional[Sequence[str]] = None,
+        layout=None,
+    ) -> int:
+        """Register an epoch that exists ONLY on disk (the recovery path
+        across a process restart): the same refcount wiring as
+        ``register_epoch`` + ``attach_dirs``, but with no live snapshot —
+        pins resolve every read through the on-disk manifest chains."""
+        with self._lock:
+            eid = self._next_id
+            self._next_id += 1
+            rec = _EpochRecord(eid, None, layout, list(modes or []))
+            self._records[eid] = rec
+        self.attach_dirs(eid, directory, shard_dirs, parents, modes=modes)
+        return eid
+
+    @classmethod
+    def from_dir(cls, pool_dir: str, deep_verify: bool = True,
+                 quarantine: bool = True,
+                 pool: Optional[RestorePool] = None) -> "SnapshotCatalog":
+        """Rebuild a catalog from a pool directory at process startup:
+        scan every epoch dir under ``pool_dir``, validate manifests (and,
+        with ``deep_verify``, every carried block's checksum), quarantine
+        torn or orphaned dirs into ``pool_dir/quarantine/``, and register
+        exactly the fully-committed epochs — ``restore_checkpoint``,
+        ``get_at`` and ``branch`` then work across restarts. The
+        :class:`~repro.core.recovery.RecoveryReport` lands on
+        ``catalog.last_recovery``."""
+        from repro.core.recovery import RecoveryManager
+        cat = cls(pool=pool)
+        cat.last_recovery = RecoveryManager(
+            pool_dir, deep_verify=deep_verify, quarantine=quarantine,
+        ).recover_into(cat)
+        return cat
 
     def attach_dirs(
         self,
@@ -366,21 +412,38 @@ class SnapshotCatalog:
                     dtype=np.dtype(leaf["dtype"]),
                 )
                 arr.tofile(os.path.join(tmp, leaf["file"]))
+                if not leaf.get("blocks"):
+                    return None
+                # the fold rewrites every block, so the folded manifest
+                # carries a fresh full-coverage crc32 list
+                buf = arr.reshape(-1).view(np.uint8)
+                bounds = np.cumsum([0] + [b[2] for b in leaf["blocks"]])
+                return [
+                    int(zlib.crc32(buf[int(bounds[i]):int(bounds[i + 1])]))
+                    for i in range(len(leaf["blocks"]))
+                ]
 
-            pool.map(_write_leaf, manifest["leaves"])
+            leaf_crcs = pool.map(_write_leaf, manifest["leaves"])
             new_manifest = dict(manifest)
             new_manifest.pop("parent", None)
             new_manifest["compacted"] = True
             new_manifest["leaves"] = [
-                dict(leaf, carried=list(range(len(leaf["blocks"]))))
+                dict(leaf, carried=list(range(len(leaf["blocks"]))),
+                     crc32=crcs)
                 if leaf.get("blocks") else dict(leaf)
-                for leaf in manifest["leaves"]
+                for leaf, crcs in zip(manifest["leaves"], leaf_crcs)
             ]
             with open(os.path.join(tmp, "manifest.json"), "w") as f:
                 json.dump(new_manifest, f)
             # atomic-enough swap: readers hold fds/mmaps, which survive
-            # the rename+unlink on Linux; new opens see the full image
+            # the rename+unlink on Linux; new opens see the full image.
+            # Crash repair (DESIGN.md §12): a dead process here leaves
+            # either path intact + a leftover .compact (roll the leftover
+            # away), or path missing with a complete .compact (roll
+            # forward) or an intact .old (roll back) — RecoveryManager
+            # handles all three.
             old = path + ".old"
+            _fire_fault("compactor.swap", path)
             os.rename(path, old)
             os.rename(tmp, path)
             shutil.rmtree(old, ignore_errors=True)
@@ -419,8 +482,17 @@ class SnapshotCatalog:
         if node.refs <= 0:
             del self._dirs[path]
             if node.owned:
-                shutil.rmtree(path, ignore_errors=True)
-                removed.append(path)
+                try:
+                    _fire_fault("catalog.gc", path)
+                    if os.path.lexists(path):
+                        shutil.rmtree(path)
+                    removed.append(path)
+                except OSError:
+                    # an already-gone dir is tolerated above (ENOENT is
+                    # not an error — someone beat us to it); anything
+                    # else leaves an orphan on disk for recovery to
+                    # quarantine, and the catalog keeps serving
+                    self.gc_errors += 1
             if node.parent is not None:
                 removed.extend(self._decref(node.parent))
             self._cleanup_composite(os.path.dirname(path))
@@ -527,13 +599,22 @@ class ChainCompactor:
         self.pool = pool
         self.compacted: List[str] = []   # dirs folded to full images
         self.released: List[str] = []    # ancestor dirs the GC reclaimed
+        self.compactor_errors = 0        # failed folds/scans (kept scanning)
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
 
     def scan_once(self) -> List[str]:
         done: List[str] = []
         for path in self.catalog.deep_dirs(self.policy.max_chain):
-            freed = self.catalog.compact_dir(path, pool=self.pool)
+            try:
+                freed = self.catalog.compact_dir(path, pool=self.pool)
+            except Exception:
+                # one dir's failed fold (an rmtree racing an external
+                # delete, a chain torn underfoot) must not starve the
+                # rest of the work list: count it, keep scanning, retry
+                # on the next tick
+                self.compactor_errors += 1
+                continue
             done.append(path)
             self.released.extend(freed)
         self.compacted.extend(done)
@@ -549,9 +630,10 @@ class ChainCompactor:
                 try:
                     self.scan_once()
                 except Exception:
-                    # maintenance must never kill the serving process;
-                    # a failed fold retries on the next tick
-                    pass
+                    # scan-level failure (the catalog mutating underfoot)
+                    # must never kill the maintenance thread — count it
+                    # and keep the loop alive
+                    self.compactor_errors += 1
 
         self._thread = threading.Thread(
             target=_loop, name="chain-compactor", daemon=True

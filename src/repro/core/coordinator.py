@@ -45,6 +45,8 @@ from __future__ import annotations
 
 import math
 import os
+import shutil
+import threading
 import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -55,7 +57,8 @@ from repro.core.persist import PersistPipeline
 from repro.core.policy import BgsavePolicy, ShardEpochView, ShardWriteCounters
 from repro.core.provider import PyTreeProvider
 from repro.core.sinks import FileSink, NullSink, Sink, write_composite_manifest
-from repro.core.snapshot import SnapshotHandle, Snapshotter, make_snapshotter
+from repro.core.snapshot import (SnapshotError, SnapshotHandle, Snapshotter,
+                                 make_snapshotter)
 
 
 class AggregateMetrics:
@@ -172,6 +175,16 @@ class AggregateMetrics:
         return sum(p.metrics.shared_wait_s for p in self._parts)
 
     @property
+    def persist_retries(self) -> int:
+        """Summed sink-write attempts replayed under the RetryPolicy."""
+        return sum(p.metrics.persist_retries for p in self._parts)
+
+    @property
+    def persist_aborts(self) -> int:
+        """Shard epochs abandoned after the retry budget."""
+        return sum(p.metrics.persist_aborts for p in self._parts)
+
+    @property
     def out_of_service_s(self) -> float:
         """Fig 20 analogue: one barrier stall + every parent-side copy
         stall (per-part out_of_service_s would re-count overlapping fork
@@ -231,6 +244,8 @@ class AggregateMetrics:
             "gate_wait_us": self.gate_wait_s * 1e6,
             "read_retries": float(self.read_retries),
             "shared_wait_us": self.shared_wait_s * 1e6,
+            "persist_retries": float(self.persist_retries),
+            "persist_aborts": float(self.persist_aborts),
             "dirty_frac_mean": (sum(dirty) / len(dirty)) if dirty else float("nan"),
             "chain_depth_max": float(max(self._chain_depths))
             if self._chain_depths else 0.0,
@@ -275,6 +290,13 @@ class CoordinatedSnapshot:
         self.epoch_id: Optional[int] = None
         self.chain_depths: Optional[List[int]] = None
         self.aliased_dirs: int = 0
+        # durable (to-dir) epochs defer the composite-manifest commit to a
+        # thread that waits for every shard's persist first (the rename is
+        # the epoch's single commit point — DESIGN.md §12); commit_done
+        # fires after the commit OR after a failed epoch's full unwind
+        self.commit_done = threading.Event()
+        self.commit_error: Optional[BaseException] = None
+        self._commit_pending = False
 
     @property
     def metrics(self) -> AggregateMetrics:
@@ -309,8 +331,18 @@ class CoordinatedSnapshot:
 
     def wait_persisted(self, timeout: Optional[float] = None) -> bool:
         ok = True
+        # durable epochs: wait the commit thread FIRST — it waits every
+        # part itself, and on failure finishes the unwind before setting
+        # the event, so a caller seeing the abort below can also trust
+        # that the partial epoch dir is already gone
+        if self._commit_pending:
+            ok = self.commit_done.wait(timeout)
         for p in self.parts:
             ok = p.wait_persisted(timeout) and ok
+        if self._commit_pending and self.commit_error is not None:
+            raise SnapshotError(
+                f"composite commit failed: {self.commit_error!r}"
+            ) from self.commit_error
         return ok
 
     def to_trees(self) -> List:
@@ -769,6 +801,7 @@ class ShardedSnapshotCoordinator:
         bases: Optional[Sequence[Optional[SnapshotHandle]]] = None,
         prefix: str = "shard{k}/",
         layout_record: Optional[Dict] = None,
+        durable: bool = True,
     ) -> CoordinatedSnapshot:
         """BGSAVE into ``<directory>/shard_<k>/`` FileSinks plus a top-level
         composite manifest (with the layout record and per-shard modes)
@@ -777,7 +810,18 @@ class ShardedSnapshotCoordinator:
         shard k inherits from ``../<parent>/shard_<k>``. With a policy,
         each shard chains against its OWN last persisted directory
         instead, and skipped shards' manifest entries point straight at
-        that directory (a zero-copy epoch)."""
+        that directory (a zero-copy epoch).
+
+        The composite manifest is written by a deferred COMMIT thread
+        only after every shard's sink has durably closed — its atomic
+        rename is the epoch's single commit point (DESIGN.md §12), so a
+        crash at any earlier instant leaves a recognizably torn epoch and
+        never a half-certified one. ``wait_persisted`` on the returned
+        snapshot covers the commit. ``durable=False`` keeps the same
+        commit ordering but skips the fsync protocol (bench baseline).
+        A persist failure on ANY shard unwinds the whole epoch: sibling
+        sinks aborted, the partial epoch dir removed, nothing registered
+        in the catalog."""
         directory = os.path.abspath(directory)
         with self.write_gate:
             if bases is not None:
@@ -820,26 +864,34 @@ class ShardedSnapshotCoordinator:
                         modes[k] = "full"
                         entry["mode"] = "full"
                     sinks.append(FileSink(os.path.join(directory, f"shard_{k}"),
-                                          parent=parent_k))
+                                          parent=parent_k, durable=durable))
                 else:
-                    sinks.append(FileSink(os.path.join(directory, f"shard_{k}")))
+                    sinks.append(FileSink(os.path.join(directory, f"shard_{k}"),
+                                          durable=durable))
                 entries.append(entry)
-            snap = self.bgsave(sinks=sinks, bases=bases, modes=modes)
+            try:
+                snap = self.bgsave(sinks=sinks, bases=bases, modes=modes)
+            except BaseException:
+                # the barrier never produced an epoch: remove whatever
+                # sink scaffolding already hit the disk
+                for s in sinks:
+                    if s is not None:
+                        try:
+                            s.abort()
+                        except Exception:
+                            pass
+                shutil.rmtree(directory, ignore_errors=True)
+                raise
             for k, mode in enumerate(snap.modes):
                 if mode == "skip":
                     entries[k]["mode"] = "skip"
                     entries[k]["dir"] = os.path.relpath(
                         self._recorded_dir(k), directory
                     )
-                else:
-                    if entries[k]["mode"] == "skip":  # degraded inside bgsave
-                        raise RuntimeError(
-                            "shard mode degraded after sink creation"
-                        )  # pragma: no cover - guarded by gate serialization
-                    self._last_dirs[k] = (
-                        os.path.join(directory, f"shard_{k}"),
-                        snap.parts_by_shard[k],
-                    )
+                elif entries[k]["mode"] == "skip":  # degraded inside bgsave
+                    raise RuntimeError(
+                        "shard mode degraded after sink creation"
+                    )  # pragma: no cover - guarded by gate serialization
             # explicit reference records (the catalog's refcount inputs,
             # written into the manifest so chain growth is observable):
             # each entry carries its delta depth, the dirs it depends on
@@ -876,16 +928,75 @@ class ShardedSnapshotCoordinator:
                 depths.append(depth)
             if layout_record is None and self.layout is not None:
                 layout_record = self.layout.to_record()
-        # manifest I/O OUTSIDE the gate: writers need not stall on a
-        # json.dump; entries/layout_record are fully resolved above and
-        # nothing below reads gate-protected state
-        write_composite_manifest(directory, entries, layout=layout_record)
-        snap.directory = directory
-        snap.chain_depths = depths
-        snap.aliased_dirs = sum(1 for m in snap.modes if m == "skip")
-        self.catalog.attach_dirs(snap, directory, shard_dirs, parent_dirs,
-                                 modes=snap.modes)
+        # Deferred commit, OUTSIDE the gate (writers never stall on sink
+        # fsyncs or a json.dump): the composite manifest may only appear
+        # once every shard is durably on disk, so a commit thread waits
+        # the parts and then performs the single atomic rename. Until it
+        # fires, the epoch is recognizably torn (no manifest.json) and
+        # recovery will quarantine it. A failure anywhere — shard abort,
+        # spent retry budget, manifest IO — unwinds the WHOLE epoch.
+        snap._commit_pending = True
+        aliased = sum(1 for m in snap.modes if m == "skip")
+        # captured by the commit thread: a reshard REPLACES self._last_dirs
+        # with a fresh list, so a late commit writes into the abandoned one
+        # (harmless) instead of corrupting the new partition's slots
+        last_dirs = self._last_dirs
+
+        def _commit() -> None:
+            try:
+                for p in snap.parts:
+                    if not p.wait_persisted(600.0):
+                        raise SnapshotError(
+                            f"shard persist timed out before composite "
+                            f"commit of {directory!r}"
+                        )
+                write_composite_manifest(directory, entries,
+                                         layout=layout_record,
+                                         durable=durable)
+                snap.directory = directory
+                snap.chain_depths = depths
+                snap.aliased_dirs = aliased
+                self.catalog.attach_dirs(snap, directory, shard_dirs,
+                                         parent_dirs, modes=snap.modes)
+                # only a COMMITTED dir may become a future delta parent or
+                # skip alias (item assignment is atomic; a barrier racing
+                # this sees the stale record and safely degrades to full)
+                for k, mode in enumerate(snap.modes):
+                    if mode != "skip":
+                        last_dirs[k] = (
+                            os.path.join(directory, f"shard_{k}"),
+                            snap.parts_by_shard[k],
+                        )
+            except BaseException as exc:
+                snap.commit_error = exc
+                self._unwind_composite(snap, directory, sinks)
+            finally:
+                snap.commit_done.set()
+
+        threading.Thread(target=_commit, daemon=True,
+                         name="composite-commit").start()
         return snap
+
+    def _unwind_composite(self, snap: CoordinatedSnapshot, directory: str,
+                          sinks: Sequence[Optional[Sink]]) -> None:
+        """Roll a failed durable epoch ALL the way back: abort every shard
+        sink (also removing sibling shards' completed dirs), drop the
+        never-committed catalog record, and delete the partial epoch
+        directory — disk and refcounts end up as if the barrier never
+        fired. Skip aliases point OUTSIDE the epoch dir (at a previous
+        epoch's shard dir) and are deliberately untouched."""
+        for s in sinks:
+            if s is not None:
+                try:
+                    s.abort()
+                except Exception:
+                    pass
+        if snap.epoch_id is not None:
+            try:
+                self.catalog.drop_epoch(snap.epoch_id)
+            except Exception:
+                pass
+        shutil.rmtree(directory, ignore_errors=True)
 
     # -- lifecycle -------------------------------------------------------
     def active(self) -> List[CoordinatedSnapshot]:

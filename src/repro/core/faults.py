@@ -1,0 +1,163 @@
+"""Fault injection for the persist/commit/maintenance planes.
+
+The crash-safety argument (DESIGN.md §12) is only as good as the failures
+it has actually been tested against. This module gives tests and the
+``faults`` benchmark cell a way to script *real* failures at the exact
+points where the durable-commit protocol claims to tolerate them:
+
+  * ``sink.write``     — inside :meth:`FileSink.write_run`, before the
+                         gathered ``pwritev`` (a transient disk error on
+                         the data path; the persist worker's
+                         :class:`~repro.core.policy.RetryPolicy` covers it)
+  * ``sink.fsync``     — before each durable-mode ``fsync`` in
+                         :meth:`FileSink.close`
+  * ``sink.rename``    — before the shard manifest's tmp→final rename
+                         (the per-shard commit point)
+  * ``persist.run``    — at the top of each persist-worker write attempt
+                         (:meth:`PersistPipeline._persist_run`)
+  * ``bgsave.commit``  — inside :func:`write_composite_manifest`, before
+                         the composite manifest rename (the epoch's
+                         single linearization point)
+  * ``compactor.swap`` — in :meth:`SnapshotCatalog.compact_dir`, between
+                         building the folded image and the rename swap
+  * ``catalog.gc``     — in :meth:`SnapshotCatalog._decref`, before the
+                         refcount-zero ``rmtree``
+
+Modes: ``raise`` (raise ``exc`` for the first ``times`` hits — raise-once
+is ``times=1``, raise-N is ``times=N``), ``delay`` (sleep ``delay_s`` per
+hit), and ``crash`` (``os._exit`` — the SIGKILL-equivalent: no cleanup,
+no atexit, no flushed buffers; the subprocess crash harness asserts on
+the exit code). ``after`` skips the first N hits before acting, so a
+crash can land mid-stream rather than on the first write.
+
+Threading: tests either pass a :class:`FaultInjector` explicitly to
+``FileSink``/``PersistPipeline`` or ``install()`` one process-wide (the
+coordinator's composite commit and the catalog's maintenance sites read
+the installed injector). ``fire()`` is a no-op while nothing is armed, so
+the production hot path pays one attribute load per site.
+"""
+from __future__ import annotations
+
+import os
+import threading
+import time
+from typing import Dict, Optional
+
+# Exit code the crash mode dies with; chosen to match SIGKILL's shell
+# convention (128 + 9) so the harness can tell "crash site fired" from
+# any ordinary python failure.
+CRASH_EXIT_CODE = 137
+
+SITES = (
+    "sink.write",
+    "sink.fsync",
+    "sink.rename",
+    "persist.run",
+    "bgsave.commit",
+    "compactor.swap",
+    "catalog.gc",
+)
+
+
+class _Plan:
+    __slots__ = ("mode", "times", "exc", "delay_s", "after", "hits", "acted")
+
+    def __init__(self, mode: str, times: Optional[int], exc, delay_s: float,
+                 after: int):
+        self.mode = mode
+        self.times = times          # None = unbounded (delay mode)
+        self.exc = exc
+        self.delay_s = delay_s
+        self.after = after
+        self.hits = 0               # fire() calls seen at this site
+        self.acted = 0              # raises/delays actually delivered
+
+
+class FaultInjector:
+    """Named injection sites with raise-once / raise-N / delay / crash."""
+
+    def __init__(self):
+        self._mu = threading.Lock()
+        self._plans: Dict[str, _Plan] = {}
+        self._hits: Dict[str, int] = {}
+
+    # -- arming -----------------------------------------------------------
+    def arm(self, site: str, mode: str = "raise", times: Optional[int] = 1,
+            exc=OSError, delay_s: float = 0.0, after: int = 0) -> None:
+        """Arm one site. ``mode``: "raise" | "delay" | "crash".
+        ``times`` bounds how many hits act (None = every hit); ``after``
+        skips that many hits first."""
+        if site not in SITES:
+            raise ValueError(f"unknown fault site {site!r}; pick from {SITES}")
+        if mode not in ("raise", "delay", "crash"):
+            raise ValueError(f"unknown fault mode {mode!r}")
+        with self._mu:
+            self._plans[site] = _Plan(mode, times, exc, float(delay_s),
+                                      int(after))
+
+    def disarm(self, site: Optional[str] = None) -> None:
+        with self._mu:
+            if site is None:
+                self._plans.clear()
+            else:
+                self._plans.pop(site, None)
+
+    # -- accounting -------------------------------------------------------
+    def hits(self, site: str) -> int:
+        """fire() calls seen at ``site`` (armed or not)."""
+        with self._mu:
+            return self._hits.get(site, 0)
+
+    def acted(self, site: str) -> int:
+        """Faults actually delivered at ``site``."""
+        with self._mu:
+            plan = self._plans.get(site)
+            return plan.acted if plan is not None else 0
+
+    # -- the injection point ----------------------------------------------
+    def fire(self, site: str, detail: str = "") -> None:
+        with self._mu:
+            self._hits[site] = self._hits.get(site, 0) + 1
+            plan = self._plans.get(site)
+            if plan is None:
+                return
+            plan.hits += 1
+            if plan.hits <= plan.after:
+                return
+            if plan.times is not None and plan.acted >= plan.times:
+                return
+            plan.acted += 1
+            mode, exc, delay_s = plan.mode, plan.exc, plan.delay_s
+        if mode == "crash":
+            # SIGKILL-equivalent: no unwinding, no atexit, nothing flushed
+            os._exit(CRASH_EXIT_CODE)
+        if mode == "delay":
+            time.sleep(delay_s)
+            return
+        raise exc(f"injected fault at {site}" + (f" ({detail})" if detail else ""))
+
+
+# -- process-wide injector (subprocess harness / whole-engine tests) ------
+_INSTALLED: Optional[FaultInjector] = None
+
+
+def install(injector: Optional[FaultInjector]) -> Optional[FaultInjector]:
+    """Install (or, with None, remove) the process-wide injector; returns
+    the previous one so tests can restore it."""
+    global _INSTALLED
+    prev = _INSTALLED
+    _INSTALLED = injector
+    return prev
+
+
+def installed() -> Optional[FaultInjector]:
+    return _INSTALLED
+
+
+def fire(site: str, detail: str = "",
+         faults: Optional[FaultInjector] = None) -> None:
+    """Hit one site: the explicitly threaded injector wins, else the
+    installed process-wide one, else no-op."""
+    inj = faults if faults is not None else _INSTALLED
+    if inj is not None:
+        inj.fire(site, detail)

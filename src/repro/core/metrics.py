@@ -39,6 +39,8 @@ class SnapshotMetrics:
     read_retries: int = 0             # seqlock re-reads while this epoch ran
     shared_wait_s: float = 0.0        # readers' shared-stripe waits
     shared_waits: int = 0             # reads that fell back to shared mode
+    persist_retries: int = 0          # sink-write attempts replayed by RetryPolicy
+    persist_aborts: int = 0           # epochs abandoned after the retry budget
     aborted: bool = False
 
     def __post_init__(self):
@@ -66,6 +68,16 @@ class SnapshotMetrics:
             if shared_wait_s > 0.0:
                 self.shared_wait_s += shared_wait_s
                 self.shared_waits += 1
+
+    def record_persist_retry(self) -> None:
+        """One sink-write attempt replayed after a transient OSError."""
+        with self._lock:
+            self.persist_retries += 1
+
+    def record_persist_abort(self) -> None:
+        """This epoch's persist failed past the retry budget."""
+        with self._lock:
+            self.persist_aborts += 1
 
     @property
     def n_interruptions(self) -> int:
@@ -119,4 +131,6 @@ class SnapshotMetrics:
             "read_retries": float(self.read_retries),
             "shared_wait_us": self.shared_wait_s * 1e6,
             "shared_waits": float(self.shared_waits),
+            "persist_retries": float(self.persist_retries),
+            "persist_aborts": float(self.persist_aborts),
         }

@@ -37,6 +37,8 @@ import weakref
 from typing import List, Optional, Sequence
 
 from repro.core.blocks import BlockRef, BlockRun, BlockState
+from repro.core.faults import FaultInjector, fire as _fire_fault
+from repro.core.policy import RetryPolicy
 from repro.core.sinks import Sink
 
 DEFAULT_RUN_BLOCKS = 16
@@ -108,7 +110,10 @@ class PersistJob:
         """§4.4 case 3 routed through the pipeline: abort the epoch; the
         job's remaining runs drain as no-ops and ``_finish`` cleans up."""
         with self._mu:
+            first = not self.failed
             self.failed = True
+        if first:
+            self.snap.metrics.record_persist_abort()
         self.snap.abort(exc)
 
     def _finish(self) -> None:
@@ -136,11 +141,15 @@ class PersistPipeline:
 
     def __init__(self, workers: int = 1, queue_depth: int = 64,
                  idle_timeout: float = 1.0,
-                 run_blocks: int = DEFAULT_RUN_BLOCKS):
+                 run_blocks: int = DEFAULT_RUN_BLOCKS,
+                 retry: Optional[RetryPolicy] = RetryPolicy(),
+                 faults: Optional[FaultInjector] = None):
         self.workers = max(1, int(workers))
         self.queue_depth = max(1, int(queue_depth))
         self.idle_timeout = float(idle_timeout)
         self.run_blocks = max(1, int(run_blocks))
+        self.retry = retry        # None disables persist-write retries
+        self.faults = faults
         self._q: "queue.Queue" = queue.Queue(maxsize=self.queue_depth)
         self._mu = threading.Lock()
         self._threads: List[threading.Thread] = []
@@ -274,6 +283,27 @@ class PersistPipeline:
                     st = table.wait_not_copying(ref.key)
             if not (job.failed or snap.aborted):
                 arrays = snap.staged_run(brun.refs)
+                self._write_with_retry(job, brun, arrays)
+                table.mark_run(brun, BlockState.PERSISTED)
+        except BaseException as exc:
+            job.fail(exc)
+        finally:
+            job._run_finished()
+
+    def _write_with_retry(self, job: PersistJob, brun: BlockRun,
+                          arrays) -> None:
+        """One run's sink write under the :class:`RetryPolicy`: a
+        transient ``OSError`` replays the whole run (positioned writes
+        are idempotent — same offsets, same bytes) after a backoff, up to
+        the policy's budget; anything else, or a spent budget, escalates
+        to the existing epoch abort in ``_persist_run``'s handler."""
+        snap, sink = job.snap, job.sink
+        attempt = 0
+        while True:
+            try:
+                _fire_fault("persist.run",
+                            f"leaf={brun.leaf_id}+{brun.start_block}",
+                            self.faults)
                 if type(sink).write_run is Sink.write_run:
                     # write_block-only sink: per-block writes with the
                     # REAL refs (row geometry intact)
@@ -281,8 +311,13 @@ class PersistPipeline:
                         sink.write_block(ref, arr)
                 else:
                     sink.write_run(brun.leaf_id, brun.start_block, arrays)
-                table.mark_run(brun, BlockState.PERSISTED)
-        except BaseException as exc:
-            job.fail(exc)
-        finally:
-            job._run_finished()
+                return
+            except OSError:
+                delay = None if self.retry is None else \
+                    self.retry.backoff(attempt)
+                if delay is None or job.failed or snap.aborted:
+                    raise
+                attempt += 1
+                snap.metrics.record_persist_retry()
+                if delay:
+                    time.sleep(delay)

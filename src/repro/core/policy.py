@@ -216,3 +216,30 @@ class CompactionPolicy:
 
     def should_compact(self, chain_depth: int) -> bool:
         return chain_depth > self.max_chain
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Bounded retry-with-backoff for transient persist-sink ``OSError``s.
+
+    The persist worker treats a sink-write failure as transient for up to
+    ``max_retries`` re-attempts (positioned ``pwritev`` writes are
+    idempotent, so replaying a run is safe), sleeping
+    ``backoff_s * backoff_mult**attempt`` (capped at ``max_backoff_s``)
+    between attempts. Once the budget is exhausted the failure escalates
+    to the existing epoch abort. Only ``OSError`` is retried — anything
+    else is a bug, not weather.
+    """
+
+    max_retries: int = 3
+    backoff_s: float = 0.001
+    backoff_mult: float = 2.0
+    max_backoff_s: float = 0.05
+
+    def backoff(self, attempt: int) -> Optional[float]:
+        """Sleep before retry number ``attempt`` (0-based), or None when
+        the budget is spent."""
+        if attempt >= self.max_retries:
+            return None
+        return min(self.backoff_s * (self.backoff_mult ** attempt),
+                   self.max_backoff_s)

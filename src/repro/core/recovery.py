@@ -1,0 +1,296 @@
+"""Crash recovery — rebuild the snapshot catalog from a pool directory.
+
+The commit protocol (DESIGN.md §12) guarantees exactly one disk-visible
+distinction: an epoch directory either has a composite ``manifest.json``
+(every shard durably closed before the atomic rename published it) or it
+does not (the crash landed anywhere earlier). This module is the reader
+of that contract at process startup:
+
+* roll half-finished compactor swaps forward or back (``<dir>.compact``
+  with a complete manifest wins; an intact ``<dir>.old`` restores the
+  pre-fold chain; leftovers of finished swaps are deleted),
+* scan the pool's epoch dirs in commit order (composite-manifest mtime),
+* validate each: manifest parses, every shard entry resolves, data files
+  exist at manifest sizes, delta parents and skip aliases point at
+  already-validated dirs, and — with ``deep_verify`` — every carried
+  block's crc32 matches,
+* quarantine anything torn or orphaned into ``pool/quarantine/`` (moved,
+  NEVER deleted — a torn epoch is evidence, and a false-negative
+  validation must not destroy data), and
+* register the surviving prefix with
+  :meth:`SnapshotCatalog.register_durable_epoch` so ``restore_checkpoint``,
+  ``get_at`` and ``branch`` work across the restart.
+
+Invariant: an epoch is recovered iff its commit point fired AND every
+dir its manifests reference (transitively, through skip aliases and
+delta parents) was itself recovered — so the recovered set is exactly a
+prefix of the committed epochs, never a superset. A ``drop_epoch`` that
+crashed before its ``rmtree`` is NOT durable: the epoch's dirs are still
+complete on disk, so recovery legitimately resurrects it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.layout import ShardLayout
+from repro.core.sinks import _verify_leaf_bytes
+
+
+@dataclasses.dataclass
+class RecoveryReport:
+    """What a recovery pass found and did."""
+
+    pool_dir: str
+    recovered: List[int] = dataclasses.field(default_factory=list)
+    recovered_dirs: List[str] = dataclasses.field(default_factory=list)
+    quarantined: List[Tuple[str, str]] = dataclasses.field(
+        default_factory=list)                     # (path, reason)
+    repaired_swaps: List[Tuple[str, str]] = dataclasses.field(
+        default_factory=list)                     # (path, action)
+    blocks_verified: int = 0
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "recovered_epochs": float(len(self.recovered)),
+            "quarantined_dirs": float(len(self.quarantined)),
+            "repaired_swaps": float(len(self.repaired_swaps)),
+            "blocks_verified": float(self.blocks_verified),
+        }
+
+
+QUARANTINE_DIRNAME = "quarantine"
+
+
+class RecoveryManager:
+    """Startup scanner rebuilding a catalog from one pool directory."""
+
+    def __init__(self, pool_dir: str, deep_verify: bool = True,
+                 quarantine: bool = True):
+        self.pool_dir = os.path.abspath(pool_dir)
+        self.deep_verify = deep_verify
+        # quarantine=False validates and registers identically but leaves
+        # invalid dirs where they are (forensics / read-only mounts)
+        self.quarantine = quarantine
+
+    # -- public entry -----------------------------------------------------
+    def recover_into(self, catalog) -> RecoveryReport:
+        """Scan, repair, validate and register into ``catalog``."""
+        report = RecoveryReport(self.pool_dir)
+        if not os.path.isdir(self.pool_dir):
+            return report
+        self._repair_swaps(report)
+        valid_dirs: set = set()
+        for epoch_dir in self._epoch_dirs_in_commit_order():
+            problem = self._validate_epoch(epoch_dir, valid_dirs, report)
+            if problem is not None:
+                self._quarantine(epoch_dir, problem, report)
+                continue
+            shard_dirs, parents, modes, layout = self._epoch_record(epoch_dir)
+            eid = catalog.register_durable_epoch(
+                epoch_dir, shard_dirs, parents, modes=modes, layout=layout,
+            )
+            report.recovered.append(eid)
+            report.recovered_dirs.append(epoch_dir)
+            for sd in shard_dirs:
+                valid_dirs.add(os.path.realpath(sd))
+        return report
+
+    # -- swap repair ------------------------------------------------------
+    def _repair_swaps(self, report: RecoveryReport) -> None:
+        """Finish or undo compactor rename swaps the crash interrupted.
+
+        The swap sequence is: build ``X.compact`` (complete, with its own
+        manifest) → rename ``X`` to ``X.old`` → rename ``X.compact`` to
+        ``X`` → remove ``X.old``. Every crash point is repairable:
+        ``X`` present → any ``X.compact``/``X.old`` are leftovers (drop);
+        ``X`` missing + complete ``X.compact`` → roll FORWARD (the fold
+        is byte-equivalent to the chain it replaced); ``X`` missing +
+        ``X.old`` only → roll BACK.
+        """
+        import shutil
+        for dirpath, dirnames, _ in os.walk(self.pool_dir):
+            if os.path.basename(dirpath) == QUARANTINE_DIRNAME:
+                dirnames[:] = []
+                continue
+            # sorted: "X.compact" processes before "X.old", so the
+            # mid-swap state (target missing, BOTH staged dirs present)
+            # deterministically rolls forward and then drops the .old
+            for name in sorted(dirnames):
+                for suffix in (".compact", ".old"):
+                    if not name.endswith(suffix):
+                        continue
+                    staged = os.path.join(dirpath, name)
+                    target = staged[: -len(suffix)]
+                    if os.path.exists(target):
+                        shutil.rmtree(staged, ignore_errors=True)
+                        report.repaired_swaps.append((staged, "dropped"))
+                    elif suffix == ".compact" and os.path.exists(
+                            os.path.join(staged, "manifest.json")):
+                        os.rename(staged, target)
+                        report.repaired_swaps.append((target, "rolled_forward"))
+                    elif suffix == ".old":
+                        os.rename(staged, target)
+                        report.repaired_swaps.append((target, "rolled_back"))
+                    else:
+                        # an incomplete .compact with no target and no
+                        # .old sibling processed yet: leave it for the
+                        # .old branch of this same walk entry
+                        continue
+
+    # -- scanning ---------------------------------------------------------
+    def _epoch_dirs_in_commit_order(self) -> List[str]:
+        """Top-level pool entries, committed ones ordered by their
+        composite manifest's mtime (the rename that published them), torn
+        ones last (they quarantine regardless of order)."""
+        entries = []
+        for name in sorted(os.listdir(self.pool_dir)):
+            if name == QUARANTINE_DIRNAME:
+                continue
+            path = os.path.join(self.pool_dir, name)
+            if not os.path.isdir(path):
+                continue
+            manifest = os.path.join(path, "manifest.json")
+            try:
+                key = (0, os.stat(manifest).st_mtime_ns)
+            except OSError:
+                key = (1, 0)  # torn: no commit point, order immaterial
+            entries.append((key, name, path))
+        return [p for _, _, p in sorted(entries)]
+
+    # -- validation -------------------------------------------------------
+    def _validate_epoch(self, epoch_dir: str, valid_dirs: set,
+                        report: RecoveryReport) -> Optional[str]:
+        """None if the epoch is fully committed and internally consistent;
+        otherwise a human-readable reason to quarantine it."""
+        manifest = self._load_manifest(epoch_dir)
+        if manifest is None:
+            return "no composite manifest (torn epoch: crash before the " \
+                   "commit-point rename)"
+        if not manifest.get("composite"):
+            # flat single-sink epoch (the unsharded checkpoint manager)
+            return self._validate_sink_dir(epoch_dir, valid_dirs, report)
+        for entry in manifest.get("shards", []):
+            sdir = entry["dir"]
+            if not os.path.isabs(sdir):
+                sdir = os.path.normpath(os.path.join(epoch_dir, sdir))
+            if entry.get("mode") == "skip":
+                # zero-copy epoch: the entry aliases a PREVIOUS epoch's
+                # shard dir, which must itself have been recovered
+                if os.path.realpath(sdir) not in valid_dirs:
+                    return (f"skip entry aliases {sdir!r}, which is not a "
+                            "recovered shard dir")
+                continue
+            if not sdir.startswith(epoch_dir + os.sep):
+                return f"non-skip entry escapes the epoch dir: {sdir!r}"
+            problem = self._validate_sink_dir(sdir, valid_dirs, report)
+            if problem is not None:
+                return problem
+        return None
+
+    def _validate_sink_dir(self, sdir: str, valid_dirs: set,
+                           report: RecoveryReport) -> Optional[str]:
+        manifest = self._load_manifest(sdir)
+        if manifest is None:
+            return f"shard dir {sdir!r} has no parseable manifest"
+        if "leaves" not in manifest:
+            return f"shard dir {sdir!r} manifest lacks a leaves table"
+        parent = manifest.get("parent")
+        if parent is not None:
+            pdir = parent if os.path.isabs(parent) else os.path.normpath(
+                os.path.join(os.path.dirname(sdir), parent)
+            )
+            if os.path.realpath(pdir) not in valid_dirs:
+                return (f"shard dir {sdir!r} chains to parent {pdir!r}, "
+                        "which is not a recovered shard dir")
+        for leaf in manifest["leaves"]:
+            path = os.path.join(sdir, leaf["file"])
+            dtype = np.dtype(leaf["dtype"])
+            n_elems = int(np.prod(leaf["shape"])) if leaf["shape"] else 1
+            if not os.path.exists(path):
+                return (f"shard dir {sdir!r}: leaf {leaf['path']!r} data "
+                        f"file {leaf['file']!r} is missing")
+            if os.path.getsize(path) != n_elems * dtype.itemsize:
+                return (f"shard dir {sdir!r}: leaf {leaf['path']!r} file "
+                        f"holds {os.path.getsize(path)} bytes, manifest "
+                        f"needs {n_elems * dtype.itemsize}")
+            if self.deep_verify and n_elems and leaf.get("crc32"):
+                try:
+                    _verify_leaf_bytes(
+                        sdir, leaf, np.memmap(path, dtype=np.uint8, mode="r")
+                    )
+                except ValueError as exc:
+                    return str(exc)
+                report.blocks_verified += sum(
+                    1 for c in leaf["crc32"] if c is not None
+                )
+        return None
+
+    @staticmethod
+    def _load_manifest(directory: str) -> Optional[Dict]:
+        try:
+            with open(os.path.join(directory, "manifest.json")) as f:
+                return json.load(f)
+        except (OSError, ValueError):
+            return None
+
+    # -- registration inputs ----------------------------------------------
+    def _epoch_record(self, epoch_dir: str):
+        """(shard_dirs, parents, modes, layout) for a VALIDATED epoch."""
+        manifest = self._load_manifest(epoch_dir)
+        if not manifest.get("composite"):
+            parent = manifest.get("parent")
+            pdir = None
+            if parent is not None:
+                pdir = parent if os.path.isabs(parent) else os.path.normpath(
+                    os.path.join(os.path.dirname(epoch_dir), parent)
+                )
+            return ([epoch_dir], [pdir],
+                    ["delta" if parent else "full"], None)
+        shard_dirs: List[str] = []
+        parents: List[Optional[str]] = []
+        modes: List[str] = []
+        for entry in manifest["shards"]:
+            sdir = entry["dir"]
+            if not os.path.isabs(sdir):
+                sdir = os.path.normpath(os.path.join(epoch_dir, sdir))
+            mode = entry.get("mode", "full")
+            pdir: Optional[str] = None
+            if mode != "skip":
+                smanifest = self._load_manifest(sdir) or {}
+                parent = smanifest.get("parent")
+                if parent is not None:
+                    pdir = parent if os.path.isabs(parent) else \
+                        os.path.normpath(os.path.join(
+                            os.path.dirname(sdir), parent))
+            shard_dirs.append(sdir)
+            parents.append(pdir)
+            modes.append(mode)
+        layout = None
+        rec = manifest.get("layout")
+        if rec and rec.get("kind") == "range":
+            try:
+                layout = ShardLayout.from_record(rec)
+            except Exception:
+                layout = None
+        return shard_dirs, parents, modes, layout
+
+    # -- quarantine -------------------------------------------------------
+    def _quarantine(self, path: str, reason: str,
+                    report: RecoveryReport) -> None:
+        if not self.quarantine:
+            report.quarantined.append((path, reason))
+            return
+        qdir = os.path.join(self.pool_dir, QUARANTINE_DIRNAME)
+        os.makedirs(qdir, exist_ok=True)
+        dest = os.path.join(qdir, os.path.basename(path))
+        n = 1
+        while os.path.exists(dest):
+            dest = os.path.join(qdir, f"{os.path.basename(path)}.{n}")
+            n += 1
+        os.rename(path, dest)
+        report.quarantined.append((dest, reason))

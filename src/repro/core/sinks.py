@@ -23,12 +23,14 @@ import os
 import shutil
 import threading
 import time
+import zlib
 from concurrent.futures import ThreadPoolExecutor
 from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
 from repro.core.blocks import BlockRef, LeafHandle
+from repro.core.faults import FaultInjector, fire as _fire_fault
 
 # pwritev gathers at most IOV_MAX (1024 on Linux) buffers per call.
 _IOV_MAX = 1024
@@ -160,13 +162,28 @@ class FileSink(Sink):
     inherited from the ``parent`` snapshot directory (a sibling directory
     name, a relative path, or an absolute path). ``read_file_snapshot``
     follows the chain.
+
+    Durability (DESIGN.md §12): every written block's crc32 lands in the
+    manifest (per-leaf ``crc32`` list parallel to ``carried``) and is
+    re-checked on restore. With ``durable=True``, :meth:`close` becomes a
+    commit protocol — fsync every data file, fsync the manifest tmp,
+    rename it into place, fsync the directory — so after close returns,
+    the shard either exists completely on disk or (no manifest.json) is
+    recognizably torn. ``faults`` threads a :class:`FaultInjector` through
+    the sink's write/fsync/rename sites.
     """
 
-    def __init__(self, directory: str, parent: Optional[str] = None):
+    def __init__(self, directory: str, parent: Optional[str] = None,
+                 durable: bool = False,
+                 faults: Optional[FaultInjector] = None):
         self.dir = directory
         self.parent = parent
+        self.durable = durable
+        self.faults = faults
         self._files: Dict[int, object] = {}
         self._offsets: Dict[int, np.ndarray] = {}  # leaf_id -> prefix sums
+        self._crcs: Dict[tuple, int] = {}          # (leaf_id, block_id) -> crc32
+        self._manifest: Optional[Dict] = None
         self._lock = threading.Lock()
         self._cv = threading.Condition(self._lock)
         self._inflight = 0
@@ -194,6 +211,7 @@ class FileSink(Sink):
         }
         if self.parent is not None:
             manifest["parent"] = self.parent
+        self._manifest = manifest
         with open(os.path.join(self.dir, "manifest.json.tmp"), "w") as f:
             json.dump(manifest, f)
         self._handles = {h.leaf_id: h for h in leaf_handles}
@@ -218,13 +236,21 @@ class FileSink(Sink):
         # writing different runs of one leaf never contend.
         views = [_as_block_view(a) for a in arrays]
         offset = int(self._offsets[leaf_id][start_block])
+        # checksum before the write: the crc covers the bytes we INTEND
+        # to land, so a torn pwritev can never record a matching crc
+        crcs = [zlib.crc32(v) for v in views]
         with self._lock:
             if not self._open:
                 raise RuntimeError("FileSink closed or aborted")
             fd = self._files[leaf_id].fileno()
             self._inflight += 1
         try:
+            _fire_fault("sink.write", f"leaf={leaf_id}+{start_block}",
+                        self.faults)
             self._pwritev(fd, views, offset)
+            with self._lock:
+                for i, crc in enumerate(crcs):
+                    self._crcs[(leaf_id, start_block + i)] = crc
         finally:
             with self._cv:
                 self._inflight -= 1
@@ -264,11 +290,32 @@ class FileSink(Sink):
     def close(self):
         self._drain()
         for fp in self._files.values():
+            if self.durable:
+                _fire_fault("sink.fsync", f"data {self.dir}", self.faults)
+                os.fsync(fp.fileno())
             fp.close()
-        os.replace(
-            os.path.join(self.dir, "manifest.json.tmp"),
-            os.path.join(self.dir, "manifest.json"),
-        )
+        # fold the accumulated per-block checksums into the manifest:
+        # each leaf gets a ``crc32`` list parallel to ``carried`` (None
+        # for a carried block the pipeline never wrote — restore then
+        # skips it rather than certifying bytes nobody produced)
+        tmp = os.path.join(self.dir, "manifest.json.tmp")
+        if self._manifest is not None:
+            with self._lock:
+                crcs = dict(self._crcs)
+            for leaf in self._manifest["leaves"]:
+                lid = leaf["leaf_id"]
+                leaf["crc32"] = [crcs.get((lid, b)) for b in leaf["carried"]]
+            with open(tmp, "w") as f:
+                json.dump(self._manifest, f)
+                if self.durable:
+                    _fire_fault("sink.fsync", f"manifest {self.dir}",
+                                self.faults)
+                    f.flush()
+                    os.fsync(f.fileno())
+        _fire_fault("sink.rename", self.dir, self.faults)
+        os.replace(tmp, os.path.join(self.dir, "manifest.json"))
+        if self.durable:
+            _fsync_dir(self.dir)
 
     def abort(self):
         self._drain()
@@ -280,8 +327,18 @@ class FileSink(Sink):
         shutil.rmtree(self.dir, ignore_errors=True)
 
 
+def _fsync_dir(directory: str) -> None:
+    """fsync a directory so a just-renamed entry survives power loss."""
+    fd = os.open(directory, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
 def write_composite_manifest(
-    directory: str, shards: List[Dict], layout: Optional[Dict] = None
+    directory: str, shards: List[Dict], layout: Optional[Dict] = None,
+    durable: bool = False, faults: Optional[FaultInjector] = None,
 ) -> None:
     """Top-level manifest for a sharded snapshot: ``shards`` is a list of
     ``{"dir": <relative shard dir>, "prefix": <leaf-path prefix>}`` entries
@@ -300,7 +357,14 @@ def write_composite_manifest(
     or a skip's alias target), ``"chain_depth"`` (delta hops below this
     entry's dir) and ``"aliased": true`` on skip entries. The manifest's
     top-level ``aliased_dirs`` counts the skip entries so chain growth is
-    visible without walking shard manifests."""
+    visible without walking shard manifests.
+
+    With ``durable=True`` the rename of this manifest is THE commit point
+    of the whole epoch (DESIGN.md §12): the tmp is fsync'd before the
+    rename and the directory after it, and the caller must only invoke
+    this once every shard sink has durably closed. A crash anywhere
+    before the rename leaves no ``manifest.json`` — recovery sees a torn
+    epoch; a crash after it leaves a complete one."""
     os.makedirs(directory, exist_ok=True)
     manifest: Dict = {"composite": True, "shards": shards}
     manifest["aliased_dirs"] = sum(
@@ -311,7 +375,13 @@ def write_composite_manifest(
     tmp = os.path.join(directory, "manifest.json.tmp")
     with open(tmp, "w") as f:
         json.dump(manifest, f)
+        if durable:
+            f.flush()
+            os.fsync(f.fileno())
+    _fire_fault("bgsave.commit", directory, faults)
     os.replace(tmp, os.path.join(directory, "manifest.json"))
+    if durable:
+        _fsync_dir(directory)
 
 
 def read_snapshot_layout(directory: str) -> Optional[Dict]:
@@ -401,12 +471,101 @@ def snapshot_chain_depth(directory: str, max_depth: int = 64) -> int:
             )
 
 
+def _verify_leaf_bytes(directory: str, leaf: Dict, buf) -> None:
+    """Check the manifest's carried-block crc32s against ``buf`` (a flat
+    uint8 view of the whole leaf blob — ndarray or memmap). Legacy
+    manifests without a ``crc32`` list pass vacuously, as does any block
+    whose recorded crc is None (carried but never written). Raises
+    ``ValueError`` naming the shard directory on the first mismatch."""
+    crcs = leaf.get("crc32")
+    if not crcs:
+        return
+    blocks = leaf.get("blocks")
+    carried = leaf.get("carried")
+    if blocks is None or carried is None:
+        return
+    bounds = np.cumsum([0] + [b[2] for b in blocks])
+    for b, crc in zip(carried, crcs):
+        if crc is None:
+            continue
+        lo, hi = int(bounds[b]), int(bounds[b + 1])
+        got = zlib.crc32(buf[lo:hi])
+        if got != crc:
+            raise ValueError(
+                f"checksum mismatch in snapshot shard dir {directory!r}: "
+                f"leaf {leaf['path']!r} block {b} (bytes [{lo},{hi})) "
+                f"crc32 {got:#010x} != recorded {crc:#010x}"
+            )
+
+
+def verify_snapshot_dir(directory: str, max_depth: int = _DEFAULT_MAX_DEPTH,
+                        _chain: tuple = ()) -> int:
+    """Checksum-verify every carried block reachable from ``directory``
+    (composite fan-out plus delta-chain parents) without materializing a
+    restore. Returns the number of blocks verified; raises ``ValueError``
+    (naming the offending shard dir) on a mismatch, a missing/oversized
+    file, or a broken chain. Used by :class:`repro.core.recovery.
+    RecoveryManager`'s deep verification pass."""
+    me = os.path.realpath(directory)
+    if me in _chain:
+        raise ValueError(
+            f"corrupt snapshot {directory!r}: cyclic snapshot chain"
+        )
+    if len(_chain) >= max_depth:
+        raise ValueError(
+            f"snapshot chain under {directory!r} exceeds max_depth={max_depth}"
+        )
+    _chain = _chain + (me,)
+    try:
+        with open(os.path.join(directory, "manifest.json")) as f:
+            manifest = json.load(f)
+    except (FileNotFoundError, NotADirectoryError):
+        raise ValueError(
+            f"snapshot dir {directory!r} has no manifest.json (torn?)"
+        ) from None
+    checked = 0
+    if manifest.get("composite"):
+        for entry in manifest["shards"]:
+            sdir = entry["dir"]
+            if not os.path.isabs(sdir):
+                sdir = os.path.join(directory, sdir)
+            checked += verify_snapshot_dir(sdir, max_depth, _chain)
+        return checked
+    for leaf in manifest["leaves"]:
+        path = os.path.join(directory, leaf["file"])
+        if not os.path.exists(path):
+            raise ValueError(
+                f"corrupt snapshot {directory!r}: leaf {leaf['path']!r} "
+                f"data file {leaf['file']!r} is missing"
+            )
+        dtype = np.dtype(leaf["dtype"])
+        n_elems = int(np.prod(leaf["shape"])) if leaf["shape"] else 1
+        if os.path.getsize(path) != n_elems * dtype.itemsize:
+            raise ValueError(
+                f"corrupt snapshot {directory!r}: leaf {leaf['path']!r} "
+                f"file {leaf['file']!r} holds {os.path.getsize(path)} "
+                f"bytes, manifest needs {n_elems * dtype.itemsize}"
+            )
+        if n_elems and leaf.get("crc32"):
+            mm = np.memmap(path, dtype=np.uint8, mode="r")
+            _verify_leaf_bytes(directory, leaf, mm)
+            checked += sum(1 for c in leaf["crc32"] if c is not None)
+    parent = manifest.get("parent")
+    if parent is not None:
+        pdir = parent if os.path.isabs(parent) else os.path.join(
+            os.path.dirname(os.path.abspath(directory)), parent
+        )
+        checked += verify_snapshot_dir(pdir, max_depth, _chain)
+    return checked
+
+
 def read_file_snapshot(
     directory: str,
     *,
     pool: Optional[RestorePool] = None,
     workers: Optional[int] = None,
     max_depth: int = _DEFAULT_MAX_DEPTH,
+    verify: bool = True,
 ):
     """Restore {path: np.ndarray} from a FileSink directory.
 
@@ -432,10 +591,16 @@ def read_file_snapshot(
     hops, a cyclic parent ref, or a parent whose manifest is missing all
     raise ``ValueError`` instead of recursing or looping on a corrupt
     manifest.
+
+    ``verify`` (default on) re-checks each carried block's manifest crc32
+    against the bytes actually read and raises ``ValueError`` naming the
+    shard dir on a mismatch; pass ``verify=False`` to skip (trusted local
+    round-trips, benchmarks isolating raw restore bandwidth).
     """
     if pool is None:
         pool = RestorePool(workers)
-    return _read_snapshot_dir(directory, pool, depth_left=max_depth)
+    return _read_snapshot_dir(directory, pool, depth_left=max_depth,
+                              verify=verify)
 
 
 def _read_snapshot_dir(
@@ -444,6 +609,7 @@ def _read_snapshot_dir(
     lazy: bool = False,
     depth_left: int = _DEFAULT_MAX_DEPTH,
     chain: tuple = (),
+    verify: bool = True,
 ):
     # ``chain`` carries the realpaths already visited on this resolution
     # path (composite hop + parent hops); revisiting one is a cycle.
@@ -465,7 +631,8 @@ def _read_snapshot_dir(
             if not os.path.isabs(sdir):
                 sdir = os.path.join(directory, sdir)
             return entry.get("prefix", ""), _read_snapshot_dir(
-                sdir, pool, lazy, depth_left=depth_left, chain=chain
+                sdir, pool, lazy, depth_left=depth_left, chain=chain,
+                verify=verify,
             )
 
         out = {}
@@ -503,21 +670,22 @@ def _read_snapshot_dir(
                     )
                 parent_cache["out"] = _read_snapshot_dir(
                     pdir, pool, lazy=True,
-                    depth_left=depth_left - 1, chain=chain,
+                    depth_left=depth_left - 1, chain=chain, verify=verify,
                 )
             return parent_cache["out"]
 
     has_parent = manifest.get("parent") is not None
     leaves = manifest["leaves"]
     restored = pool.map(
-        lambda leaf: _read_leaf(directory, leaf, has_parent, _parent, lazy),
+        lambda leaf: _read_leaf(directory, leaf, has_parent, _parent, lazy,
+                                verify),
         leaves,
     )
     return {leaf["path"]: arr for leaf, arr in zip(leaves, restored)}
 
 
 def _read_leaf(directory: str, leaf: Dict, has_parent: bool, parent_fn,
-               lazy: bool):
+               lazy: bool, verify: bool = True):
     """Restore one leaf; resolve delta holes per contiguous run.
 
     ``lazy`` (parent-chain position) memory-maps the blob so only the
@@ -571,9 +739,18 @@ def _read_leaf(directory: str, leaf: Dict, has_parent: bool, parent_fn,
 
     if lazy and not missing:
         mm = np.memmap(path, dtype=dtype, mode="r")
+        if verify:
+            # carried-block slices of the raw byte map: only the verified
+            # ranges are paged in, holes (none here) stay untouched
+            _verify_leaf_bytes(directory, leaf,
+                               np.memmap(path, dtype=np.uint8, mode="r"))
         return mm.reshape(shape) if shape else mm[0]
 
     arr = np.fromfile(path, dtype=dtype)
+    if verify:
+        # verify on the flat bytes BEFORE delta holes are filled from the
+        # parent — the crc covers what THIS dir wrote, not the merge
+        _verify_leaf_bytes(directory, leaf, arr.view(np.uint8))
     arr = arr.reshape(shape) if shape else arr
     if missing:
         parr = parent_fn()[leaf["path"]]

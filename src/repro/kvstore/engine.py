@@ -69,6 +69,8 @@ class EngineReport:
             "gate_wait_us": float(sum(m.get("gate_wait_us", 0.0) for m in mets)),
             "read_retries": float(sum(m.get("read_retries", 0.0) for m in mets)),
             "shared_wait_us": float(sum(m.get("shared_wait_us", 0.0) for m in mets)),
+            "persist_retries": float(sum(m.get("persist_retries", 0.0) for m in mets)),
+            "persist_aborts": float(sum(m.get("persist_aborts", 0.0) for m in mets)),
             "server_queue_depth": float(
                 (self.server_stats or {}).get("queue_depth_max", 0.0)
             ),

@@ -1,0 +1,131 @@
+"""Deterministic BGSAVE workload for the crash harness.
+
+Run as a child process (``sys.executable tests/crash_child.py <pool>
+<site>``) it builds a seeded sharded engine, writes a deterministic
+pattern per epoch, commits durable BGSAVE epochs into ``<pool>/ep<k>``,
+and arms a process-wide :class:`~repro.core.faults.FaultInjector` to
+``os._exit`` at ``<site>`` — SIGKILL-equivalent: no atexit, no flush, no
+unwind. After every successful commit it prints ``COMMITTED <k>`` so the
+parent knows the exact committed prefix at the instant of death.
+
+Imported by the parent (``tests/test_crash_recovery.py``) the same
+module replays the identical writes against an identical seeded store to
+produce the byte-exact expected row values for every epoch.
+
+Site placement:
+
+* write-plane sites (``sink.write``, ``sink.fsync``, ``sink.rename``,
+  ``persist.run``, ``bgsave.commit``): armed before the LAST epoch's
+  writes+BGSAVE, so epochs ``0..N-2`` are committed and the crash lands
+  mid-epoch ``N-1``;
+* ``compactor.swap``: all epochs commit, then a delta-chain fold dies
+  mid-swap (leaving a ``.compact`` leftover for recovery to repair);
+* ``catalog.gc``: all epochs commit, then a ``drop_epoch`` dies before
+  its ``rmtree`` — the drop is NOT durable, so recovery legitimately
+  resurrects the epoch (the parent expects ALL epochs back).
+"""
+import os
+import sys
+
+import numpy as np
+
+CAPACITY = 512
+BLOCK_ROWS = 64
+ROW_WIDTH = 4
+SHARDS = 2
+SEED = 7
+EPOCHS = 3
+
+# sites where the crash interrupts epoch EPOCHS-1 mid-flight
+WRITE_PLANE_SITES = (
+    "sink.write", "sink.fsync", "sink.rename", "persist.run",
+    "bgsave.commit",
+)
+POST_COMMIT_SITES = ("compactor.swap", "catalog.gc")
+
+
+def build():
+    from repro.core.policy import BgsavePolicy
+    from repro.kvstore import KVEngine, ShardedKVStore
+
+    store = ShardedKVStore(capacity=CAPACITY, block_rows=BLOCK_ROWS,
+                           row_width=ROW_WIDTH, seed=SEED, shards=SHARDS)
+    eng = KVEngine(store, mode="asyncfork", copier_threads=2,
+                   persist_bandwidth=None, copier_duty=0.5,
+                   policy=BgsavePolicy(delta_threshold=2.0, full_every=99))
+    store.warmup(batch=2)
+    return store, eng
+
+
+def epoch_rows(e: int) -> np.ndarray:
+    """Deterministic per-epoch write set spanning both shards."""
+    return np.arange(e % 5, CAPACITY, 3 + e, dtype=np.int64)
+
+
+def epoch_vals(e: int, n: int) -> np.ndarray:
+    base = np.arange(n, dtype=np.float32).reshape(-1, 1)
+    return np.tile(base, (1, ROW_WIDTH)) + float(e + 1) * 1000.0
+
+
+def write_epoch(store, eng, e: int) -> None:
+    rows = epoch_rows(e)
+    kw = {}
+    if eng is not None:
+        kw = dict(before_write=eng._write_hook, gate=eng._gate)
+    store.set(rows, epoch_vals(e, rows.size), **kw)
+
+
+def expected_tables(epochs: int = EPOCHS):
+    """Replay the workload sans snapshots: full expected row table after
+    each epoch's writes (index e == content of committed epoch e)."""
+    store, _ = build()
+    probe = np.arange(CAPACITY, dtype=np.int64)
+    out = []
+    for e in range(epochs):
+        write_epoch(store, None, e)
+        out.append(np.array(store.get(probe), copy=True))
+    return out
+
+
+def run(pool: str, site: str, epochs: int = EPOCHS) -> None:
+    from repro.core import faults
+
+    store, eng = build()
+    coord = eng.coordinator
+    inj = faults.FaultInjector()
+    faults.install(inj)
+
+    for e in range(epochs):
+        if site in WRITE_PLANE_SITES and e == epochs - 1:
+            inj.arm(site, mode="crash")
+        write_epoch(store, eng, e)
+        snap = coord.bgsave_to_dir(os.path.join(pool, f"ep{e}"))
+        if not snap.wait_persisted(120.0):
+            raise SystemExit(f"epoch {e} did not persist")
+        print(f"COMMITTED {e}", flush=True)
+
+    if site == "catalog.gc":
+        inj.arm(site, mode="crash")
+        # the tip epoch's delta dirs are only held by the epoch itself
+        eng.catalog.drop_epoch(eng.catalog.epochs()[-1])
+        raise SystemExit("drop_epoch survived an armed crash site")
+    if site == "compactor.swap":
+        cat = eng.catalog
+        target = None
+        with cat._lock:
+            for path in sorted(cat._dirs):
+                if cat._dirs[path].parent is not None:
+                    target = path
+                    break
+        if target is None:
+            raise SystemExit("no delta-chained dir to compact")
+        inj.arm(site, mode="crash")
+        cat.compact_dir(target)
+        raise SystemExit("compact_dir survived an armed crash site")
+    if site in WRITE_PLANE_SITES:
+        raise SystemExit(f"site {site} never fired")
+    raise SystemExit(f"unknown site {site!r}")
+
+
+if __name__ == "__main__":
+    run(sys.argv[1], sys.argv[2])

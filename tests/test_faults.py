@@ -1,0 +1,356 @@
+"""Fault injection, bounded retry, and composite-epoch abort unwinding
+(ISSUE 8 tentpole + satellites)."""
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    BgsavePolicy,
+    FaultInjector,
+    RetryPolicy,
+    SnapshotError,
+    install_faults,
+)
+from repro.core import faults as faults_mod
+from repro.core.catalog import ChainCompactor
+from repro.core.policy import CompactionPolicy
+from repro.kvstore import KVEngine, ShardedKVStore
+
+_DELTA_POLICY = dict(delta_threshold=2.0, full_every=99)  # force deltas
+
+
+def _engine(capacity=512, block_rows=64, row_width=4, shards=2, seed=0,
+            policy=None, **kw):
+    store = ShardedKVStore(capacity=capacity, block_rows=block_rows,
+                           row_width=row_width, seed=seed, shards=shards)
+    eng = KVEngine(store, mode="asyncfork", copier_threads=2,
+                   persist_bandwidth=None, copier_duty=0.5, policy=policy,
+                   **kw)
+    store.warmup(batch=2)
+    return store, eng
+
+
+def _set(store, eng, rows, val):
+    rows = np.asarray(rows, dtype=np.int64)
+    store.set(rows, np.full((rows.size, store.row_width), val, np.float32),
+              before_write=eng._write_hook, gate=eng._gate)
+
+
+@pytest.fixture(autouse=True)
+def _no_leaked_injector():
+    """Every test leaves the process-wide injector slot empty."""
+    install_faults(None)
+    yield
+    install_faults(None)
+
+
+# --------------------------------------------------------------------- #
+# injector unit behavior                                                #
+# --------------------------------------------------------------------- #
+def test_injector_validates_site_and_mode():
+    inj = FaultInjector()
+    with pytest.raises(ValueError):
+        inj.arm("not.a.site")
+    with pytest.raises(ValueError):
+        inj.arm("sink.write", mode="explode")
+
+
+def test_injector_times_after_and_counters():
+    inj = FaultInjector()
+    inj.arm("sink.write", mode="raise", times=2, after=1)
+    inj.fire("sink.write")  # skipped by after=1
+    with pytest.raises(OSError):
+        inj.fire("sink.write")
+    with pytest.raises(OSError):
+        inj.fire("sink.write")
+    inj.fire("sink.write")  # budget of 2 spent
+    assert inj.hits("sink.write") == 4
+    assert inj.acted("sink.write") == 2
+    assert inj.hits("sink.rename") == 0
+
+
+def test_injector_delay_mode_and_custom_exc():
+    inj = FaultInjector()
+    inj.arm("sink.fsync", mode="delay", delay_s=0.02)
+    t0 = time.perf_counter()
+    inj.fire("sink.fsync")
+    assert time.perf_counter() - t0 >= 0.015
+    inj.arm("sink.rename", exc=RuntimeError)
+    with pytest.raises(RuntimeError, match="sink.rename"):
+        inj.fire("sink.rename")
+
+
+def test_module_fire_prefers_explicit_over_installed():
+    installed = FaultInjector()
+    installed.arm("sink.write")
+    explicit = FaultInjector()  # armed with nothing
+    install_faults(installed)
+    faults_mod.fire("sink.write", faults=explicit)  # explicit wins: no-op
+    assert installed.hits("sink.write") == 0
+    with pytest.raises(OSError):
+        faults_mod.fire("sink.write")  # falls back to the installed one
+    install_faults(None)
+    faults_mod.fire("sink.write")  # nothing anywhere: no-op
+
+
+# --------------------------------------------------------------------- #
+# RetryPolicy                                                           #
+# --------------------------------------------------------------------- #
+def test_retry_policy_backoff_schedule():
+    pol = RetryPolicy(max_retries=3, backoff_s=0.01, backoff_mult=2.0,
+                      max_backoff_s=0.025)
+    assert pol.backoff(0) == 0.01
+    assert pol.backoff(1) == 0.02
+    assert pol.backoff(2) == 0.025  # clamped
+    assert pol.backoff(3) is None  # budget spent
+
+
+def test_transient_write_fault_retried_to_success(tmp_path):
+    """A once-raising persist fault is absorbed by the retry loop: the
+    epoch commits, bytes are exact, and the retry is counted."""
+    inj = FaultInjector()
+    install_faults(inj)
+    store, eng = _engine()
+    probe = np.arange(512, dtype=np.int64)
+    _set(store, eng, probe[::3], 5.0)
+    before = np.array(store.get(probe), copy=True)
+    inj.arm("persist.run", mode="raise", times=1)
+    snap = eng.coordinator.bgsave_to_dir(str(tmp_path / "ep0"))
+    assert snap.wait_persisted(120.0)
+    assert inj.acted("persist.run") == 1
+    assert snap.metrics.summary()["persist_retries"] >= 1.0
+    assert snap.metrics.summary()["persist_aborts"] == 0.0
+    from repro.core import read_file_snapshot
+    assert read_file_snapshot(str(tmp_path / "ep0"))  # crc-verified
+    np.testing.assert_array_equal(store.get(probe), before)
+
+
+def test_exhausted_retry_budget_unwinds_whole_epoch(tmp_path):
+    """More consecutive faults than the retry budget: the job aborts,
+    the WHOLE composite epoch unwinds — sibling shard dirs and the
+    partial epoch dir removed, nothing registered in the catalog — and
+    the abort is counted exactly once per failed part."""
+    inj = FaultInjector()
+    install_faults(inj)
+    store, eng = _engine()
+    _set(store, eng, np.arange(0, 512, 3), 7.0)
+    inj.arm("persist.run", mode="raise", times=50)
+    snap = eng.coordinator.bgsave_to_dir(str(tmp_path / "ep0"))
+    with pytest.raises(SnapshotError):
+        snap.wait_persisted(120.0)
+    assert snap.commit_done.is_set()
+    # the epoch dir (and any sibling shard dirs inside it) is gone
+    assert not os.path.exists(str(tmp_path / "ep0"))
+    with pytest.raises(ValueError):
+        eng.catalog.pin(snap.epoch_id)
+    assert snap.metrics.summary()["persist_aborts"] >= 1.0
+    assert snap.metrics.summary()["persist_retries"] >= 3.0
+    # the engine recovers: the next fault-free epoch commits cleanly
+    inj.disarm()
+    snap2 = eng.coordinator.bgsave_to_dir(str(tmp_path / "ep1"))
+    assert snap2.wait_persisted(120.0)
+    assert os.path.exists(str(tmp_path / "ep1" / "manifest.json"))
+
+
+def test_durable_close_fault_aborts_cleanly(tmp_path):
+    """Faults in the durable close protocol (fsync/rename are NOT inside
+    the retry loop) abort the epoch with a full unwind."""
+    inj = FaultInjector()
+    install_faults(inj)
+    store, eng = _engine()
+    _set(store, eng, np.arange(0, 512, 5), 3.0)
+    inj.arm("sink.rename", mode="raise", times=1)
+    snap = eng.coordinator.bgsave_to_dir(str(tmp_path / "ep0"))
+    with pytest.raises(SnapshotError):
+        snap.wait_persisted(120.0)
+    assert not os.path.exists(str(tmp_path / "ep0"))
+
+
+def test_commit_point_fault_unwinds_epoch(tmp_path):
+    """A fault at the composite-manifest rename (the commit point)
+    unwinds the epoch even though every shard persisted durably."""
+    inj = FaultInjector()
+    install_faults(inj)
+    store, eng = _engine()
+    _set(store, eng, np.arange(0, 512, 4), 2.0)
+    inj.arm("bgsave.commit", mode="raise", times=1)
+    snap = eng.coordinator.bgsave_to_dir(str(tmp_path / "ep0"))
+    with pytest.raises(SnapshotError, match="composite commit failed"):
+        snap.wait_persisted(120.0)
+    assert not os.path.exists(str(tmp_path / "ep0"))
+    # a later epoch starts a FRESH chain (the unwound dir never became
+    # a delta parent)
+    inj.disarm()
+    _set(store, eng, np.arange(1, 512, 4), 2.5)
+    snap2 = eng.coordinator.bgsave_to_dir(str(tmp_path / "ep1"))
+    assert snap2.wait_persisted(120.0)
+
+
+# --------------------------------------------------------------------- #
+# compactor + GC resilience (satellites)                                #
+# --------------------------------------------------------------------- #
+def test_compactor_survives_scan_exceptions(tmp_path):
+    """A fault inside compact_dir no longer kills the compactor thread:
+    the error is counted and later scans still fold chains."""
+    inj = FaultInjector()
+    install_faults(inj)
+    store, eng = _engine(policy=BgsavePolicy(**_DELTA_POLICY))
+    cat = eng.catalog
+    for e in range(3):
+        _set(store, eng, np.arange(0, 512, 2), float(e + 1))
+        snap = eng.coordinator.bgsave_to_dir(str(tmp_path / f"ep{e}"))
+        assert snap.wait_persisted(120.0)
+    comp = ChainCompactor(cat, CompactionPolicy(max_chain=1))
+    inj.arm("compactor.swap", mode="raise", times=1)
+    folded_first = comp.scan_once()
+    assert comp.compactor_errors == 1
+    assert folded_first == [] or len(folded_first) >= 0  # thread alive
+    inj.disarm()
+    folded = comp.scan_once()
+    assert folded  # the chain folds once the fault clears
+    assert comp.compactor_errors == 1
+
+
+def test_gc_fault_counts_and_leaves_orphan(tmp_path):
+    """A fault during epoch-drop GC leaves the dir on disk (an orphan
+    for recovery) and bumps gc_errors instead of raising."""
+    inj = FaultInjector()
+    install_faults(inj)
+    store, eng = _engine()
+    snap = eng.coordinator.bgsave_to_dir(str(tmp_path / "ep0"))
+    assert snap.wait_persisted(120.0)
+    inj.arm("catalog.gc", mode="raise", times=50)
+    removed = eng.catalog.drop_epoch(snap.epoch_id)
+    assert removed == []
+    assert eng.catalog.gc_errors >= 1
+    assert os.path.exists(str(tmp_path / "ep0" / "shard_0"))
+
+
+def test_drop_epoch_tolerates_enoent(tmp_path):
+    """An externally-deleted shard dir must not break drop_epoch."""
+    import shutil
+    store, eng = _engine()
+    snap = eng.coordinator.bgsave_to_dir(str(tmp_path / "ep0"))
+    assert snap.wait_persisted(120.0)
+    shutil.rmtree(str(tmp_path / "ep0" / "shard_1"))
+    eng.catalog.drop_epoch(snap.epoch_id)  # must not raise
+    assert eng.catalog.gc_errors == 0  # ENOENT is tolerated, not an error
+
+
+# --------------------------------------------------------------------- #
+# fault matrix under live writer traffic (satellite)                    #
+# --------------------------------------------------------------------- #
+_MATRIX_SITES = ("sink.write", "sink.fsync", "sink.rename", "persist.run",
+                 "bgsave.commit")
+_RETRYABLE = ("sink.write", "persist.run")  # inside _write_with_retry
+
+
+def _epoch_under_traffic(tmp_path, inj, site, times, tag):
+    """One durable epoch with a concurrent writer thread; returns
+    (snap, error_or_none)."""
+    store, eng = _engine(shards=2)
+    stop = threading.Event()
+
+    def writer():
+        i = 0
+        while not stop.is_set():
+            _set(store, eng, np.arange(i % 7, 512, 11), float(i))
+            i += 1
+
+    th = threading.Thread(target=writer, daemon=True)
+    th.start()
+    try:
+        inj.arm(site, mode="raise", times=times)
+        snap = eng.coordinator.bgsave_to_dir(str(tmp_path / tag))
+        err = None
+        try:
+            ok = snap.wait_persisted(120.0)
+            assert ok
+        except SnapshotError as exc:
+            err = exc
+        return snap, err
+    finally:
+        stop.set()
+        th.join(10.0)
+        inj.disarm()
+
+
+@pytest.mark.parametrize("site", _MATRIX_SITES)
+@pytest.mark.parametrize("times", [1, 50])
+def test_fault_matrix_commit_or_clean_abort(tmp_path, site, times):
+    """Every site x (raise-once, raise-past-budget) under live writes
+    ends in exactly one of two states: a fully-committed epoch (manifest
+    present, crc-verified readable) or a clean abort (no partial epoch
+    dir, epoch not pinnable) — never a torn in-between."""
+    inj = FaultInjector()
+    install_faults(inj)
+    tag = f"ep_{site.replace('.', '_')}_{times}"
+    snap, err = _epoch_under_traffic(tmp_path, inj, site, times, tag)
+    epoch_dir = str(tmp_path / tag)
+    retried_ok = site in _RETRYABLE and times == 1
+    if retried_ok:
+        assert err is None, f"retryable single fault at {site} aborted"
+    if err is None:
+        assert os.path.exists(os.path.join(epoch_dir, "manifest.json"))
+        from repro.core import read_file_snapshot
+        assert read_file_snapshot(epoch_dir)
+    else:
+        assert not os.path.exists(epoch_dir)
+
+
+def test_fault_matrix_abort_is_unpinnable(tmp_path):
+    """Companion to the matrix: an aborted epoch id cannot be pinned."""
+    inj = FaultInjector()
+    install_faults(inj)
+    store, eng = _engine()
+    inj.arm("sink.fsync", mode="raise", times=50)
+    snap = eng.coordinator.bgsave_to_dir(str(tmp_path / "ep0"))
+    with pytest.raises(SnapshotError):
+        snap.wait_persisted(120.0)
+    if snap.epoch_id is not None:
+        with pytest.raises(ValueError):
+            eng.catalog.pin(snap.epoch_id)
+
+
+# --------------------------------------------------------------------- #
+# hypothesis variant (optional dep)                                     #
+# --------------------------------------------------------------------- #
+try:
+    from hypothesis import given, settings, strategies as st
+    _HAVE_HYPOTHESIS = True
+except ImportError:  # optional 'test' extra — the matrix above still runs
+    _HAVE_HYPOTHESIS = False
+
+if _HAVE_HYPOTHESIS:
+
+    @settings(max_examples=10, deadline=None)
+    @given(site=st.sampled_from(_MATRIX_SITES),
+           times=st.integers(min_value=1, max_value=6),
+           after=st.integers(min_value=0, max_value=3))
+    def test_fault_matrix_property(site, times, after, tmp_path_factory):
+        """Property form: any raise-fault schedule (site, budget, skip-N
+        timing) yields commit-or-clean-abort, never a torn epoch dir."""
+        tmp_path = tmp_path_factory.mktemp("prop")
+        inj = FaultInjector()
+        install_faults(inj)
+        try:
+            store, eng = _engine(shards=2)
+            _set(store, eng, np.arange(0, 512, 9), 1.0)
+            inj.arm(site, mode="raise", times=times, after=after)
+            snap = eng.coordinator.bgsave_to_dir(str(tmp_path / "ep"))
+            err = None
+            try:
+                snap.wait_persisted(120.0)
+            except SnapshotError as exc:
+                err = exc
+            epoch_dir = str(tmp_path / "ep")
+            if err is None:
+                assert os.path.exists(
+                    os.path.join(epoch_dir, "manifest.json"))
+            else:
+                assert not os.path.exists(epoch_dir)
+        finally:
+            install_faults(None)
