@@ -9,7 +9,8 @@ growth, interruption counts, out-of-service time, and the DEF > ODF >
 Async-fork latency ordering on snapshot queries.
 
 Usage: ``python -m benchmarks.run [cell ...] [--full] [--json PATH]
-[--copier-duty X] [--readers N] [--max-chain N]``.
+[--copier-duty X] [--readers N] [--max-chain N] [--run-blocks N]
+[--compress {none,zlib}]``.
 Positional names select individual cells (e.g. ``persist_path``); with
 none, the whole suite runs. ``--json`` additionally writes the collected
 rows as a JSON trajectory artifact (CI uploads ``BENCH_3.json`` so future
@@ -18,7 +19,9 @@ duty in the scaling cells (``shard_scaling``, ``gate_contention``) for
 multi-core reruns — the single-core container default decays it
 1/sqrt(shards). ``--readers`` overrides the ``read_concurrency`` cell's
 reader-stream count for multi-core reruns. ``--max-chain`` overrides the
-``snapshot_reads`` cell's ChainCompactor fold threshold.
+``snapshot_reads`` cell's ChainCompactor fold threshold. ``--run-blocks``
+and ``--compress`` pin the ``persist_overlap`` cell's run coalescing
+width and sink encoding.
 """
 from __future__ import annotations
 
@@ -44,6 +47,12 @@ READERS_OVERRIDE = None
 # --max-chain=N: delta-chain fold threshold for the snapshot_reads
 # cell's ChainCompactor sub-phase (default 3, like CompactionPolicy).
 MAX_CHAIN_OVERRIDE = None
+# --run-blocks=N: persist-run coalescing width for the persist_overlap
+# cell's headline arms (default 16; the cell also sweeps 4/64 around it).
+RUN_BLOCKS_OVERRIDE = None
+# --compress={none,zlib}: pin the persist_overlap cell to a single sink
+# encoding instead of running both arms.
+COMPRESS_OVERRIDE = None
 
 _ROWS: list = []
 
@@ -582,6 +591,73 @@ def persist_path():
             shutil.rmtree(tmp, ignore_errors=True)
 
 
+def persist_overlap():
+    """New cell (PR 9): the overlapped persist datapath. One durable
+    2-shard BGSAVE epoch drains through per-shard PACED file sinks (an
+    emulated disk stream: ``write_run`` adds a GIL-free
+    ``sleep(bytes/bandwidth)`` after each real pwritev) with device
+    staging, while a background writer donates row updates through
+    proactive sync. Arms toggle ``PersistPipeline(overlap=...)`` x sink
+    compression; one shared stager worker isolates the two-lane
+    datapath (see ``run_persist_overlap``). The gated ratio is
+    serial-over-overlapped epoch drain wall-clock on the uncompressed
+    arm (bigger = the writer lane hides the D2H drain); the compressed
+    arms ride along ungated — level-1 deflate is writer-lane compute,
+    so its ratio compresses — plus a run_blocks sweep on the
+    overlapped arm."""
+    rb = RUN_BLOCKS_OVERRIDE if RUN_BLOCKS_OVERRIDE is not None else 16
+    if COMPRESS_OVERRIDE is None:
+        comp_arms = [None, "zlib"]
+    else:
+        comp_arms = [None if COMPRESS_OVERRIDE == "none" else COMPRESS_OVERRIDE]
+    base = {
+        "cell": "persist_overlap", "size_mb": 32, "shards": 2,
+        "run_blocks": rb, "bandwidth_mbps": 8.0, "duty": 0.01,
+        "block_kb": 256, "threads": 1, "mode": "asyncfork",
+        "backend": "device", "persist_workers": 1, "repeat": 2,
+    }
+    arms = {}
+    for compress in comp_arms:
+        for overlap in (False, True):
+            arms[(compress, overlap)] = run_cell(
+                {**base, "compress": compress, "overlap": overlap})
+    for compress in comp_arms:
+        s, o = arms[(compress, False)], arms[(compress, True)]
+        tag = compress or "raw"
+        ratio = s["epoch_wall_s"] / max(1e-9, o["epoch_wall_s"])
+        derived = (
+            f"serial_wall_us={s['epoch_wall_s']*1e6:.0f};"
+            f"sink_mb_per_s={o['sink_mb_per_s']:.1f};"
+            f"serial_sink_mb_per_s={s['sink_mb_per_s']:.1f};"
+            f"overlap_frac={o['overlap_frac']:.2f};"
+            f"serial_overlap_frac={s['overlap_frac']:.2f};"
+            f"stage_us={o['stage_s']*1e6:.0f};"
+            f"write_busy_us={o['write_busy_s']*1e6:.0f};"
+            f"write_p99_in_us={o['write_p99_ms']*1e3:.0f};"
+            f"serial_write_p99_in_us={s['write_p99_ms']*1e3:.0f};"
+            f"disk_bytes={o['disk_bytes']};"
+            f"run_blocks={rb};"
+        )
+        if compress is None:
+            derived += f"overlap_vs_serial={ratio:.2f}x"
+        else:
+            # encoder compute deflates this ratio — informational, so no
+            # `=<v>x` suffix (which would opt it into the compare gate)
+            derived += f"zlib_overlap_vs_serial={ratio:.2f}"
+        _row(f"persist_overlap/{tag}", o["epoch_wall_s"] * 1e6, derived)
+    # run-width sweep, overlapped + uncompressed: small runs pay more
+    # kernel launches and ring handoffs per byte, large runs stage the
+    # leaf in fewer, longer exclusive holds
+    for rb2 in (4, 64):
+        r = run_cell({**base, "run_blocks": rb2, "compress": None,
+                      "overlap": True})
+        _row(f"persist_overlap/run_blocks{rb2}", r["epoch_wall_s"] * 1e6,
+             f"sink_mb_per_s={r['sink_mb_per_s']:.1f};"
+             f"overlap_frac={r['overlap_frac']:.2f};"
+             f"stage_us={r['stage_s']*1e6:.0f};"
+             f"write_p99_in_us={r['write_p99_ms']*1e3:.0f}")
+
+
 def faults():
     """New cell (PR 8): what crash safety costs, and what recovery costs.
 
@@ -684,6 +760,7 @@ CELLS = {
     "shard_scaling": shard_scaling,
     "reshard_epoch": reshard_epoch,
     "persist_path": persist_path,
+    "persist_overlap": persist_overlap,
     "gate_contention": gate_contention,
     "read_concurrency": read_concurrency,
     "snapshot_reads": snapshot_reads,
@@ -696,6 +773,7 @@ def main() -> None:
     names = []
     argv = iter(sys.argv[1:])
     global DUTY_OVERRIDE, READERS_OVERRIDE, MAX_CHAIN_OVERRIDE
+    global RUN_BLOCKS_OVERRIDE, COMPRESS_OVERRIDE
     for a in argv:
         if a == "--json":
             json_path = next(argv, None)
@@ -713,6 +791,14 @@ def main() -> None:
             MAX_CHAIN_OVERRIDE = int(next(argv))
         elif a.startswith("--max-chain="):
             MAX_CHAIN_OVERRIDE = int(a.split("=", 1)[1])
+        elif a == "--run-blocks":
+            RUN_BLOCKS_OVERRIDE = int(next(argv))
+        elif a.startswith("--run-blocks="):
+            RUN_BLOCKS_OVERRIDE = int(a.split("=", 1)[1])
+        elif a == "--compress":
+            COMPRESS_OVERRIDE = next(argv)
+        elif a.startswith("--compress="):
+            COMPRESS_OVERRIDE = a.split("=", 1)[1]
         elif not a.startswith("-"):
             names.append(a)
     unknown = [n for n in names if n not in CELLS]

@@ -101,6 +101,7 @@ class TrainSnapshotManager:
         shards: int = 1,
         persist_workers: Optional[int] = None,
         durable: bool = True,
+        compress: Optional[str] = None,
     ):
         """``incremental=True`` turns the checkpoint stream into a delta
         chain: each save diffs against the previous save's retained T0
@@ -118,6 +119,12 @@ class TrainSnapshotManager:
         manifest's atomic rename as the single commit point.
         ``durable=False`` skips the fsyncs for throughput benchmarks.
 
+        ``compress="zlib"`` writes every run as a zlib frame (DESIGN.md
+        §13); checksums still cover the uncompressed bytes, so
+        ``restore_checkpoint(verify=True)`` stays end-to-end. Deltas may
+        compress over an uncompressed anchor and vice versa — each
+        leaf's manifest records its own encoding.
+
         ``directory=None`` resolves via :func:`default_checkpoint_dir`
         (outside the repo tree)."""
         self.directory = directory if directory is not None else default_checkpoint_dir()
@@ -130,6 +137,7 @@ class TrainSnapshotManager:
         self.full_every = max(1, int(full_every))
         self.shards = max(1, int(shards))
         self.durable = bool(durable)
+        self.compress = compress
         self._pipeline = PersistPipeline(
             workers=persist_workers if persist_workers is not None
             else max(1, self.shards)
@@ -241,7 +249,8 @@ class TrainSnapshotManager:
 
         if self.shards == 1:
             provider = PyTreeProvider(state)  # pins T0 refs (CoW data pages)
-            sink = FileSink(path, parent=parent, durable=self.durable)
+            sink = FileSink(path, parent=parent, durable=self.durable,
+                            compress=self.compress)
             snapper = self._make_snapshotter(provider)
             snap = snapper.fork(sink, incremental=bases[0] is not None,
                                 base=bases[0])
@@ -265,7 +274,8 @@ class TrainSnapshotManager:
             )
             result = coord.bgsave_to_dir(path, parent=parent, bases=bases,
                                          prefix="", layout_record=layout_record,
-                                         durable=self.durable)
+                                         durable=self.durable,
+                                         compress=self.compress)
             parts = result.parts
             self._composites.append(result)
 

@@ -24,6 +24,7 @@ from repro.core.persist import PersistJob, PersistPipeline
 from repro.core.policy import (
     BgsavePolicy,
     CompactionPolicy,
+    CopierDutyController,
     RetryPolicy,
     ShardEpochView,
     ShardPolicyState,
@@ -74,6 +75,7 @@ __all__ = [
     "SharedGate",
     "BgsavePolicy",
     "CompactionPolicy",
+    "CopierDutyController",
     "RetryPolicy",
     "FaultInjector",
     "install_faults",

@@ -139,6 +139,36 @@ class AggregateMetrics:
         return max((p.metrics.sink_write_s for p in self._parts), default=0.0)
 
     @property
+    def stage_s(self) -> float:
+        """Summed stager-lane busy time across shards (lane busy times
+        add — they measure work, not wall-clock)."""
+        return sum(p.metrics.stage_s for p in self._parts)
+
+    @property
+    def write_busy_s(self) -> float:
+        """Summed writer-lane busy time across shards."""
+        return sum(p.metrics.write_busy_s for p in self._parts)
+
+    @property
+    def overlap_s(self) -> float:
+        """Summed measured both-lanes-busy seconds across shards."""
+        return sum(p.metrics.overlap_s for p in self._parts)
+
+    @property
+    def overlap_frac(self) -> float:
+        """Barrier-level lane overlap: summed measured both-lanes-busy
+        seconds over the summed per-shard overlap capacity (each shard's
+        smaller lane busy time), clamped to [0, 1] — the same derivation
+        as ``SnapshotMetrics.overlap_frac``, aggregated."""
+        cap = sum(
+            min(p.metrics.stage_s, p.metrics.write_busy_s)
+            for p in self._parts
+        )
+        if cap <= 0.0:
+            return 0.0
+        return max(0.0, min(1.0, self.overlap_s / cap))
+
+    @property
     def copied_blocks_child(self) -> int:
         return sum(p.metrics.copied_blocks_child for p in self._parts)
 
@@ -232,6 +262,10 @@ class AggregateMetrics:
             "copy_window_ms": self.copy_window_s * 1e3,
             "persist_ms": self.persist_s * 1e3,
             "sink_write_ms": self.sink_write_s * 1e3,
+            "stage_ms": self.stage_s * 1e3,
+            "write_busy_ms": self.write_busy_s * 1e3,
+            "overlap_ms": self.overlap_s * 1e3,
+            "overlap_frac": self.overlap_frac,
             "interruptions": float(self.n_interruptions),
             "out_of_service_ms": self.out_of_service_s * 1e3,
             "parent_copied_blocks": float(self.copied_blocks_parent),
@@ -802,6 +836,7 @@ class ShardedSnapshotCoordinator:
         prefix: str = "shard{k}/",
         layout_record: Optional[Dict] = None,
         durable: bool = True,
+        compress: Optional[str] = None,
     ) -> CoordinatedSnapshot:
         """BGSAVE into ``<directory>/shard_<k>/`` FileSinks plus a top-level
         composite manifest (with the layout record and per-shard modes)
@@ -819,6 +854,10 @@ class ShardedSnapshotCoordinator:
         never a half-certified one. ``wait_persisted`` on the returned
         snapshot covers the commit. ``durable=False`` keeps the same
         commit ordering but skips the fsync protocol (bench baseline).
+        ``compress="zlib"`` writes every shard's runs as zlib frames
+        (DESIGN.md §13); delta shards may compress over an uncompressed
+        parent and vice versa — each leaf's manifest records its own
+        encoding, so mixed chains restore transparently.
         A persist failure on ANY shard unwinds the whole epoch: sibling
         sinks aborted, the partial epoch dir removed, nothing registered
         in the catalog."""
@@ -864,10 +903,11 @@ class ShardedSnapshotCoordinator:
                         modes[k] = "full"
                         entry["mode"] = "full"
                     sinks.append(FileSink(os.path.join(directory, f"shard_{k}"),
-                                          parent=parent_k, durable=durable))
+                                          parent=parent_k, durable=durable,
+                                          compress=compress))
                 else:
                     sinks.append(FileSink(os.path.join(directory, f"shard_{k}"),
-                                          durable=durable))
+                                          durable=durable, compress=compress))
                 entries.append(entry)
             try:
                 snap = self.bgsave(sinks=sinks, bases=bases, modes=modes)

@@ -13,8 +13,13 @@ points where the durable-commit protocol claims to tolerate them:
                          :meth:`FileSink.close`
   * ``sink.rename``    — before the shard manifest's tmp→final rename
                          (the per-shard commit point)
-  * ``persist.run``    — at the top of each persist-worker write attempt
-                         (:meth:`PersistPipeline._persist_run`)
+  * ``persist.run``    — at the top of each writer-lane write attempt
+                         (:meth:`PersistPipeline._write_with_retry`)
+  * ``persist.stage``  — at the top of each stager-lane attempt, before
+                         the flag-machine staging + batched D2H drain
+                         (:meth:`PersistPipeline._stage_with_retry`);
+                         staging is idempotent, so the same
+                         :class:`~repro.core.policy.RetryPolicy` covers it
   * ``bgsave.commit``  — inside :func:`write_composite_manifest`, before
                          the composite manifest rename (the epoch's
                          single linearization point)
@@ -53,6 +58,7 @@ SITES = (
     "sink.fsync",
     "sink.rename",
     "persist.run",
+    "persist.stage",
     "bgsave.commit",
     "compactor.swap",
     "catalog.gc",

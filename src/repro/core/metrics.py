@@ -41,11 +41,21 @@ class SnapshotMetrics:
     shared_waits: int = 0             # reads that fell back to shared mode
     persist_retries: int = 0          # sink-write attempts replayed by RetryPolicy
     persist_aborts: int = 0           # epochs abandoned after the retry budget
+    stage_s: float = 0.0              # summed stager-lane busy time (flag
+                                      # machine + batched D2H drain) across runs
+    write_busy_s: float = 0.0         # summed writer-lane busy time (gathered
+                                      # sink writes incl. retries) across runs
+    overlap_s: float = 0.0            # measured seconds BOTH lanes of this
+                                      # epoch were busy at once (lane
+                                      # enter/exit accounting in the pipeline)
     aborted: bool = False
 
     def __post_init__(self):
         self._lock = threading.Lock()
         self.interruptions: List[Tuple[float, float, int]] = []  # (t, dur_s, blocks)
+        self._stage_active = 0
+        self._write_active = 0
+        self._both_since: float | None = None
 
     def record_interruption(self, t: float, dur_s: float, blocks: int) -> None:
         with self._lock:
@@ -78,6 +88,55 @@ class SnapshotMetrics:
         """This epoch's persist failed past the retry budget."""
         with self._lock:
             self.persist_aborts += 1
+
+    def record_stage(self, dur_s: float) -> None:
+        """One run's stager-lane busy time (flag machine + D2H drain)."""
+        with self._lock:
+            self.stage_s += dur_s
+
+    def record_write_busy(self, dur_s: float) -> None:
+        """One run's writer-lane busy time (gathered sink write)."""
+        with self._lock:
+            self.write_busy_s += dur_s
+
+    def lane_enter(self, lane: str, now: float) -> None:
+        """A stager/writer lane of this epoch became busy at ``now``
+        (``time.perf_counter``). When both lanes are live the clock for
+        ``overlap_s`` starts; counts handle N concurrent workers per
+        lane."""
+        with self._lock:
+            if lane == "stage":
+                self._stage_active += 1
+            else:
+                self._write_active += 1
+            if (self._both_since is None and self._stage_active > 0
+                    and self._write_active > 0):
+                self._both_since = now
+
+    def lane_exit(self, lane: str, now: float) -> None:
+        """The matching lane went idle; banks any accumulated both-lanes
+        interval into ``overlap_s``."""
+        with self._lock:
+            if lane == "stage":
+                self._stage_active -= 1
+            else:
+                self._write_active -= 1
+            if (self._both_since is not None
+                    and (self._stage_active == 0 or self._write_active == 0)):
+                self.overlap_s += now - self._both_since
+                self._both_since = None
+
+    @property
+    def overlap_frac(self) -> float:
+        """Achieved lane concurrency: measured both-lanes-busy seconds
+        over the smaller lane's total busy time (the most that could
+        have overlapped), clamped to [0, 1]. 0 means stage and write
+        strictly alternated (the serial pipeline); 1 means the D2H
+        drain was fully hidden behind disk writes (or vice versa)."""
+        cap = min(self.stage_s, self.write_busy_s)
+        if cap <= 0.0:
+            return 0.0
+        return max(0.0, min(1.0, self.overlap_s / cap))
 
     @property
     def n_interruptions(self) -> int:
@@ -121,6 +180,10 @@ class SnapshotMetrics:
             "copy_window_ms": self.copy_window_s * 1e3,
             "persist_ms": self.persist_s * 1e3,
             "sink_write_ms": self.sink_write_s * 1e3,
+            "stage_ms": self.stage_s * 1e3,
+            "write_busy_ms": self.write_busy_s * 1e3,
+            "overlap_ms": self.overlap_s * 1e3,
+            "overlap_frac": self.overlap_frac,
             "interruptions": float(self.n_interruptions),
             "out_of_service_ms": self.out_of_service_s * 1e3,
             "parent_copied_blocks": float(self.copied_blocks_parent),

@@ -18,6 +18,27 @@ normal flag machine, then moves the whole run with ONE gathered sink write
 transfer (``staged_run``) — instead of one syscall and one transfer per
 block. ``run_blocks=1`` degenerates to the seed's per-block behavior.
 
+With ``overlap=True`` (the default) each run crosses TWO lanes instead of
+one thread doing both halves back to back:
+
+  * the **stager lane** — the shared worker pool — takes a run through the
+    flag machine and the batched D2H drain, then hands the staged host
+    arrays to the job's bounded ring (``ring_depth`` runs, default 2: a
+    double buffer);
+  * the **writer lane** — one thread per job — drains the ring and issues
+    the gathered sink write (pwritev + crc) before marking the run
+    ``PERSISTED``.
+
+Because the ring holds at most ``ring_depth`` staged runs, run N+1 stages
+while run N writes, so device (D2H) bandwidth and disk bandwidth are in
+flight at the same time instead of alternating; memory is bounded at
+``ring_depth × run_blocks`` blocks of host copies per job. ``overlap=False``
+keeps the seed's serial per-run behavior (stage then write in one worker),
+which the ``persist_overlap`` bench cell uses as its baseline arm.
+Exactly-once close/abort semantics are unchanged: the run count drains
+through ``PersistJob._run_finished`` no matter which lane finishes a run,
+and the writer lane exits on a sentinel pushed by ``PersistJob._finish``.
+
 A pipeline with ``workers=1`` behaves exactly like the paper's single
 writer (same staging, same pacing against a slow sink); the sharded
 coordinator shares one wider pipeline across all shard epochs so N shards
@@ -86,6 +107,10 @@ class PersistJob:
         self._mu = threading.Lock()
         self._outstanding = 0
         self._submitted_all = False
+        # Two-lane mode: bounded ring of staged runs + the writer thread
+        # draining it. Both stay None in serial (overlap=False) mode.
+        self._ring: Optional["queue.Queue"] = None
+        self._writer: Optional[threading.Thread] = None
 
     # -- accounting (producer increments, workers decrement) ---------------
     def _run_enqueued(self) -> None:
@@ -132,6 +157,12 @@ class PersistJob:
             sink.abort()
         finally:
             snap.persist_done.set()
+            if self._ring is not None:
+                # Retire the writer lane. The ring is empty here (the run
+                # count only drains after the writer consumed every staged
+                # run), so the sentinel never blocks — even when _finish
+                # itself runs in the writer thread.
+                self._ring.put(None)
             if self._on_finish is not None:
                 self._on_finish(self)
 
@@ -143,13 +174,16 @@ class PersistPipeline:
                  idle_timeout: float = 1.0,
                  run_blocks: int = DEFAULT_RUN_BLOCKS,
                  retry: Optional[RetryPolicy] = RetryPolicy(),
-                 faults: Optional[FaultInjector] = None):
+                 faults: Optional[FaultInjector] = None,
+                 overlap: bool = True, ring_depth: int = 2):
         self.workers = max(1, int(workers))
         self.queue_depth = max(1, int(queue_depth))
         self.idle_timeout = float(idle_timeout)
         self.run_blocks = max(1, int(run_blocks))
         self.retry = retry        # None disables persist-write retries
         self.faults = faults
+        self.overlap = bool(overlap)
+        self.ring_depth = max(1, int(ring_depth))
         self._q: "queue.Queue" = queue.Queue(maxsize=self.queue_depth)
         self._mu = threading.Lock()
         self._threads: List[threading.Thread] = []
@@ -178,6 +212,11 @@ class PersistPipeline:
         signalled through ``snap.persist_done`` (and errors via
         ``snap.wait_persisted``), same contract as the old single persister."""
         job = PersistJob(snap, sink, order, on_finish=self._job_finished)
+        if self.overlap:
+            job._ring = queue.Queue(maxsize=self.ring_depth)
+            job._writer = threading.Thread(
+                target=self._write_lane, args=(job,), daemon=True)
+            job._writer.start()
         with self._mu:
             self._active_jobs += 1
         self._ensure_workers()
@@ -258,37 +297,175 @@ class PersistPipeline:
                         return
                 continue
             job, brun = item
-            self._persist_run(job, brun)
+            if job._ring is not None:
+                self._stage_run(job, brun)
+            else:
+                self._persist_run(job, brun)
 
+    # -- serial lane (overlap=False): stage + write in one worker ---------- #
     def _persist_run(self, job: PersistJob, brun: BlockRun) -> None:
         """The old persister's per-block body lifted to a run: take every
         block of the run through the normal staging flag machine (the
         child's shared-table read in CoW mode), then move the whole run
         with one gathered write — blocks stay individually locked during
         staging, only the data movement is batched (DESIGN.md §7)."""
-        snap, sink = job.snap, job.sink
-        table = snap.table
+        snap = job.snap
         try:
-            for ref in brun.refs:
-                if job.failed or snap.aborted:
-                    break
-                st = table.state(ref.key)
-                while st in (BlockState.UNCOPIED, BlockState.COPYING):
-                    if st == BlockState.UNCOPIED and table.try_acquire(ref.key):
-                        snap.stage_block(ref)
-                        table.mark(ref.key, BlockState.COPIED)
-                        snap.metrics.copied_blocks_child += 1
-                        st = BlockState.COPIED
-                        break
-                    st = table.wait_not_copying(ref.key)
-            if not (job.failed or snap.aborted):
-                arrays = snap.staged_run(brun.refs)
+            arrays = self._stage_with_retry(job, brun)
+            if arrays is not None:
                 self._write_with_retry(job, brun, arrays)
-                table.mark_run(brun, BlockState.PERSISTED)
+                snap.table.mark_run(brun, BlockState.PERSISTED)
         except BaseException as exc:
             job.fail(exc)
         finally:
             job._run_finished()
+
+    # -- stager lane (overlap=True): flag machine + D2H, hand to ring ------ #
+    def _stage_run(self, job: PersistJob, brun: BlockRun) -> None:
+        """Stager-lane half of a run: stage through the flag machine, drain
+        the staged bytes to host arrays, and hand them to the job's ring.
+        A stager-side failure finishes the run itself (the writer lane
+        never sees it); otherwise the run's ``_run_finished`` is owed by
+        the writer lane, which is why the ring put is safe — the writer
+        cannot have received its shutdown sentinel while this run still
+        holds a slot in the outstanding count."""
+        snap = job.snap
+        # Writer-lane backpressure without head-of-line blocking: with
+        # several jobs in flight, a full ring on THIS job must not park
+        # the shared stager in a blocking put while another job's writer
+        # lane starves — rotate the run to the queue tail (positioned
+        # writes make intra-job run order irrelevant) and serve whatever
+        # is next. The 1ms pause bounds the spin when every live ring is
+        # full; with a single job the blocking put below is the designed
+        # memory throttle (ring_depth x run_blocks staged blocks).
+        if job._ring.full() and self._active_jobs > 1:
+            self._q.put((job, brun))
+            time.sleep(0.001)
+            return
+        try:
+            arrays = self._stage_with_retry(job, brun)
+        except BaseException as exc:
+            job.fail(exc)
+            job._run_finished()
+            return
+        if arrays is None:      # epoch already failed/aborted: drain as no-op
+            job._run_finished()
+            return
+        job._ring.put((brun, arrays))
+
+    def _write_lane(self, job: PersistJob) -> None:
+        """Per-job writer lane: drain the ring, one gathered sink write per
+        staged run, until ``_finish`` pushes the ``None`` sentinel."""
+        snap = job.snap
+        while True:
+            item = job._ring.get()
+            if item is None:
+                return
+            brun, arrays = item
+            try:
+                if not (job.failed or snap.aborted):
+                    self._write_with_retry(job, brun, arrays)
+                    snap.table.mark_run(brun, BlockState.PERSISTED)
+            except BaseException as exc:
+                job.fail(exc)
+            finally:
+                job._run_finished()
+
+    def _stage_with_retry(self, job: PersistJob, brun: BlockRun):
+        """One run's staging under the :class:`RetryPolicy`: the flag
+        machine is idempotent (already-COPIED blocks are skipped, the
+        staged image is read-only after marking) and ``staged_run`` is a
+        pure read, so a transient ``OSError`` — or the armed
+        ``persist.stage`` fault, which fires BEFORE any trylock is taken —
+        replays the whole attempt after a backoff. Returns the staged host
+        arrays, or ``None`` when the epoch failed/aborted mid-run (the
+        caller drains the run as a no-op). Stage wall time accumulates
+        into ``metrics.stage_s``.
+
+        Blocks the lane wins are staged in contiguous SPANS through
+        ``stage_run`` — one kernel launch / memcpy per span instead of one
+        per block (on device staging a per-block flag loop costs a whole
+        kernel round-trip per block, which made worker-side staging the
+        epoch's long pole). Spans break where a peer holds a block; those
+        are waited out per block as before."""
+        snap = job.snap
+        table = snap.table
+        attempt = 0
+        t0 = time.perf_counter()
+        snap.metrics.lane_enter("stage", t0)
+
+        claimed: List[BlockRef] = []
+
+        def _flush_claimed() -> None:
+            if not claimed:
+                return
+            snap.stage_run(claimed)
+            table.mark_run(
+                BlockRun(brun.leaf_id, claimed[0].block_id, tuple(claimed)),
+                BlockState.COPIED,
+            )
+            snap.metrics.copied_blocks_child += len(claimed)
+            claimed.clear()
+
+        def _release_claimed() -> None:
+            # Abort/retry unwinding: claimed-but-unstaged blocks go back
+            # to UNCOPIED (not COPIED — their content was never moved), so
+            # peers waiting in wait_not_copying can't hang on a span this
+            # attempt abandoned, and a replayed attempt can re-claim them.
+            if not claimed:
+                return
+            table.mark_run(
+                BlockRun(brun.leaf_id, claimed[0].block_id, tuple(claimed)),
+                BlockState.UNCOPIED, count_done=False,
+            )
+            claimed.clear()
+
+        try:
+            while True:
+                try:
+                    _fire_fault("persist.stage",
+                                f"leaf={brun.leaf_id}+{brun.start_block}",
+                                self.faults)
+                    for ref in brun.refs:
+                        if job.failed or snap.aborted:
+                            return None
+                        st = table.state(ref.key)
+                        if st == BlockState.UNCOPIED and \
+                                table.try_acquire(ref.key):
+                            # consecutive wins accumulate; the span stays
+                            # contiguous because it flushes at every block
+                            # we did NOT claim
+                            claimed.append(ref)
+                            continue
+                        _flush_claimed()
+                        while st in (BlockState.UNCOPIED, BlockState.COPYING):
+                            if st == BlockState.UNCOPIED and \
+                                    table.try_acquire(ref.key):
+                                snap.stage_block(ref)
+                                table.mark(ref.key, BlockState.COPIED)
+                                snap.metrics.copied_blocks_child += 1
+                                st = BlockState.COPIED
+                                break
+                            st = table.wait_not_copying(ref.key)
+                    _flush_claimed()
+                    if job.failed or snap.aborted:
+                        return None
+                    return snap.staged_run(brun.refs)
+                except OSError:
+                    _release_claimed()
+                    delay = None if self.retry is None else \
+                        self.retry.backoff(attempt)
+                    if delay is None or job.failed or snap.aborted:
+                        raise
+                    attempt += 1
+                    snap.metrics.record_persist_retry()
+                    if delay:
+                        time.sleep(delay)
+        finally:
+            _release_claimed()
+            now = time.perf_counter()
+            snap.metrics.lane_exit("stage", now)
+            snap.metrics.record_stage(now - t0)
 
     def _write_with_retry(self, job: PersistJob, brun: BlockRun,
                           arrays) -> None:
@@ -296,28 +473,43 @@ class PersistPipeline:
         transient ``OSError`` replays the whole run (positioned writes
         are idempotent — same offsets, same bytes) after a backoff, up to
         the policy's budget; anything else, or a spent budget, escalates
-        to the existing epoch abort in ``_persist_run``'s handler."""
+        to the existing epoch abort in the calling lane's handler.
+        Writer-lane busy time accumulates into ``metrics.write_busy_s``."""
         snap, sink = job.snap, job.sink
         attempt = 0
-        while True:
-            try:
-                _fire_fault("persist.run",
-                            f"leaf={brun.leaf_id}+{brun.start_block}",
-                            self.faults)
-                if type(sink).write_run is Sink.write_run:
-                    # write_block-only sink: per-block writes with the
-                    # REAL refs (row geometry intact)
-                    for ref, arr in zip(brun.refs, arrays):
-                        sink.write_block(ref, arr)
-                else:
-                    sink.write_run(brun.leaf_id, brun.start_block, arrays)
-                return
-            except OSError:
-                delay = None if self.retry is None else \
-                    self.retry.backoff(attempt)
-                if delay is None or job.failed or snap.aborted:
-                    raise
-                attempt += 1
-                snap.metrics.record_persist_retry()
-                if delay:
-                    time.sleep(delay)
+        t0 = time.perf_counter()
+        snap.metrics.lane_enter("write", t0)
+        try:
+            while True:
+                try:
+                    _fire_fault("persist.run",
+                                f"leaf={brun.leaf_id}+{brun.start_block}",
+                                self.faults)
+                    # Bound-method identity, not class-attribute identity:
+                    # a wrapper sink that delegates write_run via
+                    # __getattr__/composition must keep run-capable
+                    # detection, while a genuine write_block-only subclass
+                    # (whose write_run IS the base stub) still demotes to
+                    # per-block writes below.
+                    if getattr(sink.write_run, "__func__", None) \
+                            is Sink.write_run:
+                        # write_block-only sink: per-block writes with the
+                        # REAL refs (row geometry intact)
+                        for ref, arr in zip(brun.refs, arrays):
+                            sink.write_block(ref, arr)
+                    else:
+                        sink.write_run(brun.leaf_id, brun.start_block, arrays)
+                    return
+                except OSError:
+                    delay = None if self.retry is None else \
+                        self.retry.backoff(attempt)
+                    if delay is None or job.failed or snap.aborted:
+                        raise
+                    attempt += 1
+                    snap.metrics.record_persist_retry()
+                    if delay:
+                        time.sleep(delay)
+        finally:
+            now = time.perf_counter()
+            snap.metrics.lane_exit("write", now)
+            snap.metrics.record_write_busy(now - t0)

@@ -218,6 +218,84 @@ class CompactionPolicy:
         return chain_depth > self.max_chain
 
 
+class CopierDutyController:
+    """Feedback controller for the copier duty cycle (DESIGN.md §13).
+
+    The duty cycle is the paper's central dial: copiers that run flat out
+    shorten the copy window but steal memory bandwidth and gate time from
+    foreground writers (the latency spikes §6.2 measures); copiers that
+    sleep too much stretch the window and every writer pays CoW faults
+    for longer. The seed picked a static ``0.3 / threads / sqrt(shards)``
+    guess at construction and never looked back. This controller replaces
+    the guess with a per-epoch multiplicative-increase /
+    multiplicative-decrease loop over the signals each epoch already
+    meters:
+
+      * ``gate_wait_us`` over ``gate_wait_budget_us`` — foreground writers
+        queued on the write gates while the epoch ran: the copiers (and
+        the stager lane they feed) are crowding the hot path → back off.
+      * ``copy_window_s`` exceeding ``sink_write_s`` — the flag machine,
+        not the disk, is the long pole: the sink sits idle waiting for
+        blocks to reach COPIED → push duty up so staging catches up.
+      * ``dirty_frac`` under ``idle_dirty_frac`` with writers unbothered —
+        a mostly-clean epoch needs little proactive copying → drift down
+        and give the bandwidth back.
+
+    One multiplicative ``step`` per epoch, clamped to
+    ``[min_duty, max_duty]``, so a noisy epoch moves the dial one notch,
+    not to the rail. ``reseed`` re-anchors after a reshard (the static
+    formula's shard count changed under us); ``adjustments`` and
+    ``last_reason`` make the loop observable in :class:`EngineReport`.
+    """
+
+    def __init__(self, duty: float, min_duty: float = 0.05,
+                 max_duty: float = 1.0, step: float = 1.25,
+                 gate_wait_budget_us: float = 500.0,
+                 idle_dirty_frac: float = 0.1):
+        self.min_duty = float(min_duty)
+        self.max_duty = float(max_duty)
+        self.step = float(step)
+        self.gate_wait_budget_us = float(gate_wait_budget_us)
+        self.idle_dirty_frac = float(idle_dirty_frac)
+        self.duty = self._clamp(float(duty))
+        self.adjustments = 0
+        self.last_reason = "seed"
+
+    def _clamp(self, duty: float) -> float:
+        return max(self.min_duty, min(self.max_duty, duty))
+
+    def reseed(self, duty: float) -> float:
+        """Re-anchor after a reshard; keeps the adjustment history."""
+        self.duty = self._clamp(float(duty))
+        self.last_reason = "reseed"
+        return self.duty
+
+    def update(self, *, gate_wait_us: float = 0.0, stage_s: float = 0.0,
+               sink_write_s: float = 0.0, copy_window_s: float = 0.0,
+               dirty_frac: float = 0.0) -> float:
+        """Fold one persisted epoch's signals in; returns the new duty."""
+        prev = self.duty
+        if gate_wait_us > self.gate_wait_budget_us:
+            # Writers queued on the gates: copiers are the interference.
+            self.duty = self._clamp(self.duty / self.step)
+            self.last_reason = "gate_wait"
+        elif copy_window_s > sink_write_s or stage_s > sink_write_s:
+            # Staging (copy window or stager lane) is the long pole: the
+            # sink starves waiting for COPIED blocks.
+            self.duty = self._clamp(self.duty * self.step)
+            self.last_reason = "copy_window"
+        elif dirty_frac == dirty_frac and dirty_frac < self.idle_dirty_frac:
+            # Mostly-clean epoch (NaN-safe check), writers unbothered:
+            # give the bandwidth back.
+            self.duty = self._clamp(self.duty / self.step)
+            self.last_reason = "idle"
+        else:
+            self.last_reason = "hold"
+        if self.duty != prev:
+            self.adjustments += 1
+        return self.duty
+
+
 @dataclasses.dataclass(frozen=True)
 class RetryPolicy:
     """Bounded retry-with-backoff for transient persist-sink ``OSError``s.

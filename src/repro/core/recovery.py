@@ -38,7 +38,7 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core.layout import ShardLayout
-from repro.core.sinks import _verify_leaf_bytes
+from repro.core.sinks import _decompressed_leaf_bytes, _verify_leaf_bytes
 
 
 @dataclasses.dataclass
@@ -214,6 +214,27 @@ class RecoveryManager:
             if not os.path.exists(path):
                 return (f"shard dir {sdir!r}: leaf {leaf['path']!r} data "
                         f"file {leaf['file']!r} is missing")
+            if leaf.get("compress"):
+                # compressed leaves hold variable-length frames: bound-
+                # check each frame against the file, then deep-verify on
+                # the inflated image (crc over uncompressed bytes, §13)
+                size = os.path.getsize(path)
+                for fr in leaf.get("frames", []):
+                    if fr[2] + fr[3] > size:
+                        return (f"shard dir {sdir!r}: leaf {leaf['path']!r}"
+                                f" frame at offset {fr[2]} (+{fr[3]} bytes)"
+                                f" overruns the {size}-byte data file")
+                if self.deep_verify and n_elems and leaf.get("crc32"):
+                    try:
+                        _verify_leaf_bytes(
+                            sdir, leaf, _decompressed_leaf_bytes(sdir, leaf)
+                        )
+                    except ValueError as exc:
+                        return str(exc)
+                    report.blocks_verified += sum(
+                        1 for c in leaf["crc32"] if c is not None
+                    )
+                continue
             if os.path.getsize(path) != n_elems * dtype.itemsize:
                 return (f"shard dir {sdir!r}: leaf {leaf['path']!r} file "
                         f"holds {os.path.getsize(path)} bytes, manifest "

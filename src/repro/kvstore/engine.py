@@ -11,6 +11,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import threading
 import time
 from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
@@ -18,7 +19,7 @@ import numpy as np
 
 from repro.core.catalog import EpochRef, SnapshotCatalog
 from repro.core.coordinator import CoordinatedSnapshot, ShardedSnapshotCoordinator
-from repro.core.policy import BgsavePolicy
+from repro.core.policy import BgsavePolicy, CopierDutyController
 from repro.core.sinks import NullSink, Sink
 from repro.core.snapshot import SnapshotHandle, make_snapshotter
 from repro.kvstore.store import CowKVStore, KVStore, ShardedKVStore
@@ -38,6 +39,7 @@ class EngineReport:
     duration_s: float
     n_shards: int = 1
     server_stats: Optional[Dict[str, float]] = None  # RequestServer.stats()
+    duty_stats: Optional[Dict[str, float]] = None    # CopierDutyController state
 
     @staticmethod
     def _pct(x: np.ndarray, q: float) -> float:
@@ -76,6 +78,11 @@ class EngineReport:
             ),
             "fork_ms": float(np.mean([m.get("fork_ms", 0.0) for m in mets])) if mets else float("nan"),
             "copy_window_ms": float(np.mean([m.get("copy_window_ms", 0.0) for m in mets])) if mets else float("nan"),
+            "stage_ms": float(sum(m.get("stage_ms", 0.0) for m in mets)),
+            "write_busy_ms": float(sum(m.get("write_busy_ms", 0.0) for m in mets)),
+            "overlap_frac": float(np.mean([m.get("overlap_frac", 0.0) for m in mets])) if mets else float("nan"),
+            "copier_duty": float((self.duty_stats or {}).get("copier_duty", float("nan"))),
+            "duty_adjustments": float((self.duty_stats or {}).get("duty_adjustments", 0.0)),
             "skipped_shards": float(sum(m.get("skipped_shards", 0.0) for m in mets)),
             "chain_depth_max": float(max(
                 (m.get("chain_depth_max", 0.0) for m in mets), default=0.0
@@ -186,6 +193,14 @@ class KVEngine:
             )
             self._gate_wait_hook = None
             self._read_event_hook = None
+        # Feedback duty loop (DESIGN.md §13): when the duty was auto-derived
+        # (not pinned by the caller) and there is a coordinator to steer,
+        # each persisted epoch's signals nudge the duty for the next one.
+        self._duty_mu = threading.Lock()
+        self.duty_controller: Optional[CopierDutyController] = (
+            CopierDutyController(copier_duty)
+            if self._auto_duty and self.coordinator is not None else None
+        )
 
     @property
     def n_shards(self) -> int:
@@ -309,11 +324,46 @@ class KVEngine:
         copier budget for the NEW shard count — snapshotters created by
         the layout swap would otherwise inherit the construction-time
         duty and overshoot the aggregate core-steal budget. A caller who
-        pinned ``copier_duty`` explicitly keeps their value."""
+        pinned ``copier_duty`` explicitly keeps their value. With the
+        feedback controller active this RESEEDS it (the shard count its
+        old operating point was learned under no longer exists)."""
         if self._auto_duty:
-            self.coordinator.set_copier_duty(
-                0.3 / self._copier_threads / math.sqrt(max(1, self.n_shards))
-            )
+            duty = 0.3 / self._copier_threads / math.sqrt(max(1, self.n_shards))
+            if self.duty_controller is not None:
+                with self._duty_mu:
+                    duty = self.duty_controller.reseed(duty)
+            self.coordinator.set_copier_duty(duty)
+
+    def _feed_duty_controller(self, snap) -> None:
+        """Observe one epoch for the feedback loop: a small daemon waits
+        for the epoch to persist, folds its metered signals into the
+        controller, and pushes the adjusted duty onto the live
+        snapshotters for the NEXT epoch. Runs off the serving thread —
+        the whole point is never to stall queries on the persist tail."""
+        ctl = self.duty_controller
+        if ctl is None:
+            return
+
+        def _observe():
+            try:
+                snap.wait_persisted(120)
+            except Exception:
+                return  # aborted epoch: no trustworthy signals
+            s = snap.metrics.summary()
+            with self._duty_mu:
+                prev = ctl.duty
+                new = ctl.update(
+                    gate_wait_us=s.get("gate_wait_us", 0.0),
+                    stage_s=s.get("stage_ms", 0.0) / 1e3,
+                    sink_write_s=s.get("sink_write_ms", 0.0) / 1e3,
+                    copy_window_s=s.get("copy_window_ms", 0.0) / 1e3,
+                    dirty_frac=s.get("dirty_frac_mean",
+                                     s.get("dirty_frac", float("nan"))),
+                )
+            if new != prev:
+                self.coordinator.set_copier_duty(new)
+
+        threading.Thread(target=_observe, daemon=True).start()
 
     def load(self, directory: str) -> None:
         """Restore a snapshot into the store's current layout, safely.
@@ -355,6 +405,7 @@ class KVEngine:
                 sink = NullSink(bandwidth=self.persist_bandwidth)
             snap = self.snapshotter.fork(sink, incremental=self.incremental)
         self._snaps.append(snap)
+        self._feed_duty_controller(snap)
         return snap
 
     def _bgsave_from_factory(self, sink_factory):
@@ -463,4 +514,11 @@ class KVEngine:
             throughput_buckets=buckets,
             duration_s=run_end,
             n_shards=self.n_shards,
+            duty_stats=(
+                {
+                    "copier_duty": self.duty_controller.duty,
+                    "duty_adjustments": float(self.duty_controller.adjustments),
+                }
+                if self.duty_controller is not None else None
+            ),
         )

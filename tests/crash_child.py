@@ -15,9 +15,9 @@ produce the byte-exact expected row values for every epoch.
 Site placement:
 
 * write-plane sites (``sink.write``, ``sink.fsync``, ``sink.rename``,
-  ``persist.run``, ``bgsave.commit``): armed before the LAST epoch's
-  writes+BGSAVE, so epochs ``0..N-2`` are committed and the crash lands
-  mid-epoch ``N-1``;
+  ``persist.run``, ``persist.stage``, ``bgsave.commit``): armed before
+  the LAST epoch's writes+BGSAVE, so epochs ``0..N-2`` are committed and
+  the crash lands mid-epoch ``N-1``;
 * ``compactor.swap``: all epochs commit, then a delta-chain fold dies
   mid-swap (leaving a ``.compact`` leftover for recovery to repair);
 * ``catalog.gc``: all epochs commit, then a ``drop_epoch`` dies before
@@ -39,7 +39,7 @@ EPOCHS = 3
 # sites where the crash interrupts epoch EPOCHS-1 mid-flight
 WRITE_PLANE_SITES = (
     "sink.write", "sink.fsync", "sink.rename", "persist.run",
-    "bgsave.commit",
+    "persist.stage", "bgsave.commit",
 )
 POST_COMMIT_SITES = ("compactor.swap", "catalog.gc")
 

@@ -87,7 +87,10 @@ def test_abort_mid_persist_with_workers_in_flight_removes_dir(tmp_path):
     """A copy failure while several persist workers are in flight aborts
     the epoch, removes the sink directory, and wait_all raises."""
     state = {"kv": jnp.ones((256, 64), jnp.float32)}
-    prov = FailingProvider(state, fail_on=lambda ref: ref.block_id == 9)
+    # row-range predicate (block 9 = rows 72..80 at 8 rows/block): span
+    # staging reads whole runs via one synthetic ref, so block_id
+    # predicates would never fire
+    prov = FailingProvider(state, fail_on=lambda ref: ref.start <= 72 < ref.stop)
     coord = ShardedSnapshotCoordinator(
         [prov], mode="asyncfork", block_bytes=2048,
         copier_threads=1, persist_workers=4,

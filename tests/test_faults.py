@@ -244,8 +244,9 @@ def test_drop_epoch_tolerates_enoent(tmp_path):
 # fault matrix under live writer traffic (satellite)                    #
 # --------------------------------------------------------------------- #
 _MATRIX_SITES = ("sink.write", "sink.fsync", "sink.rename", "persist.run",
-                 "bgsave.commit")
-_RETRYABLE = ("sink.write", "persist.run")  # inside _write_with_retry
+                 "persist.stage", "bgsave.commit")
+# inside _write_with_retry / _stage_with_retry
+_RETRYABLE = ("sink.write", "persist.run", "persist.stage")
 
 
 def _epoch_under_traffic(tmp_path, inj, site, times, tag):

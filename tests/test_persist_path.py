@@ -228,7 +228,11 @@ def test_abort_mid_run_exactly_once_no_tmp_leak(tmp_path):
     one ``sink.abort()``, zero ``close()``, no ``manifest.json.tmp`` (or
     any other file) left behind."""
     state = {"kv": jnp.ones((256, 16), jnp.float32)}
-    prov = FailingProvider(state, fail_on=lambda ref: ref.block_id == 10)
+    # key the failure on the ROW RANGE of block 10 (16 rows/block at
+    # block_bytes=1024 on a 64-byte row): span-batched staging reads a
+    # whole claimed run through one synthetic BlockRef, so identity-based
+    # block_id predicates would never fire
+    prov = FailingProvider(state, fail_on=lambda ref: ref.start <= 160 < ref.stop)
     snapper = AsyncForkSnapshotter(prov, block_bytes=1024, copier_threads=1)
     snapper.persist_pipeline = PersistPipeline(workers=4, run_blocks=8)
     sink = CountingFileSink(str(tmp_path / "abort"))
@@ -484,3 +488,164 @@ def test_sink_write_s_excludes_copy_window():
     # the IO interval is a sub-span of the full fork->durable window
     assert m.sink_write_s <= m.persist_s + 1e-9
     assert "sink_write_ms" in m.summary()
+
+
+# --------------------------------------------------------------------- #
+# two-lane overlap + compressed runs (DESIGN.md §13)                    #
+# --------------------------------------------------------------------- #
+@pytest.mark.timeout(120)
+@pytest.mark.parametrize("compress", [None, "zlib"])
+def test_two_lane_overlap_byte_identical_to_serial(tmp_path, compress):
+    """Property test for the overlapped datapath: with the SAME fork-time
+    image and the SAME donated-write schedule racing the workers, the
+    two-lane pipeline (stager + per-job writer lane) persists exactly
+    what the serial lane does. Uncompressed dirs are compared at the raw
+    leaf-file level (positioned writes make run partitioning invisible);
+    compressed dirs at the restored-array level (frame boundaries track
+    the nondeterministic run coalescing, the inflated bytes must not)."""
+    restored = {}
+    for overlap in (False, True):
+        prov = PyTreeProvider(
+            {"kv": jnp.arange(128 * 16, dtype=jnp.float32).reshape(128, 16)}
+        )
+        t0 = np.asarray(prov.leaf(0)).copy()
+        snapper = AsyncForkSnapshotter(prov, block_bytes=512, copier_threads=2)
+        snapper.persist_pipeline = PersistPipeline(
+            workers=2, run_blocks=4, overlap=overlap
+        )
+        d = str(tmp_path / f"ov_{overlap}_{compress}")
+        snap = snapper.fork(FileSink(d, compress=compress))
+        for i in range(8):
+            snapper.before_write(0, [i * 4])
+            old = prov.leaf(0)
+            prov.update_leaf(0, old.at[i * 4].set(-1.0), delete_old=True)
+        assert snap.wait_persisted(60)
+        got = read_file_snapshot(d, verify=True)
+        np.testing.assert_array_equal(got["kv"], t0)
+        restored[overlap] = (d, got, snap.metrics)
+    np.testing.assert_array_equal(restored[False][1]["kv"],
+                                  restored[True][1]["kv"])
+    if compress is None:
+        assert _leaf_bytes(restored[False][0]) == _leaf_bytes(restored[True][0])
+    # both arms account lane busy time (serial mode still splits each
+    # run into a stage span + a write span inside one worker); the
+    # overlap clock only ever measures both-lanes-busy seconds, so the
+    # frac is a valid [0, 1] concurrency ratio in either mode
+    for overlap in (False, True):
+        m = restored[overlap][2]
+        assert m.stage_s > 0.0 and m.write_busy_s > 0.0
+        assert 0.0 <= m.overlap_frac <= 1.0
+        assert m.overlap_s <= min(m.stage_s, m.write_busy_s) + 1e-9
+        assert "overlap_frac" in m.summary()
+
+
+@pytest.mark.timeout(120)
+def test_abort_mid_run_serial_lane_exactly_once(tmp_path):
+    """The exactly-once abort contract holds on the overlap=False serial
+    lane too: one ``sink.abort()``, zero ``close()``, nothing on disk."""
+    state = {"kv": jnp.ones((256, 16), jnp.float32)}
+    prov = FailingProvider(state, fail_on=lambda ref: ref.start <= 160 < ref.stop)
+    snapper = AsyncForkSnapshotter(prov, block_bytes=1024, copier_threads=1)
+    snapper.persist_pipeline = PersistPipeline(
+        workers=4, run_blocks=8, overlap=False
+    )
+    sink = CountingFileSink(str(tmp_path / "abort_serial"))
+    snap = snapper.fork(sink)
+    snap.persist_done.wait(30)
+    with pytest.raises(SnapshotError):
+        snap.wait_persisted(30)
+    assert snap.aborted
+    deadline = time.monotonic() + 10.0
+    while sink.abort_calls == 0 and time.monotonic() < deadline:
+        time.sleep(0.01)
+    assert sink.abort_calls == 1
+    assert sink.close_calls == 0
+    leftovers = [
+        os.path.join(root, f)
+        for root, _, files in os.walk(tmp_path)
+        for f in files
+    ]
+    assert leftovers == []
+
+
+@pytest.mark.timeout(120)
+@pytest.mark.parametrize("anchor,delta", [(None, "zlib"), ("zlib", None)])
+def test_mixed_compression_delta_chain_restores(tmp_path, anchor, delta):
+    """A compressed delta over an uncompressed full parent (and the
+    reverse) restores byte-exact through the chain walk, and the catalog
+    deep-verify recovers both epochs without quarantining either — each
+    leaf's manifest records its OWN encoding."""
+    from repro.core import SnapshotCatalog
+
+    pool = tmp_path / "pool"
+    pool.mkdir()
+    provs = [
+        PyTreeProvider({
+            "kv": jnp.arange(64 * 8, dtype=jnp.float32).reshape(64, 8)
+            + 100.0 * k
+        })
+        for k in range(2)
+    ]
+    coord = ShardedSnapshotCoordinator(
+        provs, mode="asyncfork", block_bytes=512, copier_threads=1,
+        retain_images=True,
+    )
+    coord.bgsave_to_dir(
+        str(pool / "ep0"), compress=anchor
+    ).wait_persisted(60)
+    for k in range(2):
+        coord.before_write(k, 0, [5])
+        old = provs[k].leaf(0)
+        provs[k].update_leaf(0, old.at[5].set(-3.0), delete_old=True)
+    coord.bgsave_to_dir(
+        str(pool / "ep1"), parent="ep0", incremental=True, compress=delta
+    ).wait_persisted(60)
+    coord.wait_all(60)
+
+    flat = read_file_snapshot(str(pool / "ep1"), verify=True)
+    for k in range(2):
+        expect = np.asarray(provs[k].leaf(0))
+        np.testing.assert_array_equal(flat[f"shard{k}/kv"], expect)
+
+    cat = SnapshotCatalog.from_dir(str(pool), deep_verify=True)
+    recovered = sorted(
+        os.path.basename(d) for d in cat.last_recovery.recovered_dirs
+    )
+    assert recovered == ["ep0", "ep1"]
+    assert not os.path.isdir(str(pool / "_quarantine"))
+
+
+@pytest.mark.timeout(120)
+def test_checkpoint_compress_restore_verify_round_trip(tmp_path):
+    """``TrainSnapshotManager(compress="zlib")`` end to end: the save
+    lands zlib frames (manifest records the codec) and
+    ``restore_checkpoint(verify=True)`` inflates + crc-checks them back
+    to the exact fork-time trees."""
+    import json
+
+    from repro.checkpoint import TrainSnapshotManager, restore_checkpoint
+    from repro.optim.adamw import AdamWState
+
+    params = {"w": jnp.arange(64 * 8, dtype=jnp.float32).reshape(64, 8)}
+    opt = AdamWState(
+        step=jnp.zeros((), jnp.int32) + 3,
+        m={"w": jnp.ones((64, 8), jnp.float32)},
+        v={"w": jnp.full((64, 8), 2.0, jnp.float32)},
+    )
+    mgr = TrainSnapshotManager(
+        str(tmp_path), mode="asyncfork", copier_threads=2, block_bytes=1024,
+        compress="zlib",
+    )
+    mgr.save(3, params, opt)
+    mgr.wait_all(120)
+    d = str(tmp_path / "step_00000003")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    assert any(
+        leaf.get("compress") == "zlib" for leaf in manifest["leaves"]
+    )
+    rp, ro = restore_checkpoint(d, verify=True)
+    np.testing.assert_array_equal(rp["w"], np.asarray(params["w"]))
+    np.testing.assert_array_equal(ro.m["w"], np.asarray(opt.m["w"]))
+    np.testing.assert_array_equal(ro.v["w"], np.asarray(opt.v["w"]))
+    assert int(np.asarray(ro.step)) == 3
