@@ -39,6 +39,7 @@ from __future__ import annotations
 
 import os
 import tempfile
+import threading
 import time
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
@@ -102,6 +103,7 @@ class TrainSnapshotManager:
         persist_workers: Optional[int] = None,
         durable: bool = True,
         compress: Optional[str] = None,
+        replicate_to: Optional[str] = None,
     ):
         """``incremental=True`` turns the checkpoint stream into a delta
         chain: each save diffs against the previous save's retained T0
@@ -124,6 +126,16 @@ class TrainSnapshotManager:
         ``restore_checkpoint(verify=True)`` stays end-to-end. Deltas may
         compress over an uncompressed anchor and vice versa — each
         leaf's manifest records its own encoding.
+
+        ``replicate_to`` names a standby pool directory: each save is
+        shipped there by an :class:`~repro.core.replicate.EpochReplicator`
+        on a background thread as soon as its commit point fires
+        (carried-block diff on the wire, deep-verified arrival, replica-
+        side rename commit — DESIGN.md §14). Ship threads chain, so the
+        replica commits saves in save order and delta parents always
+        precede their children; ``wait_all`` covers them. Ship failures
+        are counted on ``self.replicator.metrics``, never raised into
+        the training loop.
 
         ``directory=None`` resolves via :func:`default_checkpoint_dir`
         (outside the repo tree)."""
@@ -155,6 +167,11 @@ class TrainSnapshotManager:
         self._chain_len = 0
         self._layout_epoch = 0
         self.stall_log: List[Tuple[str, float]] = []  # (what, seconds)
+        self.replicator = None
+        self._ship_threads: List[threading.Thread] = []
+        if replicate_to is not None:
+            from repro.core.replicate import EpochReplicator
+            self.replicator = EpochReplicator(replicate_to)
 
     def reshard(self, shards: int) -> None:
         """Change the shard count for subsequent saves. Resets the delta
@@ -284,8 +301,33 @@ class TrainSnapshotManager:
         if self.incremental:
             self._chain_base = (parts, dirname, shard_paths)
             self._chain_len += 1
+        if self.replicator is not None:
+            self._spawn_ship(result, path)
         self.stall_log.append(("save", time.perf_counter() - t0))
         return result
+
+    def _spawn_ship(self, result, path: str) -> None:
+        """Ship this save to the standby pool once its commit point
+        fires. Threads chain (each joins its predecessor) so the replica
+        commits in save order — a delta's parent and a skip's alias
+        target are always committed replica-side first."""
+        prev = self._ship_threads[-1] if self._ship_threads else None
+
+        def _ship():
+            if prev is not None:
+                prev.join()
+            try:
+                result.wait_persisted(600.0)
+            except Exception:
+                return  # an aborted save has nothing durable to ship
+            try:
+                self.replicator.ship_dir(path)
+            except Exception:
+                pass  # counted on replicator.metrics.transfer_failures
+
+        t = threading.Thread(target=_ship, name="ckpt-ship", daemon=True)
+        self._ship_threads.append(t)
+        t.start()
 
     def wait_all(self, timeout: float = 600.0) -> None:
         """Block until every save is durable — including each sharded
@@ -295,6 +337,11 @@ class TrainSnapshotManager:
             comp.wait_persisted(timeout)
         for snap, _ in self._snaps:
             snap.wait_persisted(timeout)
+        for t in self._ship_threads:
+            t.join(timeout)
+        self._ship_threads = [
+            t for t in self._ship_threads if t.is_alive()
+        ]
 
     def gc(self) -> None:
         self._release_done_leaves()

@@ -19,19 +19,27 @@ from repro.core.coordinator import (
 from repro.core.faults import FaultInjector, install as install_faults
 from repro.core.gates import GateRetired, GateSet, SharedGate
 from repro.core.layout import ShardLayout
-from repro.core.metrics import SnapshotMetrics
+from repro.core.metrics import MaintenanceMetrics, SnapshotMetrics
 from repro.core.persist import PersistJob, PersistPipeline
 from repro.core.policy import (
     BgsavePolicy,
     CompactionPolicy,
     CopierDutyController,
+    ReplicationPolicy,
     RetryPolicy,
+    ScrubPolicy,
     ShardEpochView,
     ShardPolicyState,
     ShardWriteCounters,
 )
 from repro.core.provider import FailingProvider, PyTreeProvider
-from repro.core.recovery import RecoveryManager, RecoveryReport
+from repro.core.recovery import (
+    RecoveryManager,
+    RecoveryReport,
+    validate_sink_dir,
+)
+from repro.core.replicate import EpochReplicator, ReplicationError
+from repro.core.scrub import EpochScrubber
 from repro.core.sinks import (
     FileSink,
     MemorySink,
@@ -81,6 +89,13 @@ __all__ = [
     "install_faults",
     "RecoveryManager",
     "RecoveryReport",
+    "validate_sink_dir",
+    "EpochReplicator",
+    "ReplicationError",
+    "EpochScrubber",
+    "ReplicationPolicy",
+    "ScrubPolicy",
+    "MaintenanceMetrics",
     "ShardEpochView",
     "ShardPolicyState",
     "ShardWriteCounters",

@@ -41,7 +41,7 @@ import os
 import shutil
 import threading
 import zlib
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -193,10 +193,17 @@ class SnapshotCatalog:
         self._pool = pool if pool is not None else RestorePool()
         self.live_wait_s = float(live_wait_s)
         # dir removals that failed (fault-injected or racing an external
-        # delete): the orphan stays on disk for recovery to quarantine
+        # delete): the orphan stays on disk for recovery to quarantine.
+        # gc_error_log holds the (path, reason) behind each count so the
+        # scrubber's retry-then-quarantine loop can consume them.
         self.gc_errors = 0
+        self.gc_error_log: List[Tuple[str, str]] = []
+        # dirs the scrubber moved (never deleted) into quarantine/
+        self.quarantined_dirs: List[Tuple[str, str]] = []
         # stamped by SnapshotCatalog.from_dir (a RecoveryReport)
         self.last_recovery = None
+        # standby-pool hook (attach_replica): refetch_dir delegates here
+        self._replicator = None
 
     # -- registration (called by the coordinator) ------------------------
     def register_epoch(self, snap) -> int:
@@ -349,6 +356,109 @@ class SnapshotCatalog:
                     out.append(path)
             return sorted(out)
 
+    def durable_epochs(self) -> List[Tuple[int, str]]:
+        """``(epoch_id, composite_dir)`` for every live epoch whose commit
+        point has fired (``attach_dirs`` runs strictly after the
+        composite-manifest rename), in epoch-id order — which is the
+        order delta parents and skip-alias targets precede their
+        dependents, i.e. the replicator's ship order."""
+        with self._lock:
+            return [
+                (eid, rec.directory)
+                for eid, rec in sorted(self._records.items())
+                if rec.directory is not None and not rec.dropped
+            ]
+
+    def committed_dirs(self) -> List[str]:
+        """Owned shard dirs with a durable manifest on disk — the
+        scrubber's work list. Foreign parents (dirs another store owns)
+        and mid-persist dirs are excluded."""
+        with self._lock:
+            paths = sorted(
+                p for p, node in self._dirs.items() if node.owned
+            )
+        return [
+            p for p in paths
+            if os.path.exists(os.path.join(p, "manifest.json"))
+        ]
+
+    def occupancy(self) -> Dict[str, float]:
+        """Catalog footprint on disk: committed dirs, their total bytes,
+        chain-depth max/mean, and the quarantine/orphan backlogs — the
+        observability slice replication lag and scrub coverage are
+        judged against."""
+        dirs = self.committed_dirs()
+        total = 0
+        for d in dirs:
+            try:
+                with os.scandir(d) as it:
+                    for entry in it:
+                        try:
+                            total += entry.stat().st_size
+                        except OSError:
+                            pass
+            except OSError:
+                continue
+        depths = [self.dir_depth(d) for d in dirs]
+        with self._lock:
+            quarantined = len(self.quarantined_dirs)
+            orphans = len(self.gc_error_log)
+        return {
+            "dirs": float(len(dirs)),
+            "bytes": float(total),
+            "chain_depth_max": float(max(depths, default=0)),
+            "chain_depth_mean": (
+                float(sum(depths)) / len(depths) if depths else 0.0
+            ),
+            "quarantined": float(quarantined),
+            "gc_orphans": float(orphans),
+        }
+
+    # -- maintenance-plane hooks (scrubber / replicator) -----------------
+    def gc_orphans(self) -> List[Tuple[str, str]]:
+        """Drain the ``(path, reason)`` log behind ``gc_errors``. The
+        caller (the scrubber) owns the drained entries: retry the
+        removal, then quarantine what still will not die."""
+        with self._lock:
+            out = list(self.gc_error_log)
+            self.gc_error_log = []
+            return out
+
+    def note_quarantined(self, path: str, reason: str) -> None:
+        with self._lock:
+            self.quarantined_dirs.append((path, reason))
+
+    def attach_replica(self, replicator) -> None:
+        """Register the standby-pool shipper as this catalog's repair
+        source: ``refetch_dir`` (the scrubber's corrupt-dir path) then
+        stages verified copies out of the replica pool."""
+        with self._lock:
+            self._replicator = replicator
+
+    def refetch_dir(self, path: str) -> Optional[str]:
+        """Stage a deep-verified copy of shard dir ``path`` from the
+        attached replica at ``path + '.fetch'``; returns the staged path,
+        or None when no replica is attached / the replica has no good
+        copy. The caller performs the quarantine + rename swap."""
+        with self._lock:
+            rep = self._replicator
+        if rep is None:
+            return None
+        return rep.fetch_dir(path)
+
+    def invalidate_images(self, path: str) -> None:
+        """Drop cached block images of one shard dir after its files were
+        swapped (compaction fold or scrub repair). Readers holding mmaps
+        of the old inodes stay byte-valid; fresh pins reload from the new
+        files."""
+        with self._lock:
+            path = _norm(path)
+            for rec in self._records.values():
+                if path in (rec.shard_dirs or []):
+                    for k, sd in enumerate(rec.shard_dirs):
+                        if sd == path:
+                            rec.images.pop(k, None)
+
     # -- pin / drop ------------------------------------------------------
     def pin(self, epoch_id: int) -> EpochRef:
         with self._lock:
@@ -452,11 +562,7 @@ class SnapshotCatalog:
             # cached block images of this dir stay byte-valid (mmaps pin
             # the old inodes) but drop them so fresh pins read the new
             # files rather than hold deleted inodes alive
-            for rec in self._records.values():
-                if path in (rec.shard_dirs or []):
-                    for k, sd in enumerate(rec.shard_dirs):
-                        if sd == path:
-                            rec.images.pop(k, None)
+            self.invalidate_images(path)
             return self._decref(old_parent)
 
     # -- internals -------------------------------------------------------
@@ -487,12 +593,17 @@ class SnapshotCatalog:
                     if os.path.lexists(path):
                         shutil.rmtree(path)
                     removed.append(path)
-                except OSError:
+                except OSError as exc:
                     # an already-gone dir is tolerated above (ENOENT is
                     # not an error — someone beat us to it); anything
-                    # else leaves an orphan on disk for recovery to
-                    # quarantine, and the catalog keeps serving
+                    # else leaves an orphan on disk, logged for the
+                    # scrubber's retry-then-quarantine loop (or, absent a
+                    # scrubber, for recovery to quarantine at restart),
+                    # and the catalog keeps serving
                     self.gc_errors += 1
+                    self.gc_error_log.append(
+                        (path, getattr(exc, "strerror", None) or str(exc))
+                    )
             if node.parent is not None:
                 removed.extend(self._decref(node.parent))
             self._cleanup_composite(os.path.dirname(path))

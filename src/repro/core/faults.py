@@ -26,7 +26,20 @@ points where the durable-commit protocol claims to tolerate them:
   * ``compactor.swap`` — in :meth:`SnapshotCatalog.compact_dir`, between
                          building the folded image and the rename swap
   * ``catalog.gc``     — in :meth:`SnapshotCatalog._decref`, before the
-                         refcount-zero ``rmtree``
+                         refcount-zero ``rmtree`` (and again in the
+                         scrubber's retry of a logged GC orphan)
+  * ``replicate.read`` — in :meth:`EpochReplicator._read_range`, before
+                         each positioned read of primary run bytes (a
+                         transient source-side transfer fault; retried
+                         under the replicator's RetryPolicy)
+  * ``replicate.write``— in :meth:`EpochReplicator._write_range`, before
+                         each positioned write into the replica pool
+                         (destination-side transfer fault, same retry)
+  * ``replicate.commit``— in :meth:`EpochReplicator` just before the
+                         replica-side manifest tmp→final rename (the
+                         replica epoch's single commit point; a crash
+                         here leaves a torn replica dir for
+                         ``SnapshotCatalog.from_dir`` to quarantine)
 
 Modes: ``raise`` (raise ``exc`` for the first ``times`` hits — raise-once
 is ``times=1``, raise-N is ``times=N``), ``delay`` (sleep ``delay_s`` per
@@ -62,6 +75,9 @@ SITES = (
     "bgsave.commit",
     "compactor.swap",
     "catalog.gc",
+    "replicate.read",
+    "replicate.write",
+    "replicate.commit",
 )
 
 

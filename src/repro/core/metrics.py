@@ -197,3 +197,107 @@ class SnapshotMetrics:
             "persist_retries": float(self.persist_retries),
             "persist_aborts": float(self.persist_aborts),
         }
+
+
+@dataclasses.dataclass
+class MaintenanceMetrics:
+    """Counters for the off-path maintenance plane (DESIGN.md §14):
+    epoch shipping to a standby pool and the background scrubber.
+
+    :class:`SnapshotMetrics` above is per-epoch and owned by the write
+    path; this one is process-lifetime and owned by whichever
+    replicator/scrubber it is handed to. ``bytes_shipped`` counts bytes
+    that actually crossed the "wire" (carried-block runs + compressed
+    frames); ``bytes_logical`` counts what a naive full-copy of the same
+    dirs would have moved (every leaf at its full uncompressed size) —
+    their ratio is the ``delta_vs_full_bytes`` headline the replication
+    bench cell gates on.
+    """
+
+    epochs_shipped: int = 0       # replica-side commit points published
+    dirs_shipped: int = 0         # shard dirs whose bytes crossed the wire
+    dirs_reused: int = 0          # skip aliases resolved replica-side (0 bytes)
+    bytes_shipped: int = 0        # run/frame bytes actually transferred
+    bytes_logical: int = 0        # full-copy equivalent of the shipped dirs
+    transfer_retries: int = 0     # read/write attempts replayed by RetryPolicy
+    transfer_failures: int = 0    # ships abandoned past the retry budget
+    dirs_scrubbed: int = 0        # committed dirs the crc pass covered
+    blocks_scrubbed: int = 0      # carried blocks whose crc32 was re-checked
+    corrupt_found: int = 0        # dirs the scrubber failed verification on
+    repaired: int = 0             # corrupt dirs replaced by a verified re-fetch
+    quarantined: int = 0          # dirs moved (never deleted) to quarantine/
+    orphans_removed: int = 0      # gc_errors orphans whose retry rmtree worked
+    orphans_quarantined: int = 0  # orphans that failed the retry too
+
+    def __post_init__(self):
+        self._lock = threading.Lock()
+
+    def record_ship(self, shipped_bytes: int, logical_bytes: int) -> None:
+        """One shard dir's bytes arrived on the replica."""
+        with self._lock:
+            self.dirs_shipped += 1
+            self.bytes_shipped += int(shipped_bytes)
+            self.bytes_logical += int(logical_bytes)
+
+    def record_dir_reused(self) -> None:
+        """A skip alias resolved against an already-shipped replica dir."""
+        with self._lock:
+            self.dirs_reused += 1
+
+    def record_epoch_shipped(self) -> None:
+        with self._lock:
+            self.epochs_shipped += 1
+
+    def record_transfer_retry(self) -> None:
+        with self._lock:
+            self.transfer_retries += 1
+
+    def record_transfer_failure(self) -> None:
+        with self._lock:
+            self.transfer_failures += 1
+
+    def record_scrub(self, blocks: int) -> None:
+        """One committed dir passed (or at least finished) the crc pass."""
+        with self._lock:
+            self.dirs_scrubbed += 1
+            self.blocks_scrubbed += int(blocks)
+
+    def record_corrupt(self) -> None:
+        with self._lock:
+            self.corrupt_found += 1
+
+    def record_repair(self) -> None:
+        with self._lock:
+            self.repaired += 1
+
+    def record_quarantine(self) -> None:
+        with self._lock:
+            self.quarantined += 1
+
+    def record_orphan(self, removed: bool) -> None:
+        """One ``catalog.gc_errors`` orphan consumed: retry rmtree worked
+        (``removed=True``) or the orphan went to quarantine."""
+        with self._lock:
+            if removed:
+                self.orphans_removed += 1
+            else:
+                self.orphans_quarantined += 1
+
+    def summary(self) -> Dict[str, float]:
+        with self._lock:
+            return {
+                "epochs_shipped": float(self.epochs_shipped),
+                "dirs_shipped": float(self.dirs_shipped),
+                "dirs_reused": float(self.dirs_reused),
+                "bytes_shipped": float(self.bytes_shipped),
+                "bytes_logical": float(self.bytes_logical),
+                "transfer_retries": float(self.transfer_retries),
+                "transfer_failures": float(self.transfer_failures),
+                "dirs_scrubbed": float(self.dirs_scrubbed),
+                "blocks_scrubbed": float(self.blocks_scrubbed),
+                "corrupt_found": float(self.corrupt_found),
+                "repaired": float(self.repaired),
+                "quarantined": float(self.quarantined),
+                "orphans_removed": float(self.orphans_removed),
+                "orphans_quarantined": float(self.orphans_quarantined),
+            }

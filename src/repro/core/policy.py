@@ -218,6 +218,38 @@ class CompactionPolicy:
         return chain_depth > self.max_chain
 
 
+@dataclasses.dataclass(frozen=True)
+class ReplicationPolicy:
+    """Pacing for :class:`repro.core.replicate.EpochReplicator`'s
+    background ship loop.
+
+    ``interval_s`` is how long the shipper sleeps between ``sync()``
+    passes when there is nothing pending; ``epochs_per_sync`` bounds how
+    many epochs one pass ships (0 = drain everything pending) so a cold
+    standby catching up on a long history cannot monopolize the source
+    disk. Transfer retry/backoff is a separate, orthogonal knob — pass a
+    :class:`RetryPolicy` to the replicator for that.
+    """
+
+    interval_s: float = 0.05
+    epochs_per_sync: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class ScrubPolicy:
+    """Pacing for :class:`repro.core.scrub.EpochScrubber`'s background
+    crc pass (the low-duty dial: bit rot develops over days, so the
+    scrubber only needs to cover the pool eventually, never quickly).
+
+    ``interval_s`` paces the scan loop; ``dirs_per_scan`` bounds how many
+    committed shard dirs one tick deep-verifies, so each tick's disk read
+    burst stays small next to the serving plane's traffic.
+    """
+
+    interval_s: float = 0.05
+    dirs_per_scan: int = 2
+
+
 class CopierDutyController:
     """Feedback controller for the copier duty cycle (DESIGN.md §13).
 

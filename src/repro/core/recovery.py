@@ -66,6 +66,110 @@ class RecoveryReport:
 QUARANTINE_DIRNAME = "quarantine"
 
 
+def _load_manifest(directory: str) -> Optional[Dict]:
+    try:
+        with open(os.path.join(directory, "manifest.json")) as f:
+            return json.load(f)
+    except (OSError, ValueError):
+        return None
+
+
+def quarantine_dest(pool_dir: str, name: str) -> str:
+    """Reserve a unique destination under ``pool_dir/quarantine/`` for a
+    dir named ``name`` (``.N`` suffix on collision). Creates the
+    quarantine dir; the caller performs the rename."""
+    qdir = os.path.join(pool_dir, QUARANTINE_DIRNAME)
+    os.makedirs(qdir, exist_ok=True)
+    dest = os.path.join(qdir, name)
+    n = 1
+    while os.path.exists(dest):
+        dest = os.path.join(qdir, f"{name}.{n}")
+        n += 1
+    return dest
+
+
+def validate_sink_dir(sdir: str, valid_dirs: Optional[set] = None,
+                      deep_verify: bool = True,
+                      manifest: Optional[Dict] = None,
+                      ) -> Tuple[Optional[str], int]:
+    """Validate one FileSink shard dir against its manifest.
+
+    Returns ``(problem, blocks_verified)`` — ``problem`` is None when the
+    dir is consistent, else a human-readable quarantine reason. This is
+    the single verify pass shared by startup recovery, the background
+    scrubber, and the replicator's arrival check:
+
+    * ``valid_dirs=None`` skips the parent-linkage check (the scrubber's
+      crc-only pass over an already-registered dir, and the replicator,
+      which ships epochs in commit order so parents are covered by
+      construction); a set enforces that any delta parent resolves to an
+      already-validated dir (recovery's prefix-exactness invariant).
+    * ``manifest`` overrides the on-disk ``manifest.json`` — the
+      replicator verifies arrived bytes BEFORE the manifest rename
+      publishes them, so the manifest only exists in memory at that
+      point.
+    """
+    blocks_verified = 0
+    if manifest is None:
+        manifest = _load_manifest(sdir)
+    if manifest is None:
+        return f"shard dir {sdir!r} has no parseable manifest", 0
+    if "leaves" not in manifest:
+        return f"shard dir {sdir!r} manifest lacks a leaves table", 0
+    parent = manifest.get("parent")
+    if parent is not None and valid_dirs is not None:
+        pdir = parent if os.path.isabs(parent) else os.path.normpath(
+            os.path.join(os.path.dirname(sdir), parent)
+        )
+        if os.path.realpath(pdir) not in valid_dirs:
+            return (f"shard dir {sdir!r} chains to parent {pdir!r}, "
+                    "which is not a recovered shard dir"), 0
+    for leaf in manifest["leaves"]:
+        path = os.path.join(sdir, leaf["file"])
+        dtype = np.dtype(leaf["dtype"])
+        n_elems = int(np.prod(leaf["shape"])) if leaf["shape"] else 1
+        if not os.path.exists(path):
+            return (f"shard dir {sdir!r}: leaf {leaf['path']!r} data "
+                    f"file {leaf['file']!r} is missing"), blocks_verified
+        if leaf.get("compress"):
+            # compressed leaves hold variable-length frames: bound-
+            # check each frame against the file, then deep-verify on
+            # the inflated image (crc over uncompressed bytes, §13)
+            size = os.path.getsize(path)
+            for fr in leaf.get("frames", []):
+                if fr[2] + fr[3] > size:
+                    return (f"shard dir {sdir!r}: leaf {leaf['path']!r}"
+                            f" frame at offset {fr[2]} (+{fr[3]} bytes)"
+                            f" overruns the {size}-byte data file"
+                            ), blocks_verified
+            if deep_verify and n_elems and leaf.get("crc32"):
+                try:
+                    _verify_leaf_bytes(
+                        sdir, leaf, _decompressed_leaf_bytes(sdir, leaf)
+                    )
+                except ValueError as exc:
+                    return str(exc), blocks_verified
+                blocks_verified += sum(
+                    1 for c in leaf["crc32"] if c is not None
+                )
+            continue
+        if os.path.getsize(path) != n_elems * dtype.itemsize:
+            return (f"shard dir {sdir!r}: leaf {leaf['path']!r} file "
+                    f"holds {os.path.getsize(path)} bytes, manifest "
+                    f"needs {n_elems * dtype.itemsize}"), blocks_verified
+        if deep_verify and n_elems and leaf.get("crc32"):
+            try:
+                _verify_leaf_bytes(
+                    sdir, leaf, np.memmap(path, dtype=np.uint8, mode="r")
+                )
+            except ValueError as exc:
+                return str(exc), blocks_verified
+            blocks_verified += sum(
+                1 for c in leaf["crc32"] if c is not None
+            )
+    return None, blocks_verified
+
+
 class RecoveryManager:
     """Startup scanner rebuilding a catalog from one pool directory."""
 
@@ -194,70 +298,14 @@ class RecoveryManager:
 
     def _validate_sink_dir(self, sdir: str, valid_dirs: set,
                            report: RecoveryReport) -> Optional[str]:
-        manifest = self._load_manifest(sdir)
-        if manifest is None:
-            return f"shard dir {sdir!r} has no parseable manifest"
-        if "leaves" not in manifest:
-            return f"shard dir {sdir!r} manifest lacks a leaves table"
-        parent = manifest.get("parent")
-        if parent is not None:
-            pdir = parent if os.path.isabs(parent) else os.path.normpath(
-                os.path.join(os.path.dirname(sdir), parent)
-            )
-            if os.path.realpath(pdir) not in valid_dirs:
-                return (f"shard dir {sdir!r} chains to parent {pdir!r}, "
-                        "which is not a recovered shard dir")
-        for leaf in manifest["leaves"]:
-            path = os.path.join(sdir, leaf["file"])
-            dtype = np.dtype(leaf["dtype"])
-            n_elems = int(np.prod(leaf["shape"])) if leaf["shape"] else 1
-            if not os.path.exists(path):
-                return (f"shard dir {sdir!r}: leaf {leaf['path']!r} data "
-                        f"file {leaf['file']!r} is missing")
-            if leaf.get("compress"):
-                # compressed leaves hold variable-length frames: bound-
-                # check each frame against the file, then deep-verify on
-                # the inflated image (crc over uncompressed bytes, §13)
-                size = os.path.getsize(path)
-                for fr in leaf.get("frames", []):
-                    if fr[2] + fr[3] > size:
-                        return (f"shard dir {sdir!r}: leaf {leaf['path']!r}"
-                                f" frame at offset {fr[2]} (+{fr[3]} bytes)"
-                                f" overruns the {size}-byte data file")
-                if self.deep_verify and n_elems and leaf.get("crc32"):
-                    try:
-                        _verify_leaf_bytes(
-                            sdir, leaf, _decompressed_leaf_bytes(sdir, leaf)
-                        )
-                    except ValueError as exc:
-                        return str(exc)
-                    report.blocks_verified += sum(
-                        1 for c in leaf["crc32"] if c is not None
-                    )
-                continue
-            if os.path.getsize(path) != n_elems * dtype.itemsize:
-                return (f"shard dir {sdir!r}: leaf {leaf['path']!r} file "
-                        f"holds {os.path.getsize(path)} bytes, manifest "
-                        f"needs {n_elems * dtype.itemsize}")
-            if self.deep_verify and n_elems and leaf.get("crc32"):
-                try:
-                    _verify_leaf_bytes(
-                        sdir, leaf, np.memmap(path, dtype=np.uint8, mode="r")
-                    )
-                except ValueError as exc:
-                    return str(exc)
-                report.blocks_verified += sum(
-                    1 for c in leaf["crc32"] if c is not None
-                )
-        return None
+        problem, blocks = validate_sink_dir(
+            sdir, valid_dirs=valid_dirs, deep_verify=self.deep_verify)
+        report.blocks_verified += blocks
+        return problem
 
     @staticmethod
     def _load_manifest(directory: str) -> Optional[Dict]:
-        try:
-            with open(os.path.join(directory, "manifest.json")) as f:
-                return json.load(f)
-        except (OSError, ValueError):
-            return None
+        return _load_manifest(directory)
 
     # -- registration inputs ----------------------------------------------
     def _epoch_record(self, epoch_dir: str):
@@ -306,12 +354,6 @@ class RecoveryManager:
         if not self.quarantine:
             report.quarantined.append((path, reason))
             return
-        qdir = os.path.join(self.pool_dir, QUARANTINE_DIRNAME)
-        os.makedirs(qdir, exist_ok=True)
-        dest = os.path.join(qdir, os.path.basename(path))
-        n = 1
-        while os.path.exists(dest):
-            dest = os.path.join(qdir, f"{os.path.basename(path)}.{n}")
-            n += 1
+        dest = quarantine_dest(self.pool_dir, os.path.basename(path))
         os.rename(path, dest)
         report.quarantined.append((dest, reason))

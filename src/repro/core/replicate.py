@@ -1,0 +1,399 @@
+"""Epoch replication — stream committed epoch dirs to a standby pool.
+
+PR 8 made an epoch a self-validating durable unit: per-run crc32s in the
+shard manifests, an fsync'd rename as the single commit point, and a
+ref-closed manifest graph (delta parents and skip aliases recorded as
+RELATIVE paths inside one pool). That unit is exactly what a standby
+needs, and the delta chain IS the wire format (DESIGN.md §14):
+
+* a **full** epoch ships every carried block once;
+* a **delta** epoch ships only its own run bytes — the uncompressed data
+  files are full-size *sparse* (the sink preallocates with ``truncate``
+  and writes only carried offsets), so the shipper coalesces the
+  manifest's ``carried`` block ids into runs and moves just those byte
+  ranges, recreating the sparse holes with a ``truncate`` on the replica;
+* a **compressed** leaf ships only the frames its manifest lists (which
+  also drops orphaned retry frames on the floor);
+* a **skip** epoch ships nothing but its composite manifest — the alias
+  entry's relative path resolves against the already-shipped target dir
+  because the replica pool preserves epoch-dir basenames.
+
+Manifests are copied byte-verbatim, so the replica's ref graph is the
+primary's ref graph. Shipping in epoch-id order (``catalog.
+durable_epochs``) guarantees every parent/alias target is committed
+replica-side before anything referencing it, and each arrival is
+**deep-verified against the in-memory manifest before the manifest
+rename publishes it** — the replica-side commit point is the same
+tmp→fsync→rename→dir-fsync protocol as the primary's (§12), so
+``SnapshotCatalog.from_dir(replica)`` is the failover story: it recovers
+exactly the shipped prefix, byte-exact, and quarantines any epoch a
+crash left torn.
+
+Transient transfer faults (``replicate.read`` / ``replicate.write``
+injection sites) are retried under a bounded
+:class:`~repro.core.policy.RetryPolicy` with exponential backoff —
+positioned reads/writes are idempotent, so replaying an attempt is safe.
+``replicate.commit`` fires just before the replica commit rename and is
+NOT retried (mirroring ``sink.rename``): a failure there unwinds the
+whole partial epoch dir, a crash leaves it torn for recovery to
+quarantine.
+
+The replicator also serves the scrubber's repair path:
+:meth:`EpochReplicator.fetch_dir` stages a deep-verified copy of a
+corrupt primary shard dir out of the replica pool (quarantine → re-fetch,
+``core/scrub.py``).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import List, Optional, Tuple
+
+from repro.core.faults import fire as _fire_fault
+from repro.core.metrics import MaintenanceMetrics
+from repro.core.policy import ReplicationPolicy, RetryPolicy
+from repro.core.recovery import _load_manifest, validate_sink_dir
+from repro.core.sinks import _coalesce_ids, _fsync_dir
+
+
+class ReplicationError(RuntimeError):
+    """A ship/fetch failed for a non-transient reason (bad source state,
+    verification mismatch, or the retry budget is spent)."""
+
+
+def _pread_exact(fd: int, n: int, offset: int) -> bytes:
+    chunks = []
+    while n > 0:
+        buf = os.pread(fd, n, offset)
+        if not buf:
+            raise OSError(f"short read at offset {offset}")
+        chunks.append(buf)
+        offset += len(buf)
+        n -= len(buf)
+    return b"".join(chunks)
+
+
+def _pwrite_exact(fd: int, data: bytes, offset: int) -> None:
+    view = memoryview(data)
+    while view:
+        n = os.pwrite(fd, view, offset)
+        offset += n
+        view = view[n:]
+
+
+class EpochReplicator:
+    """Ships committed epoch dirs to a standby pool directory.
+
+    ``catalog`` is optional: with one, :meth:`pending`/:meth:`lag`/
+    :meth:`sync` track the primary's committed epochs and the background
+    loop (:meth:`start`) drains them at ``policy.interval_s`` pace;
+    without one, :meth:`ship_dir` still ships any committed epoch dir
+    explicitly (the checkpoint manager's replicate-on-commit option).
+    """
+
+    def __init__(self, replica_dir: str, catalog=None,
+                 retry: Optional[RetryPolicy] = None, verify: bool = True,
+                 policy: Optional[ReplicationPolicy] = None,
+                 metrics: Optional[MaintenanceMetrics] = None,
+                 faults=None):
+        self.replica_dir = os.path.abspath(replica_dir)
+        self.catalog = catalog
+        self.retry = retry if retry is not None else RetryPolicy()
+        self.verify = verify
+        self.policy = policy if policy is not None else ReplicationPolicy()
+        self.metrics = metrics if metrics is not None else MaintenanceMetrics()
+        self.faults = faults
+        self.ship_errors = 0
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+
+    # -- catalog-driven shipping ------------------------------------------
+    def _replica_committed(self, epoch_dir: str) -> bool:
+        dst = os.path.join(self.replica_dir, os.path.basename(epoch_dir))
+        return os.path.exists(os.path.join(dst, "manifest.json"))
+
+    def pending(self) -> List[Tuple[int, str]]:
+        """Committed primary epochs not yet committed replica-side, in
+        ship (epoch-id) order."""
+        if self.catalog is None:
+            return []
+        return [
+            (eid, d) for eid, d in self.catalog.durable_epochs()
+            if not self._replica_committed(d)
+        ]
+
+    def lag(self) -> int:
+        """Epochs committed on the primary but not on the replica."""
+        return len(self.pending())
+
+    def sync(self) -> int:
+        """Drain the pending queue (bounded by ``policy.epochs_per_sync``
+        when non-zero); returns how many epochs shipped. Stops at the
+        first failure — a missing parent must block its dependents, or
+        the replica would accept orphans recovery then drops."""
+        shipped = 0
+        for _, d in self.pending():
+            if self.policy.epochs_per_sync and \
+                    shipped >= self.policy.epochs_per_sync:
+                break
+            try:
+                if self.ship_dir(d):
+                    shipped += 1
+            except Exception:
+                self.ship_errors += 1
+                break
+        return shipped
+
+    def start(self) -> None:
+        """Run ``sync()`` on a paced daemon thread until :meth:`stop`."""
+        if self._thread is not None:
+            return
+        self._stop.clear()
+
+        def _loop():
+            while not self._stop.wait(self.policy.interval_s):
+                try:
+                    self.sync()
+                except Exception:
+                    self.ship_errors += 1
+
+        self._thread = threading.Thread(
+            target=_loop, name="epoch-replicator", daemon=True)
+        self._thread.start()
+
+    def stop(self) -> None:
+        if self._thread is None:
+            return
+        self._stop.set()
+        self._thread.join()
+        self._thread = None
+
+    # -- one epoch --------------------------------------------------------
+    def ship_dir(self, epoch_dir: str) -> bool:
+        """Ship one committed epoch dir (composite or flat) into
+        ``replica_dir/basename(epoch_dir)``. Idempotent: returns False
+        without touching disk when the replica already committed it.
+        Raises on failure after unwinding the partial replica dir; a
+        crash fault leaves the torn dir for recovery to quarantine."""
+        epoch_dir = os.path.abspath(epoch_dir)
+        dst_epoch = os.path.join(
+            self.replica_dir, os.path.basename(epoch_dir))
+        if os.path.exists(os.path.join(dst_epoch, "manifest.json")):
+            return False
+        manifest = _load_manifest(epoch_dir)
+        if manifest is None:
+            raise ReplicationError(
+                f"{epoch_dir!r} has no composite manifest "
+                "(not committed; nothing to ship)")
+        os.makedirs(self.replica_dir, exist_ok=True)
+        try:
+            if manifest.get("composite"):
+                for entry in manifest.get("shards", []):
+                    rel = entry["dir"]
+                    if entry.get("mode") == "skip":
+                        # zero-copy on the wire too: the alias target is a
+                        # previous epoch's dir, shipped when that epoch
+                        # was (ship order == commit order)
+                        tgt = rel if os.path.isabs(rel) else os.path.normpath(
+                            os.path.join(dst_epoch, rel))
+                        if not os.path.exists(
+                                os.path.join(tgt, "manifest.json")):
+                            raise ReplicationError(
+                                f"skip entry aliases {rel!r}, which is not "
+                                "committed on the replica yet")
+                        self.metrics.record_dir_reused()
+                        continue
+                    src = os.path.normpath(os.path.join(epoch_dir, rel))
+                    dst = os.path.normpath(os.path.join(dst_epoch, rel))
+                    self._ship_sink_dir(src, dst)
+                self._commit_manifest(epoch_dir, dst_epoch, fire_site=True)
+            else:
+                # flat single-sink epoch (the unsharded checkpoint
+                # manager): the shard manifest rename IS the commit point
+                self._ship_sink_dir(epoch_dir, dst_epoch, commit_site=True)
+        except BaseException:
+            # non-crash failure: unwind so the replica never shows a
+            # half-shipped dir past this process's lifetime (a crash
+            # fault never reaches here — os._exit — and recovery
+            # quarantines the torn dir instead)
+            self.metrics.record_transfer_failure()
+            shutil.rmtree(dst_epoch, ignore_errors=True)
+            raise
+        self.metrics.record_epoch_shipped()
+        return True
+
+    # -- one shard dir ----------------------------------------------------
+    def _ship_sink_dir(self, src: str, dst: str,
+                       commit_site: bool = False) -> None:
+        manifest = _load_manifest(src)
+        if manifest is None:
+            raise ReplicationError(
+                f"shard dir {src!r} has no parseable manifest")
+        os.makedirs(dst, exist_ok=True)
+        shipped = logical = 0
+        for leaf in manifest.get("leaves", []):
+            s, l = self._ship_leaf(src, dst, leaf)
+            shipped += s
+            logical += l
+        if self.verify:
+            # deep-verify the arrived bytes against the IN-MEMORY
+            # manifest — it is not on the replica disk yet, which is the
+            # point: bad bytes must never reach the commit rename
+            problem, _ = validate_sink_dir(
+                dst, valid_dirs=None, deep_verify=True, manifest=manifest)
+            if problem is not None:
+                raise ReplicationError(
+                    f"arrival verification failed: {problem}")
+        self._commit_manifest(src, dst, fire_site=commit_site)
+        self.metrics.record_ship(shipped, logical)
+
+    def _ship_leaf(self, src: str, dst: str, leaf: dict) -> Tuple[int, int]:
+        """Move one leaf's bytes; returns (shipped_bytes, logical_bytes).
+
+        ``logical_bytes`` is the full uncompressed leaf size — what a
+        naive ``cp -r`` of the dir would ship (sparse holes and all)."""
+        src_path = os.path.join(src, leaf["file"])
+        dst_path = os.path.join(dst, leaf["file"])
+        blocks = leaf.get("blocks") or []
+        bounds = [0]
+        for b in blocks:
+            bounds.append(bounds[-1] + int(b[2]))
+        shipped = 0
+        sfd = os.open(src_path, os.O_RDONLY)
+        try:
+            dfd = os.open(dst_path,
+                          os.O_WRONLY | os.O_CREAT | os.O_TRUNC, 0o644)
+            try:
+                if leaf.get("compress"):
+                    frames = sorted(leaf.get("frames") or [])
+                    end = max((fr[2] + fr[3] for fr in frames), default=0)
+                    os.ftruncate(dfd, end)
+                    for _, _, off, clen in frames:
+                        data = self._read_range(sfd, clen, off, src_path)
+                        self._write_range(dfd, data, off, dst_path)
+                        shipped += clen
+                    logical = bounds[-1] if blocks else end
+                elif blocks and leaf.get("carried") is not None:
+                    # the carried-block diff: recreate the full-size
+                    # sparse file, move only this dir's own run bytes
+                    total = bounds[-1]
+                    os.ftruncate(dfd, total)
+                    for b0, b1 in _coalesce_ids(sorted(leaf["carried"])):
+                        lo, hi = bounds[b0], bounds[b1]
+                        data = self._read_range(sfd, hi - lo, lo, src_path)
+                        self._write_range(dfd, data, lo, dst_path)
+                        shipped += hi - lo
+                    logical = total
+                else:
+                    # blockless leaf (scalars / legacy manifests): whole
+                    # file, it is tiny or has no run structure to diff
+                    size = os.fstat(sfd).st_size
+                    data = self._read_range(sfd, size, 0, src_path)
+                    self._write_range(dfd, data, 0, dst_path)
+                    shipped += size
+                    logical = size
+                os.fsync(dfd)
+            finally:
+                os.close(dfd)
+        finally:
+            os.close(sfd)
+        return shipped, logical
+
+    def _commit_manifest(self, src_dir: str, dst_dir: str,
+                         fire_site: bool) -> None:
+        """Replica-side commit point: copy the manifest byte-verbatim
+        (preserving the relative ref graph) through the §12 protocol —
+        tmp, fsync, rename, dir fsync. ``fire_site`` marks THE epoch
+        commit (the composite rename, or the shard rename of a flat
+        epoch); per-shard renames inside a composite are not it."""
+        os.makedirs(dst_dir, exist_ok=True)
+        with open(os.path.join(src_dir, "manifest.json"), "rb") as f:
+            raw = f.read()
+        tmp = os.path.join(dst_dir, "manifest.json.tmp")
+        with open(tmp, "wb") as f:
+            f.write(raw)
+            f.flush()
+            os.fsync(f.fileno())
+        if fire_site:
+            _fire_fault("replicate.commit", dst_dir, self.faults)
+        os.replace(tmp, os.path.join(dst_dir, "manifest.json"))
+        _fsync_dir(dst_dir)
+
+    # -- retried positioned IO --------------------------------------------
+    def _with_retry(self, attempt):
+        n = 0
+        while True:
+            try:
+                return attempt()
+            except OSError:
+                delay = self.retry.backoff(n)
+                if delay is None:
+                    raise
+                self.metrics.record_transfer_retry()
+                time.sleep(delay)
+                n += 1
+
+    def _read_range(self, fd: int, n: int, offset: int, path: str) -> bytes:
+        def attempt():
+            _fire_fault("replicate.read", f"{path}@{offset}", self.faults)
+            return _pread_exact(fd, n, offset)
+        return self._with_retry(attempt)
+
+    def _write_range(self, fd: int, data: bytes, offset: int,
+                     path: str) -> None:
+        def attempt():
+            _fire_fault("replicate.write", f"{path}@{offset}", self.faults)
+            _pwrite_exact(fd, data, offset)
+        self._with_retry(attempt)
+
+    # -- repair source (the scrubber's re-fetch) --------------------------
+    def fetch_dir(self, sdir: str) -> Optional[str]:
+        """Stage a deep-verified copy of primary shard dir ``sdir`` from
+        the replica at ``sdir + '.fetch'``; returns the staged path or
+        None when the replica has no verified copy. The caller owns the
+        quarantine + rename swap (and the staged dir on success)."""
+        sdir = os.path.abspath(sdir)
+        # a composite shard lives at pool/epN/shard_k -> replica/epN/
+        # shard_k; a flat epoch at pool/epN -> replica/epN
+        candidates = (
+            os.path.join(self.replica_dir,
+                         os.path.basename(os.path.dirname(sdir)),
+                         os.path.basename(sdir)),
+            os.path.join(self.replica_dir, os.path.basename(sdir)),
+        )
+        src = next(
+            (c for c in candidates
+             if os.path.exists(os.path.join(c, "manifest.json"))),
+            None,
+        )
+        if src is None:
+            return None
+        staged = sdir + ".fetch"
+        shutil.rmtree(staged, ignore_errors=True)
+        try:
+            shutil.copytree(src, staged)
+        except OSError:
+            shutil.rmtree(staged, ignore_errors=True)
+            self.metrics.record_transfer_failure()
+            return None
+        # verify the STAGED bytes (not just the replica's): the copy
+        # itself crossed the same unreliable path the ship did. Relative
+        # parent refs resolve identically from <sdir>.fetch — same
+        # parent dir as sdir.
+        problem, _ = validate_sink_dir(
+            staged, valid_dirs=None, deep_verify=True)
+        if problem is not None:
+            shutil.rmtree(staged, ignore_errors=True)
+            self.metrics.record_transfer_failure()
+            return None
+        return staged
+
+    # -- introspection -----------------------------------------------------
+    def summary(self) -> dict:
+        out = self.metrics.summary()
+        out["replication_lag"] = float(self.lag())
+        out["ship_errors"] = float(self.ship_errors)
+        return out

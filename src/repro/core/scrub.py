@@ -1,0 +1,196 @@
+"""Background scrubbing — bit-rot detection before a restore needs the
+bytes, and the repair loop that closes it (DESIGN.md §14).
+
+Durable commits (§12) prove an epoch was correct when written; nothing
+re-checks it while it sits cold, so the first reader to notice rot would
+have been a restore — the worst possible moment. :class:`EpochScrubber`
+reuses :class:`~repro.core.catalog.ChainCompactor`'s paced background-
+thread mold to run the recovery scan's deep-verify crc pass
+(:func:`~repro.core.recovery.validate_sink_dir`) over the catalog's
+committed dirs at low duty: ``ScrubPolicy.dirs_per_scan`` dirs per tick,
+round-robin, so the pool is covered eventually without competing with
+the serving plane.
+
+The state machine for a dir that fails verification:
+
+    committed ──crc mismatch──▶ corrupt ──replica has a verified copy──▶
+    quarantined (moved, NEVER deleted — it is evidence) + the re-fetched
+    copy renamed into the original path ──▶ committed again
+
+The swap mirrors ``compact_dir``'s: readers holding mmaps of the old
+files keep byte-valid views (the inodes survive the rename), the
+catalog's cached images are invalidated so fresh pins read the repaired
+files, and the dir keeps its path so every composite manifest, skip
+alias and delta child pointing at it stays correct. Without a replica
+(or when the replica's copy fails verification too) the dir is left in
+place and reported — destroying the only copy is never an improvement.
+
+``catalog.gc_errors`` orphans feed the same loop: each drained
+``(path, reason)`` gets one retried ``rmtree`` (through the same
+``catalog.gc`` fault site, so tests can fail the retry too); what still
+will not die is moved to quarantine instead of leaking forever.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import threading
+from typing import List, Optional, Tuple
+
+from repro.core.faults import fire as _fire_fault
+from repro.core.metrics import MaintenanceMetrics
+from repro.core.policy import ScrubPolicy
+from repro.core.recovery import (
+    _load_manifest,
+    quarantine_dest,
+    validate_sink_dir,
+)
+
+
+def _pool_of(sdir: str) -> str:
+    """The pool dir whose ``quarantine/`` a shard dir belongs to: a
+    composite shard (``pool/epN/shard_k``) quarantines at the POOL level
+    (its epoch dir is not a pool), a flat epoch dir one level up."""
+    parent = os.path.dirname(sdir)
+    if _load_manifest(parent) is not None or \
+            os.path.basename(sdir).startswith("shard_"):
+        return os.path.dirname(parent)
+    return parent
+
+
+def _quarantine_name(sdir: str) -> str:
+    """Unique-ish quarantine basename: composite shards prefix their
+    epoch dir (many epochs have a ``shard_0``)."""
+    pool = _pool_of(sdir)
+    parent = os.path.dirname(sdir)
+    if parent != pool:
+        return f"{os.path.basename(parent)}.{os.path.basename(sdir)}"
+    return os.path.basename(sdir)
+
+
+class EpochScrubber:
+    """Low-duty crc pass over committed dirs + the orphan retry loop.
+
+    Same lifecycle as ``ChainCompactor``: call :meth:`scan_once`
+    synchronously (tests, benchmarks) or :meth:`start`/:meth:`stop` the
+    paced daemon thread. Errors are counted, never raised — a scrubber
+    that kills the process defeats its purpose.
+    """
+
+    def __init__(self, catalog, policy: Optional[ScrubPolicy] = None,
+                 metrics: Optional[MaintenanceMetrics] = None):
+        self.catalog = catalog
+        self.policy = policy if policy is not None else ScrubPolicy()
+        self.metrics = metrics if metrics is not None else MaintenanceMetrics()
+        # dirs that failed verification and could NOT be repaired
+        self.corrupt: List[Tuple[str, str]] = []
+        self.scrub_errors = 0
+        self._cursor = 0
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+
+    # -- one tick ---------------------------------------------------------
+    def scan_once(self) -> List[Tuple[str, str]]:
+        """One maintenance tick: drain GC orphans, then deep-verify up to
+        ``dirs_per_scan`` committed dirs. Returns the ``(dir, reason)``
+        corruption found this tick (repaired or not)."""
+        self._drain_orphans()
+        found: List[Tuple[str, str]] = []
+        dirs = self.catalog.committed_dirs()
+        if not dirs:
+            return found
+        n = min(len(dirs), max(1, int(self.policy.dirs_per_scan)))
+        start = self._cursor % len(dirs)
+        for i in range(n):
+            d = dirs[(start + i) % len(dirs)]
+            try:
+                problem, blocks = validate_sink_dir(
+                    d, valid_dirs=None, deep_verify=True)
+            except Exception:
+                self.scrub_errors += 1
+                continue
+            self.metrics.record_scrub(blocks)
+            if problem is not None:
+                self.metrics.record_corrupt()
+                found.append((d, problem))
+                self._repair(d, problem)
+        self._cursor = (start + n) % len(dirs)
+        return found
+
+    # -- gc orphans: retry once, then quarantine --------------------------
+    def _drain_orphans(self) -> None:
+        for path, reason in self.catalog.gc_orphans():
+            try:
+                # same fault site as the original attempt, so tests can
+                # script the retry failing too
+                _fire_fault("catalog.gc", path)
+                if os.path.lexists(path):
+                    shutil.rmtree(path)
+                self.metrics.record_orphan(removed=True)
+            except OSError:
+                if self._quarantine(path, f"gc orphan ({reason})"):
+                    self.metrics.record_orphan(removed=False)
+
+    # -- corrupt dir: quarantine + re-fetch -------------------------------
+    def _repair(self, sdir: str, reason: str) -> bool:
+        """Quarantine a corrupt dir and swap in a verified replica copy.
+        Returns True when the repair landed; on False the dir was left
+        untouched (no replica / fetch failed verification) and is
+        recorded on ``self.corrupt``."""
+        staged = self.catalog.refetch_dir(sdir)
+        if staged is None:
+            self.corrupt.append((sdir, reason))
+            return False
+        try:
+            dest = quarantine_dest(_pool_of(sdir), _quarantine_name(sdir))
+            os.rename(sdir, dest)
+            os.rename(staged, sdir)
+        except OSError:
+            self.scrub_errors += 1
+            shutil.rmtree(staged, ignore_errors=True)
+            self.corrupt.append((sdir, reason))
+            return False
+        # readers holding mmaps of the corrupt files keep their (already
+        # wrong) bytes until they re-pin; everything resident stays
+        # exact because live epochs serve from staging images, not disk.
+        # Invalidate the cache so fresh pins read the repaired files.
+        self.catalog.invalidate_images(sdir)
+        self.catalog.note_quarantined(dest, reason)
+        self.metrics.record_quarantine()
+        self.metrics.record_repair()
+        return True
+
+    def _quarantine(self, path: str, reason: str) -> bool:
+        try:
+            dest = quarantine_dest(_pool_of(path), _quarantine_name(path))
+            os.rename(path, dest)
+        except OSError:
+            self.scrub_errors += 1
+            return False
+        self.catalog.note_quarantined(dest, reason)
+        self.metrics.record_quarantine()
+        return True
+
+    # -- lifecycle (the ChainCompactor mold) ------------------------------
+    def start(self) -> None:
+        if self._thread is not None:
+            return
+        self._stop.clear()
+
+        def _loop():
+            while not self._stop.wait(self.policy.interval_s):
+                try:
+                    self.scan_once()
+                except Exception:
+                    self.scrub_errors += 1
+
+        self._thread = threading.Thread(
+            target=_loop, name="epoch-scrubber", daemon=True)
+        self._thread.start()
+
+    def stop(self) -> None:
+        if self._thread is None:
+            return
+        self._stop.set()
+        self._thread.join()
+        self._thread = None

@@ -40,6 +40,8 @@ class EngineReport:
     n_shards: int = 1
     server_stats: Optional[Dict[str, float]] = None  # RequestServer.stats()
     duty_stats: Optional[Dict[str, float]] = None    # CopierDutyController state
+    catalog_stats: Optional[Dict[str, float]] = None  # SnapshotCatalog.occupancy()
+    maintenance_stats: Optional[Dict[str, float]] = None  # replicator/scrubber
 
     @staticmethod
     def _pct(x: np.ndarray, q: float) -> float:
@@ -89,6 +91,29 @@ class EngineReport:
             )),
             "aliased_dirs": float(sum(m.get("aliased_dirs", 0.0) for m in mets)),
             "shards": float(self.n_shards),
+            # catalog occupancy (prefixed: chain_depth_max above is the
+            # per-epoch write-path roll-up, this is the on-disk product)
+            "catalog_dirs": float((self.catalog_stats or {}).get("dirs", 0.0)),
+            "catalog_bytes": float((self.catalog_stats or {}).get("bytes", 0.0)),
+            "catalog_chain_max": float(
+                (self.catalog_stats or {}).get("chain_depth_max", 0.0)),
+            "catalog_chain_mean": float(
+                (self.catalog_stats or {}).get("chain_depth_mean", 0.0)),
+            "catalog_quarantined": float(
+                (self.catalog_stats or {}).get("quarantined", 0.0)),
+            # maintenance plane (replication lag / scrub coverage)
+            "replication_lag": float(
+                (self.maintenance_stats or {}).get("replication_lag", 0.0)),
+            "epochs_shipped": float(
+                (self.maintenance_stats or {}).get("epochs_shipped", 0.0)),
+            "bytes_shipped": float(
+                (self.maintenance_stats or {}).get("bytes_shipped", 0.0)),
+            "dirs_scrubbed": float(
+                (self.maintenance_stats or {}).get("dirs_scrubbed", 0.0)),
+            "corrupt_found": float(
+                (self.maintenance_stats or {}).get("corrupt_found", 0.0)),
+            "repaired_dirs": float(
+                (self.maintenance_stats or {}).get("repaired", 0.0)),
         }
 
 
@@ -201,6 +226,11 @@ class KVEngine:
             CopierDutyController(copier_duty)
             if self._auto_duty and self.coordinator is not None else None
         )
+        # maintenance plane (DESIGN.md §14): attach_maintenance wires a
+        # standby-pool shipper and/or background scrubber so their
+        # counters land in EngineReport and the catalog can re-fetch
+        self.replicator = None
+        self.scrubber = None
 
     @property
     def n_shards(self) -> int:
@@ -226,6 +256,36 @@ class KVEngine:
             raise ValueError("the snapshot catalog needs a ShardedKVStore "
                              "engine")
         return self.coordinator.catalog
+
+    def attach_maintenance(self, replicator=None, scrubber=None) -> None:
+        """Wire the maintenance plane: an
+        :class:`~repro.core.replicate.EpochReplicator` (also registered
+        as the catalog's re-fetch source) and/or an
+        :class:`~repro.core.scrub.EpochScrubber`. Their counters are
+        merged into :meth:`run`'s ``EngineReport``."""
+        if replicator is not None:
+            self.replicator = replicator
+            self.catalog.attach_replica(replicator)
+        if scrubber is not None:
+            self.scrubber = scrubber
+
+    def _maintenance_stats(self) -> Optional[Dict[str, float]]:
+        """Summed replicator+scrubber counters (they may share one
+        :class:`MaintenanceMetrics` or carry their own), plus the live
+        replication lag; None when nothing is attached."""
+        if self.replicator is None and self.scrubber is None:
+            return None
+        out: Dict[str, float] = {}
+        seen = []
+        for worker in (self.replicator, self.scrubber):
+            if worker is None or any(worker.metrics is m for m in seen):
+                continue
+            seen.append(worker.metrics)
+            for k, v in worker.metrics.summary().items():
+                out[k] = out.get(k, 0.0) + v
+        if self.replicator is not None:
+            out["replication_lag"] = float(self.replicator.lag())
+        return out
 
     def get_at(self, rows, epoch: Union[int, EpochRef]) -> np.ndarray:
         """Point-in-time read: gather ``rows`` as they were at ``epoch``.
@@ -521,4 +581,9 @@ class KVEngine:
                 }
                 if self.duty_controller is not None else None
             ),
+            catalog_stats=(
+                self.coordinator.catalog.occupancy()
+                if self.coordinator is not None else None
+            ),
+            maintenance_stats=self._maintenance_stats(),
         )

@@ -22,7 +22,12 @@ Site placement:
   mid-swap (leaving a ``.compact`` leftover for recovery to repair);
 * ``catalog.gc``: all epochs commit, then a ``drop_epoch`` dies before
   its ``rmtree`` — the drop is NOT durable, so recovery legitimately
-  resurrects the epoch (the parent expects ALL epochs back).
+  resurrects the epoch (the parent expects ALL epochs back);
+* replicate sites (``replicate.read``, ``replicate.write``,
+  ``replicate.commit``): all epochs commit, epochs ``0..N-2`` ship
+  cleanly to the standby pool (``SHIPPED <k>`` printed per epoch), then
+  the crash lands mid-ship of epoch ``N-1`` — the replica must recover
+  exactly the shipped prefix, the torn partial epoch quarantined.
 """
 import os
 import sys
@@ -42,6 +47,13 @@ WRITE_PLANE_SITES = (
     "persist.stage", "bgsave.commit",
 )
 POST_COMMIT_SITES = ("compactor.swap", "catalog.gc")
+REPLICATE_SITES = ("replicate.read", "replicate.write", "replicate.commit")
+
+
+def replica_dir(pool: str) -> str:
+    """The standby pool the replicate-site runs ship into (a sibling of
+    the primary pool, derived so parent and child agree on it)."""
+    return os.path.join(os.path.dirname(os.path.abspath(pool)), "replica")
 
 
 def build():
@@ -122,6 +134,17 @@ def run(pool: str, site: str, epochs: int = EPOCHS) -> None:
         inj.arm(site, mode="crash")
         cat.compact_dir(target)
         raise SystemExit("compact_dir survived an armed crash site")
+    if site in REPLICATE_SITES:
+        from repro.core.replicate import EpochReplicator
+
+        rep = EpochReplicator(replica_dir(pool), catalog=eng.catalog)
+        work = rep.pending()
+        for _, d in work[:-1]:
+            rep.ship_dir(d)
+            print(f"SHIPPED {os.path.basename(d)[2:]}", flush=True)
+        inj.arm(site, mode="crash")
+        rep.ship_dir(work[-1][1])
+        raise SystemExit(f"ship at {site} survived an armed crash site")
     if site in WRITE_PLANE_SITES:
         raise SystemExit(f"site {site} never fired")
     raise SystemExit(f"unknown site {site!r}")
